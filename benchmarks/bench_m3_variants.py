@@ -1,0 +1,76 @@
+"""M3 implementation shoot-out (paper §5 "we believe M3 can be optimized").
+
+Compares the four semantically-identical M3 implementations on the paper's
+population layout:
+
+  scatter   — paper-faithful broadcast-multiply + scatter-add (the GPU
+              formulation; materialises the (B,O,H) intermediate)
+  onehot    — dense einsum against a one-hot selector (P× redundant work)
+  bucketed  — per-bucket batched matmul (best XLA-native TPU form)
+  pallas    — segment-blocked matmul kernel (interpret mode on CPU)
+
+Reports CPU wall-clock (fwd+bwd) AND the lowered dot-flops / HBM-byte
+profile from the static HLO cost model — the structural numbers are what
+transfer to TPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Population, init_params
+from repro.core.activations import PAPER_TEN
+from repro.core.m3 import M3_IMPLS
+from repro.launch.hlo_cost import analyze
+
+
+def bench(pop, batch, impl, iters=5):
+    params = init_params(jax.random.PRNGKey(0), pop)
+    h = jax.random.normal(jax.random.PRNGKey(1), (batch, pop.total_hidden))
+    w2 = params["w2"]
+    fn = M3_IMPLS[impl]
+
+    if impl == "pallas":
+        def loss(hh, ww):
+            return (fn(hh, ww, pop) ** 2).sum()
+    else:
+        def loss(hh, ww):
+            return (fn(hh, ww, pop) ** 2).sum()
+
+    step = jax.jit(jax.grad(loss, argnums=(0, 1)))
+    out = step(h, w2)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = step(h, w2)
+    jax.block_until_ready(out)
+    wall = (time.perf_counter() - t0) / iters
+    stats = analyze(jax.jit(loss).lower(h, w2).compile().as_text())
+    return wall, stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--members", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--block", type=int, default=8)
+    ap.add_argument("--impls", nargs="+", default=sorted(M3_IMPLS))
+    args = ap.parse_args(argv)
+
+    hidden = range(1, args.members // 10 + 1)
+    pop = Population.grid(100, 2, hidden, PAPER_TEN, repeats=1,
+                          block=args.block)
+    print(f"# population: {pop.describe()}")
+    print("impl,wall_ms,dot_gflops,hbm_mb")
+    for impl in args.impls:
+        wall, stats = bench(pop, args.batch, impl)
+        print(f"{impl},{wall*1e3:.2f},{stats['flops']/1e9:.3f},"
+              f"{stats['hbm_bytes']/1e6:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Roofline aggregation: results/dryrun/*.json → the §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+        [--baseline results/dryrun_baseline] [--md results/roofline.md]
+
+Per (arch × shape × mesh): the three terms (compute/memory/collective, in
+seconds), the dominant term, MODEL_FLOPS (6·N_active·D train, 2·N_active·D
+inference), the useful-flops ratio, and the roofline fraction.  With
+--baseline, a before/after delta column tracks the §Perf iterations."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname):
+    out = {}
+    for f in glob.glob(os.path.join(dirname, "*.json")):
+        r = json.load(open(f))
+        if r.get("status") == "ok" or "roofline" in r:
+            out[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+        elif r.get("status") == "skipped":
+            out[(r["arch"], r["shape"], "skip")] = r
+    return out
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    peak_gib = r["memory"]["peak_bytes"] / 2 ** 30
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {r['dominant'].replace('_s','')} "
+            f"| {r['model_flops_total']:.2e} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {peak_gib:.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| bound | model_flops | useful | roofline | peak GiB |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--mesh", default="16x16",
+                    help="roofline table mesh (single-pod per assignment)")
+    args = ap.parse_args(argv)
+
+    cur = load(args.dir)
+    base = load(args.baseline) if args.baseline else {}
+    lines = [HEADER]
+    skips = []
+    for key in sorted(cur):
+        r = cur[key]
+        if key[2] == "skip":
+            skips.append(f"| {key[0]} | {key[1]} | — skipped: "
+                         f"{r.get('reason','')[:80]} |")
+            continue
+        if key[2] != args.mesh:
+            continue
+        row = fmt_row(r)
+        if key in base and "roofline" in base[key]:
+            b = base[key]
+            d = (r["roofline_fraction"] - b["roofline_fraction"])
+            row += f" Δroofline {d:+.3f} |"
+        lines.append(row)
+    text = "\n".join(lines)
+    if skips:
+        text += "\n\nSkipped cells:\n" + "\n".join(sorted(set(skips)))
+    print(text)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

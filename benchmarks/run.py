@@ -1,0 +1,57 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One harness per paper table/figure, at CI-friendly scale by default:
+  paper-tables   — Table 1/2 (fused vs sequential wall-clock, measured)
+  m3-variants    — §5 M3 implementation shoot-out
+  roofline       — §Roofline aggregation from the dry-run artifacts
+
+Pass ``--only <name>`` to run one; ``--paper-scale`` for the full grids.
+Every harness prints CSV/markdown rows; benchmarks never assert — they
+measure (tests live in tests/).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["paper-tables", "m3-variants", "roofline"])
+    ap.add_argument("--paper-scale", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    if args.only in (None, "paper-tables"):
+        print("=== bench: paper tables (fused vs sequential) ===")
+        from benchmarks import bench_paper_tables
+        if args.paper_scale:
+            bench_paper_tables.main(["--full"])
+        else:
+            bench_paper_tables.main([
+                "--models", "200", "--epochs", "3", "--seq-sample", "10",
+                "--samples", "100", "1000",
+                "--features", "10", "100",
+                "--batches", "32", "128"])
+    if args.only in (None, "m3-variants"):
+        print("\n=== bench: M3 variants ===")
+        from benchmarks import bench_m3_variants
+        bench_m3_variants.main(
+            [] if args.paper_scale else ["--members", "120", "--batch", "64"])
+    if args.only in (None, "roofline"):
+        print("\n=== bench: roofline table (from dry-run artifacts) ===")
+        from benchmarks import roofline
+        if os.path.isdir("results/dryrun"):
+            baseline = ("results/dryrun_baseline"
+                        if os.path.isdir("results/dryrun_baseline") else None)
+            roofline.main(["--dir", "results/dryrun"]
+                          + (["--baseline", baseline] if baseline else []))
+        else:
+            print("(no results/dryrun — run repro.launch.dryrun first)")
+    print(f"\n[benchmarks done in {time.time() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Fault-tolerance demo: train with injected chip failures + a straggler
+watchdog, then verify the restarted run matches an uninterrupted one.
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+
+What this shows (the 1000-node design, exercised on one host):
+  * async checkpoints every K steps (off the step path),
+  * ANY step failure → automatic restore of the last committed checkpoint
+    and bitwise replay (step-indexed data),
+  * straggler policy raising after N slow steps → same restart path,
+  * gradient compression for the cross-pod axis (int8 + error feedback).
+"""
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import TokenTask
+from repro.distributed import StragglerPolicy, TrainRunner
+from repro.distributed.compression import quantize_int8
+from repro.launch.cells import build_optimizer
+from repro.models import lm
+from repro.optim import constant_lr
+
+
+def main():
+    arch = get_arch("qwen3-1.7b", reduced=True)
+    cfg = arch.model
+    task = TokenTask(vocab=cfg.vocab, seed=0)
+    opt = build_optimizer(arch)
+    jit_step = jax.jit(lm.make_train_step(cfg, opt, constant_lr(1e-3)))
+
+    def fresh_state():
+        params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+        return {"params": params, "opt": opt.init(params)}
+
+    def step_fn(state, s):
+        batch = jax.tree.map(jnp.asarray, task.batch(s, 4, 64))
+        p, o, m = jit_step(state["params"], state["opt"], batch,
+                           jnp.asarray(s, jnp.int32))
+        return {"params": p, "opt": o}, {"loss": float(m["loss"])}
+
+    for d in ("/tmp/ft_ref", "/tmp/ft_demo"):
+        shutil.rmtree(d, ignore_errors=True)
+
+    print("reference run (no failures), 40 steps…")
+    ref = TrainRunner(step_fn, fresh_state(), ckpt_dir="/tmp/ft_ref",
+                      ckpt_every=10)
+    ref.run(40)
+
+    print("failure run: chips die at steps 17 and 33…")
+    boom = {17: True, 33: True}
+
+    def failure(s):
+        if boom.pop(s, False):
+            raise RuntimeError(f"simulated ICI link failure @ step {s}")
+
+    runner = TrainRunner(
+        step_fn, fresh_state(), ckpt_dir="/tmp/ft_demo", ckpt_every=10,
+        failure_hook=failure,
+        straggler=StragglerPolicy(timeout_s=120.0, max_strikes=3))
+    t0 = time.time()
+    runner.run(40)
+    print(f"  finished with {runner.restarts} restarts "
+          f"in {time.time()-t0:.1f}s")
+
+    ref_loss = dict((s, m["loss"]) for s, m in ref.metrics_log)[39]
+    ft_loss = dict((s, m["loss"]) for s, m in runner.metrics_log)[39]
+    print(f"  final loss  ref={ref_loss:.6f}  restarted={ft_loss:.6f}  "
+          f"(identical: {abs(ref_loss - ft_loss) < 1e-6})")
+
+    print("\nint8 gradient compression (cross-pod DCI all-reduce):")
+    g = jnp.asarray(np.random.default_rng(0).normal(0, 0.02, (4096,)),
+                    jnp.float32)
+    err = jnp.zeros_like(g)
+    q, scale, err = quantize_int8(g, err)
+    rec = q.astype(jnp.float32) * scale
+    rel = float(jnp.linalg.norm(rec - g) / jnp.linalg.norm(g))
+    print(f"  wire bytes: {q.nbytes + 4} vs f32 {g.nbytes} "
+          f"(4.0x less); rel err {rel:.4f} "
+          f"(error feedback carries the residual forward)")
+
+
+if __name__ == "__main__":
+    main()

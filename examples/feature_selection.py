@@ -1,0 +1,56 @@
+"""Feature selection with ParallelMLPs — the paper's §7 future work, live.
+
+    PYTHONPATH=src python examples/feature_selection.py
+
+Builds a task where only 3 of 16 features carry signal, trains a fused
+population of identical MLPs under random per-member feature masks
+(projected SGD keeps masked features provably inert), then reads feature
+importance out of the population by loss-gap attribution.  One training
+run answers "which features matter AND which architecture works" —
+the search the paper's speedup makes affordable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Population, init_params
+from repro.core.feature_selection import (apply_masks, feature_importance,
+                                          masked_sgd_step, random_masks)
+from repro.core.parallel_mlp import forward, member_losses
+
+
+def main():
+    rng = np.random.default_rng(0)
+    F, N, signal = 16, 4096, (2, 7, 11)
+    x = rng.normal(0, 1, (N, F)).astype(np.float32)
+    logit = x[:, signal[0]] + 0.8 * x[:, signal[1]] - 1.2 * x[:, signal[2]]
+    y = (logit > 0).astype(np.int32)
+    print(f"task: {F} features, signal carried by {signal}")
+
+    P = 64
+    pop = Population(F, 2, tuple([8] * P), ("relu",) * P, block=8)
+    masks = random_masks(jax.random.PRNGKey(1), P, F, keep_prob=0.5,
+                         always_full=4)
+    params = init_params(jax.random.PRNGKey(0), pop)
+    xb, yb = jnp.asarray(x), jnp.asarray(y)
+    for step in range(150):
+        i = (step * 256) % (N - 256)
+        params, loss, per = masked_sgd_step(
+            params, xb[i:i + 256], yb[i:i + 256], 0.2, pop, masks)
+        if step % 50 == 0:
+            print(f"step {step:3d}  mean loss {float(loss)/P:.4f}")
+
+    logits = forward(apply_masks(params, pop, masks), xb, pop)
+    per = member_losses(logits, yb, "classification")
+    imp = feature_importance(pop, masks, per)
+    order = np.argsort(imp)[::-1]
+    print("\nfeature importance (loss-gap attribution):")
+    for f in order[:6]:
+        tag = " <-- signal" if f in signal else ""
+        print(f"  feature {f:2d}: {imp[f]:+.4f}{tag}")
+    found = set(order[:3].tolist())
+    print(f"\ntop-3 = {sorted(found)}  (true signal = {sorted(signal)}; "
+          f"recovered {len(found & set(signal))}/3)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Atomic sharded checkpointing with async commit + elastic restore."""
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_steps,
+                                         restore, save)
+
+__all__ = ["AsyncCheckpointer", "latest_steps", "restore", "save"]

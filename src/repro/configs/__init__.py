@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+10 assigned architectures + the paper's own population experiment."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ALL_SHAPES, SHAPE_GRID, ArchSpec, ShapeSpec, shape
+
+_MODULES = {
+    "mamba2-780m": "mamba2_780m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "command-r-35b": "command_r_35b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "whisper-small": "whisper_small",
+    "hymba-1.5b": "hymba_1_5b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "parallelmlp-10k": "parallelmlp_10k",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "parallelmlp-10k")
+ALL_ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_arch(arch_id: str, reduced: bool = False) -> ArchSpec:
+    mod = _module(arch_id)
+    return mod.reduced() if reduced else mod.config()
+
+
+__all__ = ["ALL_SHAPES", "SHAPE_GRID", "ArchSpec", "ShapeSpec", "shape",
+           "ARCH_IDS", "ALL_ARCH_IDS", "get_arch"]

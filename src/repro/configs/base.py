@@ -1,0 +1,68 @@
+"""Config system: shape grid, ArchSpec contract, and the registry helpers.
+
+Every assigned architecture ships as ``src/repro/configs/<id>.py`` exposing
+
+    def config()  -> ArchSpec   # the EXACT assigned configuration
+    def reduced() -> ArchSpec   # same family, laptop-scale (smoke tests)
+
+Full configs are only ever touched through ``abstract_params`` +
+``jax.eval_shape`` (the dry-run path); only reduced configs allocate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+SHAPE_GRID = {
+    # name: (kind, seq_len, global_batch)
+    "train_4k":    ("train",   4_096,   256),
+    "prefill_32k": ("prefill", 32_768,  32),
+    "decode_32k":  ("decode",  32_768,  128),
+    "long_500k":   ("decode",  524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+def shape(name: str) -> ShapeSpec:
+    kind, s, b = SHAPE_GRID[name]
+    return ShapeSpec(name, kind, s, b)
+
+
+ALL_SHAPES = tuple(shape(n) for n in SHAPE_GRID)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """One selectable ``--arch``: model config + training/serving policy."""
+    arch_id: str
+    kind: str                      # lm | encdec | population
+    model: object                  # LMConfig | EncDecConfig | Population
+    optimizer: str = "adamw"
+    optimizer_kw: tuple = ()       # (key, value) pairs (hashability)
+    lr: float = 3e-4
+    grad_accum_dtype: str = "float32"   # 'bfloat16' halves accumulators
+    # per-shape gradient-accumulation counts (activation-memory policy)
+    num_micro: tuple = ()          # ((shape_name, n), ...)
+    skip_shapes: tuple = ()        # assigned shapes this arch cannot run
+    skip_reason: str = ""
+    source: str = ""               # [arXiv/hf ref; verification tier]
+    notes: str = ""
+
+    def micro_for(self, shape_name: str) -> int:
+        return dict(self.num_micro).get(shape_name, 1)
+
+    def runs(self, shape_name: str) -> bool:
+        return shape_name not in self.skip_shapes
+
+    def optimizer_kwargs(self) -> dict:
+        return dict(self.optimizer_kw)
+
+    def cells(self):
+        return [s for s in ALL_SHAPES if self.runs(s.name)]

@@ -1,0 +1,46 @@
+"""whisper-small [audio] — 12L enc + 12L dec, d_model=768 12H d_ff=3072.
+
+arXiv:2212.04356.  Encoder-decoder; the conv frontend is a STUB per the
+assignment (input_specs provides precomputed frame embeddings).  MHA
+(kv=12), LayerNorm, biases, GELU FFN, vocab 51865, tied decoder readout.
+
+Shape notes (DESIGN.md §shape-skips): decode_32k runs with a 32k learned
+position table + 32k self-KV — beyond whisper's natural 448 targets, dry-run
+only.  long_500k is skipped (dense cross+self attention, no sub-quadratic
+path; 512k decoder positions are architecturally meaningless here)."""
+from repro.configs.base import ArchSpec
+from repro.models.encdec import EncDecConfig
+from repro.nn.attention import AttnConfig
+from repro.nn.ffn import FFNConfig
+
+
+def config() -> ArchSpec:
+    model = EncDecConfig(
+        name="whisper-small", vocab=51_865, d_model=768,
+        n_enc_layers=12, n_dec_layers=12,
+        attn=AttnConfig(d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+                        bias=True, rope_kind="none"),
+        ffn=FFNConfig(768, 3072, act="gelu", gated=False, bias=True),
+        max_target=32_768)
+    return ArchSpec(
+        arch_id="whisper-small", kind="encdec", model=model,
+        optimizer="adamw", lr=1e-3,
+        skip_shapes=("long_500k",),
+        skip_reason="enc-dec with dense self+cross attention; 512k decoder "
+                    "positions have no sub-quadratic lowering and exceed the "
+                    "architecture's design range (natural max 448)",
+        source="[arXiv:2212.04356; unverified]",
+        notes="frame-embedding frontend stub; train/prefill seq_len applies "
+              "to encoder frames AND decoder tokens.")
+
+
+def reduced() -> ArchSpec:
+    model = EncDecConfig(
+        name="whisper-reduced", vocab=311, d_model=64,
+        n_enc_layers=2, n_dec_layers=2,
+        attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+                        bias=True, rope_kind="none"),
+        ffn=FFNConfig(64, 128, act="gelu", gated=False, bias=True),
+        max_target=64, param_dtype="float32")
+    return ArchSpec(arch_id="whisper-small", kind="encdec", model=model,
+                    optimizer="adamw", lr=1e-3)

@@ -1,0 +1,203 @@
+"""Deep ParallelMLPs — the paper's §7/Figure 3 future work, implemented.
+
+The paper trains populations with ONE hidden layer because only the first
+projection (input→hidden) is trivially fusable: every later projection must
+not reduce across members.  Figure 3 sketches the fix; this module builds
+it:
+
+  * layer 0:            ordinary fused matmul  (H1_tot × F)       — as paper
+  * layers 1..L-1:      BLOCK-DIAGONAL segment matmul: member m's units in
+                        layer l+1 contract ONLY member m's units in layer l.
+                        With members sorted into runs of equal padded widths
+                        this is a per-bucket batched einsum
+                        (B, n, h_in) × (n, h_out, h_in) → (B, n, h_out) —
+                        dense MXU work, no scatter, gradients independent by
+                        construction (same argument as M3; the Pallas analogue
+                        is kernels/moe_gemm with member-id = "expert"-id).
+  * output layer:       the paper's M3 (repro.core.m3).
+
+Independence is asserted against standalone two-hidden-layer training in
+tests/test_deep.py — the paper's §7 conjecture, verified.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import ACTIVATIONS
+from repro.core.m3 import m3 as _m3_apply
+from repro.core.population import Population
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepPopulation:
+    """P members, member m having hidden widths ``widths[m]`` (one entry per
+    hidden layer; all members share the same DEPTH) and one activation."""
+
+    in_features: int
+    out_features: int
+    widths: tuple          # tuple[tuple[int, ...]] — per member, per layer
+    activations: tuple     # per member
+    block: int = 8
+
+    def __post_init__(self):
+        depths = {len(w) for w in self.widths}
+        if len(depths) != 1:
+            raise ValueError(f"all members need the same depth, got {depths}")
+        object.__setattr__(self, "widths", tuple(tuple(w) for w in self.widths))
+
+    @property
+    def num_members(self) -> int:
+        return len(self.widths)
+
+    @property
+    def depth(self) -> int:
+        return len(self.widths[0])
+
+    @dataclasses.dataclass(frozen=True)
+    class _Key:
+        pass
+
+    def layer_pop(self, l: int) -> Population:
+        """The fused layout of hidden layer l (member order preserved)."""
+        return Population(self.in_features, self.out_features,
+                          tuple(w[l] for w in self.widths),
+                          self.activations, block=self.block)
+
+    def buckets(self, l: int):
+        """Contiguous runs of members with identical padded (in, out) widths
+        for the l→l+1 block-diagonal projection.  Static python data."""
+        pin, pout = self.layer_pop(l), self.layer_pop(l + 1)
+        runs = []
+        m = 0
+        while m < self.num_members:
+            n = 1
+            key = (pin.padded_sizes[m], pout.padded_sizes[m])
+            while m + n < self.num_members and \
+                    (pin.padded_sizes[m + n], pout.padded_sizes[m + n]) == key:
+                n += 1
+            runs.append((m, n, int(key[0]), int(key[1]),
+                         int(pin.offsets[m]), int(pout.offsets[m])))
+            m += n
+        return runs
+
+
+def init_params(key, dp: DeepPopulation, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, dp.depth + 2)
+    p0 = dp.layer_pop(0)
+    bound = 1.0 / np.sqrt(dp.in_features)
+    params = {
+        "w_in": jax.random.uniform(keys[0], (p0.total_hidden, dp.in_features),
+                                   dtype, -bound, bound),
+        "b_in": jax.random.uniform(keys[0], (p0.total_hidden,), dtype,
+                                   -bound, bound),
+        "mid": [],
+    }
+    for l in range(dp.depth - 1):
+        pin, pout = dp.layer_pop(l), dp.layer_pop(l + 1)
+        wl = []
+        fan_in = np.repeat(np.array([w[l] for w in dp.widths], np.float32),
+                           pout.padded_sizes)
+        kl = jax.random.split(keys[1 + l], len(dp.buckets(l)))
+        for bi, (m0, n, hin, hout, off_in, off_out) in enumerate(dp.buckets(l)):
+            b = 1.0 / np.sqrt(max(min(w[l] for w in dp.widths[m0:m0 + n]), 1))
+            wl.append(jax.random.uniform(kl[bi], (n, hout, hin), dtype, -1, 1)
+                      * jnp.asarray(
+                          1.0 / np.sqrt(np.maximum(
+                              [w[l] for w in dp.widths[m0:m0 + n]], 1)),
+                          dtype)[:, None, None])
+        pl = dp.layer_pop(l + 1)
+        params["mid"].append({
+            "w": wl,
+            "b": jax.random.uniform(keys[1 + l], (pl.total_hidden,), dtype,
+                                    -1, 1) * jnp.asarray(
+                1.0 / np.sqrt(fan_in), dtype)})
+    plast = dp.layer_pop(dp.depth - 1)
+    fan_last = np.repeat(np.array([w[-1] for w in dp.widths], np.float32),
+                         plast.padded_sizes)
+    params["w_out"] = (jax.random.uniform(
+        keys[-1], (dp.out_features, plast.total_hidden), dtype, -1, 1)
+        * jnp.asarray(1.0 / np.sqrt(fan_last), dtype)[None, :])
+    params["b_out"] = (jax.random.uniform(
+        keys[-1], (dp.num_members, dp.out_features), dtype, -1, 1)
+        * jnp.asarray(1.0 / np.sqrt(
+            np.array([w[-1] for w in dp.widths], np.float32)), dtype)[:, None])
+    return params
+
+
+def block_diag_matmul(h, w_buckets, dp: DeepPopulation, l: int):
+    """h (B, H_l_tot) → (B, H_{l+1}_tot): member-block-diagonal projection."""
+    b = h.shape[0]
+    outs = []
+    for (m0, n, hin, hout, off_in, off_out), w in zip(dp.buckets(l),
+                                                      w_buckets):
+        hh = h[:, off_in: off_in + n * hin].reshape(b, n, hin)
+        outs.append(jnp.einsum("bnh,noh->bno", hh, w).reshape(b, n * hout))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+
+def _act(dp: DeepPopulation, pop: Population, h):
+    from repro.core.activations import apply_activations_sliced
+    h = apply_activations_sliced(h, pop.act_runs)
+    return h * jnp.asarray(pop.hidden_mask, h.dtype)
+
+
+def forward(params, x, dp: DeepPopulation, m3_impl: str = "bucketed"):
+    """x (B, F) → logits (B, P, O) — every member an independent deep MLP."""
+    h = _act(dp, dp.layer_pop(0), x @ params["w_in"].T + params["b_in"])
+    for l in range(dp.depth - 1):
+        h = block_diag_matmul(h, params["mid"][l]["w"], dp, l)
+        h = _act(dp, dp.layer_pop(l + 1), h + params["mid"][l]["b"])
+    y = _m3_apply(h, params["w_out"], dp.layer_pop(dp.depth - 1), impl=m3_impl)
+    return y + params["b_out"][None]
+
+
+def fused_loss(params, x, targets, dp: DeepPopulation):
+    logits = forward(params, x, dp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(
+        logp, targets[:, None, None].astype(jnp.int32), axis=-1)[..., 0]
+    per = nll.mean(axis=0)
+    return per.sum(), per
+
+
+@partial(jax.jit, static_argnames=("dp",))
+def sgd_step(params, x, targets, lr, dp: DeepPopulation):
+    (loss, per), grads = jax.value_and_grad(fused_loss, has_aux=True)(
+        params, x, targets, dp)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new, loss, per
+
+
+def extract_member(params, dp: DeepPopulation, m: int) -> dict:
+    """Standalone deep MLP of member m (REAL units only)."""
+    p0 = dp.layer_pop(0)
+    sl = p0.member_slice(m)
+    out = {"w_in": params["w_in"][sl], "b_in": params["b_in"][sl],
+           "mid": [], "activation": dp.activations[m]}
+    for l in range(dp.depth - 1):
+        pin, pout = dp.layer_pop(l), dp.layer_pop(l + 1)
+        for (m0, n, hin, hout, off_in, off_out), w in zip(dp.buckets(l),
+                                                          params["mid"][l]["w"]):
+            if m0 <= m < m0 + n:
+                wm = w[m - m0][: dp.widths[m][l + 1], : dp.widths[m][l]]
+                break
+        bm = params["mid"][l]["b"][pout.member_slice(m)]
+        out["mid"].append({"w": wm, "b": bm})
+    plast = dp.layer_pop(dp.depth - 1)
+    out["w_out"] = params["w_out"][:, plast.member_slice(m)]
+    out["b_out"] = params["b_out"][m]
+    return out
+
+
+def member_forward(member: dict, x):
+    act = ACTIVATIONS[member["activation"]]
+    h = act(x @ member["w_in"].T + member["b_in"])
+    for lay in member["mid"]:
+        h = act(h @ lay["w"].T + lay["b"])
+    return h @ member["w_out"].T + member["b_out"]

@@ -1,0 +1,70 @@
+"""Feature selection with ParallelMLPs — the paper's §7 future work:
+
+  "perform feature selection using ParallelMLPs by repeating the MLP
+   architecture and creating a mask tensor to be applied to the inputs
+   before the first input to hidden projection"
+
+Masking the INPUT per member is equivalent to masking the ROWS of each
+member's w1 slice — so the fused network stays ONE matmul: we multiply
+``w1`` by a per-unit feature mask (H_tot × F) built from per-member masks
+(P × F).  Gradients through masked weights are killed by re-masking after
+each update (projected SGD), so a member literally cannot use its masked
+features.  Model selection over (architecture × feature subset) then reads
+feature importance out of the trained population for free — the paper's
+speedup is what makes this search affordable."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.parallel_mlp import fused_loss
+from repro.core.population import Population
+
+
+def random_masks(key, num_members: int, n_features: int,
+                 keep_prob: float = 0.7, always_full: int = 0):
+    """(P, F) float mask; the first ``always_full`` members keep everything
+    (baseline members for comparison)."""
+    m = (jax.random.uniform(key, (num_members, n_features))
+         < keep_prob).astype(jnp.float32)
+    # never mask EVERYTHING: force at least one feature on
+    fix = jnp.zeros((num_members, n_features)
+                    ).at[:, 0].set(1.0)
+    m = jnp.maximum(m, jnp.where(m.sum(-1, keepdims=True) == 0, fix, 0.0))
+    if always_full:
+        m = m.at[:always_full].set(1.0)
+    return m
+
+
+def unit_masks(pop: Population, member_masks) -> jax.Array:
+    """(P, F) member masks → (H_tot, F) per-hidden-unit w1 row masks."""
+    return jnp.asarray(member_masks)[jnp.asarray(pop.segment_ids)]
+
+
+def apply_masks(params: dict, pop: Population, member_masks) -> dict:
+    um = unit_masks(pop, member_masks)
+    return dict(params, w1=params["w1"] * um.astype(params["w1"].dtype))
+
+
+def masked_sgd_step(params, x, targets, lr, pop: Population, member_masks,
+                    task: str = "classification"):
+    """Projected SGD: mask → step → re-mask.  Members remain independent AND
+    feature-restricted."""
+    params = apply_masks(params, pop, member_masks)
+    (loss, per), grads = jax.value_and_grad(fused_loss, has_aux=True)(
+        params, x, targets, pop, task)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return apply_masks(new, pop, member_masks), loss, per
+
+
+def feature_importance(pop: Population, member_masks, losses,
+                       baseline: float | None = None):
+    """Mean-loss-gap attribution: for each feature f, how much better are
+    members that SEE f than members that don't.  (F,) — higher = more
+    important."""
+    m = np.asarray(member_masks)                     # (P, F)
+    l = np.asarray(losses)                           # (P,)
+    with_f = (m * l[:, None]).sum(0) / np.maximum(m.sum(0), 1)
+    without_f = ((1 - m) * l[:, None]).sum(0) / np.maximum((1 - m).sum(0), 1)
+    return without_f - with_f

@@ -1,0 +1,205 @@
+"""Population descriptor: a heterogeneous collection of independent MLPs fused
+into a single tensor layout (the paper's ParallelMLPs).
+
+A population of P members, member ``m`` having ``hidden_sizes[m]`` hidden units
+and activation ``activations[m]``, is laid out as one fused hidden axis of
+``total_hidden`` units.  Every member's slice is padded up to a multiple of
+``block`` so that, on TPU, each 128-lane tile belongs to exactly one member —
+this is what turns the paper's scatter-add into a segment-blocked matmul
+(DESIGN.md §2).  Padded units are masked to zero after activation, so they
+receive zero gradient and the fused network is mathematically identical to the
+P independent networks.
+
+All layout quantities are static Python data (computed at trace time), so jit
+sees them as compile-time constants; only the parameter/activation tensors are
+traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.activations import ACTIVATION_NAMES
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """Static description of a fused population of independent MLPs.
+
+    Members are stored in the order given; callers that want efficient sliced
+    activation application should construct with ``sort_members=True`` (groups
+    members by activation so each activation is applied to one contiguous
+    slice).
+    """
+
+    in_features: int
+    out_features: int
+    hidden_sizes: tuple
+    activations: tuple  # activation *names*, one per member
+    block: int = 1      # hidden-slice alignment (128 for TPU kernels)
+
+    def __post_init__(self):
+        if len(self.hidden_sizes) != len(self.activations):
+            raise ValueError(
+                f"hidden_sizes ({len(self.hidden_sizes)}) and activations "
+                f"({len(self.activations)}) must have the same length")
+        for a in self.activations:
+            if a not in ACTIVATION_NAMES:
+                raise ValueError(f"unknown activation {a!r}; "
+                                 f"known: {sorted(ACTIVATION_NAMES)}")
+        for h in self.hidden_sizes:
+            if h < 1:
+                raise ValueError(f"hidden size must be >= 1, got {h}")
+        if self.block < 1:
+            raise ValueError("block must be >= 1")
+        # normalise to tuples (allows list inputs)
+        object.__setattr__(self, "hidden_sizes", tuple(int(h) for h in self.hidden_sizes))
+        object.__setattr__(self, "activations", tuple(self.activations))
+
+    # ------------------------------------------------------------------ #
+    # constructors                                                       #
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def grid(in_features: int, out_features: int,
+             hidden_range: Sequence[int], activations: Sequence[str],
+             repeats: int = 1, block: int = 1,
+             sort_members: bool = True, sort_by: str = "act") -> "Population":
+        """The paper's experimental design: every (hidden size × activation)
+        pair, repeated ``repeats`` times.  hidden 1..100 × 10 activations ×
+        10 repeats = the paper's 10,000 models."""
+        sizes, acts = [], []
+        for a in activations:
+            for h in hidden_range:
+                for _ in range(repeats):
+                    sizes.append(h)
+                    acts.append(a)
+        pop = Population(in_features, out_features, tuple(sizes), tuple(acts),
+                         block=block)
+        return pop.sorted(sort_by) if sort_members else pop
+
+    def sorted(self, by: str = "act") -> "Population":
+        """Reorder members so fused ops touch contiguous slices.
+
+        by="act"  — (activation, size): one activation run per function
+                    (best when activation dispatch dominates; default).
+        by="size" — (padded size, activation): one M3 bucket per size CLASS,
+                    merging buckets across activations — at block=8 the
+                    paper grid collapses 130 bucket einsums to 13 while
+                    keeping tight padding (§Perf hillclimb, paper cell)."""
+        if by == "act":
+            key = lambda m: (self.activations[m], self.hidden_sizes[m])
+        elif by == "size":
+            key = lambda m: (_round_up(self.hidden_sizes[m], self.block),
+                             self.activations[m], self.hidden_sizes[m])
+        else:
+            raise ValueError(by)
+        order = sorted(range(self.num_members), key=key)
+        return dataclasses.replace(
+            self,
+            hidden_sizes=tuple(self.hidden_sizes[m] for m in order),
+            activations=tuple(self.activations[m] for m in order),
+        )
+
+    # ------------------------------------------------------------------ #
+    # layout (all static numpy, computed once)                           #
+    # ------------------------------------------------------------------ #
+    @property
+    def num_members(self) -> int:
+        return len(self.hidden_sizes)
+
+    @cached_property
+    def padded_sizes(self) -> np.ndarray:
+        """Per-member hidden size rounded up to ``block``. shape (P,)."""
+        return np.array([_round_up(h, self.block) for h in self.hidden_sizes],
+                        dtype=np.int32)
+
+    @cached_property
+    def offsets(self) -> np.ndarray:
+        """Start offset of member m's slice in the fused hidden axis. (P+1,)."""
+        return np.concatenate([[0], np.cumsum(self.padded_sizes)]).astype(np.int32)
+
+    @property
+    def total_hidden(self) -> int:
+        return int(self.offsets[-1])
+
+    @cached_property
+    def segment_ids(self) -> np.ndarray:
+        """Member id for every fused hidden unit. shape (total_hidden,)."""
+        return np.repeat(np.arange(self.num_members, dtype=np.int32),
+                         self.padded_sizes)
+
+    @cached_property
+    def hidden_mask(self) -> np.ndarray:
+        """1.0 for real hidden units, 0.0 for alignment padding. (total_hidden,)."""
+        mask = np.zeros(self.total_hidden, dtype=np.float32)
+        for m in range(self.num_members):
+            mask[self.offsets[m]: self.offsets[m] + self.hidden_sizes[m]] = 1.0
+        return mask
+
+    @cached_property
+    def act_ids(self) -> np.ndarray:
+        """Activation id (index into ACTIVATION_NAMES order used by
+        activations.apply_*) for every fused hidden unit. (total_hidden,)."""
+        names = sorted(ACTIVATION_NAMES)
+        lut = {n: i for i, n in enumerate(names)}
+        per_member = np.array([lut[a] for a in self.activations], dtype=np.int32)
+        return np.repeat(per_member, self.padded_sizes)
+
+    @cached_property
+    def act_runs(self):
+        """Contiguous runs of identical activation: list of
+        (act_name, start, stop) covering [0, total_hidden).  One run per
+        activation if the population is sorted."""
+        runs = []
+        seg_acts = [self.activations[m] for m in range(self.num_members)]
+        start = 0
+        m = 0
+        while m < self.num_members:
+            a = seg_acts[m]
+            stop_m = m
+            while stop_m + 1 < self.num_members and seg_acts[stop_m + 1] == a:
+                stop_m += 1
+            stop = int(self.offsets[stop_m + 1])
+            runs.append((a, start, stop))
+            start = stop
+            m = stop_m + 1
+        return runs
+
+    @cached_property
+    def member_fan_in(self) -> np.ndarray:
+        """Fan-in of the output layer per fused hidden unit (= its member's
+        true hidden size); used for per-member init scaling. (total_hidden,)."""
+        return np.repeat(np.array(self.hidden_sizes, dtype=np.float32),
+                         self.padded_sizes)
+
+    @cached_property
+    def block_segment_ids(self) -> np.ndarray:
+        """Member id per hidden *block* (total_hidden // block,).  Well defined
+        because every member slice is block-aligned; this is the scalar-prefetch
+        input of the Pallas segment-blocked matmul."""
+        assert self.total_hidden % self.block == 0
+        return self.segment_ids[:: self.block].copy()
+
+    @cached_property
+    def block_act_ids(self) -> np.ndarray:
+        """Activation id per hidden block (scalar prefetch for seg_act)."""
+        assert self.total_hidden % self.block == 0
+        return self.act_ids[:: self.block].copy()
+
+    def member_slice(self, m: int) -> slice:
+        """Slice of member m's REAL units (excludes padding)."""
+        return slice(int(self.offsets[m]), int(self.offsets[m]) + self.hidden_sizes[m])
+
+    def describe(self) -> str:
+        import collections
+        by_act = collections.Counter(self.activations)
+        return (f"Population(P={self.num_members}, total_hidden={self.total_hidden}, "
+                f"block={self.block}, in={self.in_features}, out={self.out_features}, "
+                f"acts={dict(by_act)})")

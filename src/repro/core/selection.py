@@ -1,0 +1,51 @@
+"""Model selection over a trained population (paper §5: "perform model
+selection in the large pool of trained MLPs")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallel_mlp import extract_member, forward, member_accuracy, member_losses
+from repro.core.population import Population
+
+
+def evaluate_population(params, pop: Population, x, targets,
+                        task: str = "classification", batch_size: int = 4096,
+                        **fw):
+    """Per-member metric over a full eval split (batched to bound memory).
+
+    Returns (losses (P,), accuracies (P,) or None)."""
+    n = x.shape[0]
+    loss_sum = jnp.zeros(pop.num_members)
+    acc_sum = jnp.zeros(pop.num_members)
+    seen = 0
+    for i in range(0, n, batch_size):
+        xb, tb = x[i:i + batch_size], targets[i:i + batch_size]
+        logits = forward(params, xb, pop, **fw)
+        loss_sum = loss_sum + member_losses(logits, tb, task) * xb.shape[0]
+        if task == "classification":
+            acc_sum = acc_sum + member_accuracy(logits, tb) * xb.shape[0]
+        seen += xb.shape[0]
+    losses = loss_sum / seen
+    accs = acc_sum / seen if task == "classification" else None
+    return losses, accs
+
+
+def select_best(params, pop: Population, losses) -> tuple[int, dict]:
+    """Best member by eval loss → (index, standalone params)."""
+    m = int(jnp.argmin(losses))
+    return m, extract_member(params, pop, m)
+
+
+def leaderboard(pop: Population, losses, accs=None, k: int = 10):
+    """Top-k members as (rank, member, hidden, activation, loss[, acc])."""
+    import numpy as np
+    order = np.argsort(np.asarray(losses))[:k]
+    rows = []
+    for r, m in enumerate(order):
+        row = dict(rank=r + 1, member=int(m), hidden=pop.hidden_sizes[m],
+                   activation=pop.activations[m], loss=float(losses[m]))
+        if accs is not None:
+            row["acc"] = float(accs[m])
+        rows.append(row)
+    return rows

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipelines (restart-safe, step-indexed)."""
+from repro.data.synthetic import TabularTask, TokenTask, lm_batch
+
+__all__ = ["TabularTask", "TokenTask", "lm_batch"]

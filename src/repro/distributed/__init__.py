@@ -1,0 +1,18 @@
+"""Distribution layer: sharding vocabulary, gradient compression,
+fault tolerance / elastic re-mesh."""
+from repro.distributed.compression import (compressed_psum,
+                                           compressed_psum_tree,
+                                           init_error_feedback,
+                                           quantize_int8)
+from repro.distributed.fault_tolerance import (StragglerPolicy, TrainRunner,
+                                               elastic_remesh)
+from repro.distributed.sharding import (ACT_RESIDUAL, BATCH_AXES, constrain,
+                                        filter_spec, logical_to_sharding,
+                                        mesh_axis_sizes, stack_spec)
+
+__all__ = [
+    "compressed_psum", "compressed_psum_tree", "init_error_feedback",
+    "quantize_int8", "StragglerPolicy", "TrainRunner", "elastic_remesh",
+    "ACT_RESIDUAL", "BATCH_AXES", "constrain", "filter_spec",
+    "logical_to_sharding", "mesh_axis_sizes", "stack_spec",
+]

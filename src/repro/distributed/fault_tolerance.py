@@ -1,0 +1,132 @@
+"""Fault tolerance: checkpoint/restart loop, straggler watchdog, elastic
+re-mesh.
+
+At 1000+ nodes the mean time between chip/host failures drops below job
+length; the framework therefore treats the train loop as a RESUMABLE pure
+function of (checkpoint, step, data(step)):
+
+  * ``TrainRunner`` — drives steps, checkpoints asynchronously every K
+    steps, and on ANY exception restores the last committed checkpoint and
+    replays (data is step-indexed → bitwise-identical replay).  Failure
+    injection hooks make this testable on one host
+    (tests/test_fault_tolerance.py).
+  * ``StragglerPolicy`` — wall-clock per-step watchdog.  On a real pod the
+    reaction is implemented by the control plane (preempt + re-slice); in
+    this single-process framework the policy records the event, optionally
+    triggers an elastic re-mesh, and raises after ``max_strikes``
+    consecutive slow steps so the runner's restart path takes over.
+  * ``elastic_remesh`` — rebuild a mesh from the CURRENTLY live device set
+    (after losing a pod or scaling in new ones) and re-shard a state tree
+    onto it.  Works because checkpoints store full host arrays and the
+    spec trees are mesh-shape-agnostic (sharding.filter_spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_steps, restore
+from repro.distributed.sharding import logical_to_sharding
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    timeout_s: float = 60.0
+    max_strikes: int = 3
+    on_straggler: Optional[Callable[[int, float], None]] = None
+    strikes: int = 0
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float):
+        if dt <= self.timeout_s:
+            self.strikes = 0
+            return
+        self.strikes += 1
+        self.events.append((step, dt))
+        if self.on_straggler:
+            self.on_straggler(step, dt)
+        if self.strikes >= self.max_strikes:
+            raise TimeoutError(
+                f"step {step}: {self.strikes} consecutive steps over "
+                f"{self.timeout_s}s — requesting restart/re-slice")
+
+
+def elastic_remesh(state_tree, spec_tree, axis_order=("data", "model"),
+                   devices=None):
+    """Rebuild the largest (data × model) mesh from live devices and
+    re-shard ``state_tree`` onto it.  model dim is kept if possible,
+    data absorbs the remainder (data parallelism degrades gracefully)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    model = 1
+    for cand in (16, 8, 4, 2, 1):
+        if n % cand == 0:
+            model = cand
+            break
+    mesh = jax.make_mesh((n // model, model), axis_order,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                         devices=np.asarray(devices))
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state_tree)
+    sh = logical_to_sharding(spec_tree, mesh, abstract)
+    resharded = jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        state_tree, sh)
+    return mesh, resharded
+
+
+class TrainRunner:
+    """Checkpoint/restart training driver.
+
+    step_fn(state, step) -> (state, metrics)  must be pure & replayable.
+    ``failure_hook(step)`` (tests) may raise to simulate chip loss."""
+
+    def __init__(self, step_fn, state, *, ckpt_dir: str,
+                 ckpt_every: int = 50, keep_last: int = 3,
+                 straggler: StragglerPolicy | None = None,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 max_restarts: int = 3):
+        self.step_fn = step_fn
+        self.state = state
+        self.ckpt = AsyncCheckpointer(ckpt_dir, every=ckpt_every,
+                                      keep_last=keep_last)
+        self.straggler = straggler or StragglerPolicy(timeout_s=1e9)
+        self.failure_hook = failure_hook
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.metrics_log = []
+
+    def _restore(self):
+        self.ckpt.wait()
+        steps = latest_steps(self.ckpt.directory)
+        if not steps:
+            return 0
+        self.state, step = restore(self.ckpt.directory, self.state)
+        return step + 1
+
+    def run(self, num_steps: int, start_step: int = 0) -> int:
+        step = start_step
+        while step < num_steps:
+            try:
+                t0 = time.time()
+                if self.failure_hook:
+                    self.failure_hook(step)
+                self.state, metrics = self.step_fn(self.state, step)
+                self.straggler.observe(step, time.time() - t0)
+                self.metrics_log.append((step, metrics))
+                self.ckpt.maybe_save(step, self.state)
+                step += 1
+            except (KeyboardInterrupt,):
+                raise
+            except Exception as e:   # noqa: BLE001 — restart on ANY failure
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts") from e
+                step = self._restore()
+        self.ckpt.wait()
+        return step

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's hot spots (validated in interpret
+mode on CPU):
+
+  m3_matmul       — segment-blocked matmul (the TPU-native M3), fwd + custom bwd
+  seg_act         — one-pass per-block activation dispatch + padding mask
+  moe_gemm        — grouped GEMM (M3's row-segment dual; MoE expert compute)
+  flash_attention — fused online-softmax attention (causal/SWA/GQA), the
+                    §Perf-identified lever for memory-bound attention cells
+"""
+from repro.kernels.ops import flash_attention, m3_matmul, moe_gemm, seg_act
+
+__all__ = ["flash_attention", "m3_matmul", "moe_gemm", "seg_act"]

@@ -1,0 +1,159 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle: batch/feature padding to block multiples, dtype policy, the
+custom_vjp that routes the M3 backward through the transposed kernels, and
+the ``interpret`` switch (True = run the kernel body in Python on CPU; the
+container has no TPU — interpret mode is how correctness is validated here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attn as _flashk
+from repro.kernels import m3_matmul as _m3k
+from repro.kernels import moe_gemm as _moek
+from repro.kernels import seg_act as _segk
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+# --------------------------------------------------------------------- #
+# m3_matmul with custom_vjp                                             #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _m3_core(h, w2, block_seg_ids_t, num_members, block_h, block_b, interpret):
+    seg = jnp.asarray(np.asarray(block_seg_ids_t, np.int32))
+    return _m3k.m3_matmul_fwd(h, w2, seg, num_members,
+                              block_h=block_h, block_b=block_b,
+                              interpret=interpret)
+
+
+def _m3_fwd(h, w2, block_seg_ids_t, num_members, block_h, block_b, interpret):
+    y = _m3_core(h, w2, block_seg_ids_t, num_members, block_h, block_b, interpret)
+    return y, (h, w2)
+
+
+def _m3_bwd(block_seg_ids_t, num_members, block_h, block_b, interpret, res, dy):
+    h, w2 = res
+    seg = jnp.asarray(np.asarray(block_seg_ids_t, np.int32))
+    dh = _m3k.m3_matmul_dh(dy, w2, seg, block_h=block_h, block_b=block_b,
+                           interpret=interpret)
+    dw = _m3k.m3_matmul_dw(dy, h, seg, block_h=block_h, block_b=block_b,
+                           interpret=interpret)
+    return dh, dw
+
+
+_m3_core.defvjp(_m3_fwd, _m3_bwd)
+
+
+def m3_matmul(h: jax.Array, w2: jax.Array, block_seg_ids: np.ndarray,
+              num_members: int, *, block_h: int, block_b: int = 128,
+              interpret: bool = True) -> jax.Array:
+    """Segment-blocked matmul; differentiable; pads B and O to block multiples.
+
+    h (B, H), w2 (O, H), per-block member ids (H/block_h,) -> (B, M, O).
+    H must already be block_h-aligned (Population guarantees this).
+    """
+    if h.shape[1] % block_h:
+        raise ValueError(f"hidden axis {h.shape[1]} not {block_h}-aligned")
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    # O padding: kernels keep full O in-block; pad to 128 lanes for TPU layout
+    w2p, o0 = _pad_axis(w2, 0, 128 if not interpret else 1)
+    seg_t = tuple(int(s) for s in np.asarray(block_seg_ids, np.int32))
+    y = _m3_core(hp, w2p, seg_t, num_members, block_h, block_b, interpret)
+    return y[:b0, :, :o0]
+
+
+# --------------------------------------------------------------------- #
+# segmented activation                                                  #
+# --------------------------------------------------------------------- #
+
+def seg_act(h: jax.Array, block_act_ids: np.ndarray, mask: np.ndarray, *,
+            block_h: int, block_b: int = 256, interpret: bool = True) -> jax.Array:
+    """One-pass per-block activation + padding mask. h (B, H) -> (B, H)."""
+    if h.shape[1] % block_h:
+        raise ValueError(f"hidden axis {h.shape[1]} not {block_h}-aligned")
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    ids = jnp.asarray(np.asarray(block_act_ids, np.int32))
+    m2 = jnp.asarray(np.asarray(mask, np.float32)).reshape(1, -1)
+    y = _segk.seg_act(hp, ids, m2, block_h=block_h, block_b=block_b,
+                      interpret=interpret)
+    return y[:b0]
+
+
+# --------------------------------------------------------------------- #
+# flash attention                                                        #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, scale, causal=True, window=0,
+                    block_q=512, block_k=512, interpret=True):
+    """Fused flash attention forward. q (B,H,Sq,dh), k/v (B,Hkv,Sk,dh).
+
+    Backward recomputes through the exact dense/chunked XLA path
+    (flash-bwd kernel is follow-up work — the forward covers serving,
+    prefill, and the recompute half of remat'd training)."""
+    return _flashk.flash_attention_fwd(
+        q, k, v, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _flash_fwd(q, k, v, scale, causal, window, block_q, block_k, interpret):
+    y = flash_attention(q, k, v, scale, causal, window, block_q, block_k,
+                        interpret)
+    return y, (q, k, v)
+
+
+def _flash_bwd(scale, causal, window, block_q, block_k, interpret, res, dy):
+    from repro.kernels.ref import flash_attn_ref
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: flash_attn_ref(qq, kk, vv, scale=scale,
+                                          causal=causal, window=window),
+        q, k, v)
+    return vjp(dy)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# --------------------------------------------------------------------- #
+# grouped GEMM                                                          #
+# --------------------------------------------------------------------- #
+
+def moe_gemm(x: jax.Array, w: jax.Array, block_expert_ids: np.ndarray, *,
+             block_t: int = 128, block_d: int = 512, block_f: int = 512,
+             interpret: bool = True) -> jax.Array:
+    """Tokens-sorted-by-expert grouped GEMM. x (T, D), w (E, D, F) -> (T, F).
+
+    T must be block_t-aligned per expert run (capacity padding upstream).
+    D and F are padded here if needed.
+    """
+    t, d = x.shape
+    e, dw, f = w.shape
+    if t % block_t:
+        raise ValueError(f"token axis {t} not {block_t}-aligned")
+    block_d = min(block_d, d)
+    block_f = min(block_f, f)
+    xp, _ = _pad_axis(x, 1, block_d)
+    wp, _ = _pad_axis(w, 1, block_d)
+    wp, f0 = _pad_axis(wp, 2, block_f)
+    ids = jnp.asarray(np.asarray(block_expert_ids, np.int32))
+    y = _moek.moe_gemm(xp, wp, ids, block_t=block_t, block_d=block_d,
+                       block_f=block_f, interpret=interpret)
+    return y[:, :f0]

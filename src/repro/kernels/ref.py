@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *semantics*; the kernels must match them (asserted across a
+shape/dtype sweep in tests/test_kernels.py).  They are also the lowering used
+on backends without Pallas TPU support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import ACTIVATION_FNS
+
+
+def expand_block_ids(block_ids: np.ndarray, block: int) -> np.ndarray:
+    """Per-block id array -> per-unit id array."""
+    return np.repeat(np.asarray(block_ids), block)
+
+
+def m3_matmul_ref(h: jax.Array, w2: jax.Array, block_seg_ids: np.ndarray,
+                  num_members: int, block_h: int) -> jax.Array:
+    """y[b,m,o] = sum_{j: seg(j)==m} h[b,j] * w2[o,j]   (f32 accumulation).
+
+    h (B, H), w2 (O, H) -> (B, M, O)."""
+    seg = jnp.asarray(expand_block_ids(block_seg_ids, block_h))
+    s = h.astype(jnp.float32)[:, None, :] * w2.astype(jnp.float32)[None, :, :]
+    y = jax.ops.segment_sum(jnp.moveaxis(s, -1, 0), seg,
+                            num_segments=num_members, indices_are_sorted=True)
+    return jnp.moveaxis(y, 0, 1).astype(h.dtype)
+
+
+def m3_matmul_ref_f32out(h, w2, block_seg_ids, num_members, block_h):
+    seg = jnp.asarray(expand_block_ids(block_seg_ids, block_h))
+    s = h.astype(jnp.float32)[:, None, :] * w2.astype(jnp.float32)[None, :, :]
+    y = jax.ops.segment_sum(jnp.moveaxis(s, -1, 0), seg,
+                            num_segments=num_members, indices_are_sorted=True)
+    return jnp.moveaxis(y, 0, 1)
+
+
+def seg_act_ref(h: jax.Array, block_act_ids: np.ndarray, block_h: int,
+                mask: np.ndarray | None = None) -> jax.Array:
+    """Per-block activation id applied column-wise, then optional unit mask."""
+    ids = jnp.asarray(expand_block_ids(block_act_ids, block_h))
+    out = jnp.zeros_like(h)
+    for i, fn in enumerate(ACTIVATION_FNS):
+        out = jnp.where(ids == i, fn(h), out)
+    if mask is not None:
+        out = out * jnp.asarray(mask, h.dtype)
+    return out
+
+
+def flash_attn_ref(q, k, v, *, scale: float, causal: bool, window: int):
+    """Dense masked softmax attention. q (B,H,Sq,dh), k/v (B,Hkv,Sk,dh)."""
+    b, h, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= qp >= kp
+    if window and window > 0:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None, None], s, -1e30)
+    w_ = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w_,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_gemm_ref(x: jax.Array, w: jax.Array, block_expert_ids: np.ndarray,
+                 block_t: int) -> jax.Array:
+    """Grouped GEMM: y[t] = x[t] @ w[e(t)].
+
+    x (T, D) tokens sorted by expert (padded so each expert's run is a
+    multiple of block_t); w (E, D, F) -> y (T, F)."""
+    eid = jnp.asarray(expand_block_ids(block_expert_ids, block_t))
+    wt = w[eid]                                   # (T, D, F) gather — oracle only
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      wt.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,8 @@
+"""Launch layer: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun pins XLA_FLAGS at import — import it only in a
+dedicated process (python -m repro.launch.dryrun); everything else here is
+import-safe."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

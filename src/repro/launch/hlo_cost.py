@@ -1,0 +1,317 @@
+"""Loop-aware static cost model over post-SPMD HLO text.
+
+WHY: ``compiled.cost_analysis()`` visits each ``while`` body ONCE — a model
+lowered as ``lax.scan`` over 96 layers reports ~1/96 of its real flops,
+bytes and collective traffic.  This module parses the compiled per-device
+HLO, recovers every loop's trip count from its condition computation
+(``compare(counter, constant(N)), direction=LT`` — the shape jax scans
+lower to), and walks the call graph weighting each computation by its call
+multiplicity.  The result is the honest per-device, per-step profile the
+roofline needs:
+
+  flops            — 2·prod(result)·K for every dot (+conv), loop-weighted
+  hbm_bytes        — Σ (operands+results) of top-level kernels (fusions,
+                     dots, copies, collectives…), loop-weighted; fusion
+                     internals are VMEM and excluded, matching how XLA:TPU
+                     materialises buffers
+  collective_bytes — per collective kind, loop-weighted
+
+Validated against cost_analysis() on loop-free modules
+(tests/test_hlo_cost.py) where the two must agree on dot flops.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:{[^}]*})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_CALLED_LIST = re.compile(r"calls=\{([^}]*)\}")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+# ops that materialise HBM buffers at the executable level
+_KERNEL_OPS = {"fusion", "dot", "convolution", "copy", "custom-call",
+               "dynamic-slice", "dynamic-update-slice", "sort", "rng",
+               "gather", "scatter", "transpose", "broadcast", "reshape-x",
+               "reduce", "concatenate", "pad", "slice", "select-and-scatter",
+               "iota", "cholesky", "triangular-solve"} | set(COLLECTIVE_KINDS) \
+    | {k + "-start" for k in COLLECTIVE_KINDS}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str          # everything after the opening paren
+
+    @property
+    def operands(self):
+        # operand names appear before the closing paren of the call
+        depth, out, buf = 1, [], self.rest
+        end = len(buf)
+        for i, ch in enumerate(buf):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPERAND.findall(buf[:end])
+
+    @property
+    def called(self):
+        names = _CALLED.findall(self.rest)
+        for lst in _CALLED_LIST.findall(self.rest):
+            names.extend(_OPERAND.findall(lst))
+        return names
+
+
+_NEW_OP = re.compile(r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*")
+
+
+def _logical_lines(hlo: str):
+    """Join physical lines into logical lines (long tuple types wrap).
+
+    Boundaries: new op (`%x = `), closing brace, or a computation header —
+    headers start at column 0 in HLO text while ops are indented."""
+    buf = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        at_col0 = line[0] not in " \t"
+        is_boundary = (_NEW_OP.match(line) is not None or stripped == "}"
+                       or at_col0)
+        if is_boundary:
+            if buf is not None:
+                yield buf
+            buf = line
+        else:
+            buf = line if buf is None else buf + " " + stripped
+    if buf is not None:
+        yield buf
+
+
+def parse_module(hlo: str) -> dict:
+    """computation name -> list[Op]"""
+    comps = {}
+    cur = None
+    for line in _logical_lines(hlo):
+        if line.rstrip().endswith("{") and ("->" in line or
+                                            line.lstrip().startswith("ENTRY")):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            comps[cur].append(Op(*m.groups()))
+    return comps
+
+
+def _entry_name(hlo: str, comps: dict) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    m = re.search(r"entry_computation_name=\"([^\"]+)\"", hlo)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: a computation never referenced by others
+    called = {c for ops in comps.values() for op in ops for c in op.called}
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def trip_count(cond_ops) -> int:
+    """Recover N from the loop condition: compare(counter, constant(N)) LT."""
+    consts = {}
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.match(r"\s*([\-0-9]+)\)?", op.rest)
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond_ops:
+        if op.opcode == "compare" and "direction=LT" in op.rest:
+            for o in op.operands:
+                if o in consts:
+                    return max(consts[o], 1)
+    return 1
+
+
+def _dot_flops(op: Op, types: dict) -> float:
+    _, rshape = _first_shape(op.result_type)
+    ops = op.operands
+    if not ops:
+        return 0.0
+    lhs_type = types.get(ops[0], "")
+    _, lshape = _first_shape(lhs_type)
+    m = _CONTRACT.search(op.rest)
+    k = 1
+    if m and lshape:
+        for d in m.group(1).split(","):
+            if d:
+                k *= lshape[int(d)]
+    out = 2.0 * k
+    for d in rshape:
+        out *= d
+    return out
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    coll_count: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    loops: list = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.hbm_bytes * k)
+        for kk, v in self.coll_bytes.items():
+            c.coll_bytes[kk] = v * k
+        for kk, v in self.coll_count.items():
+            c.coll_count[kk] = v * k
+        return c
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.coll_bytes.update(other.coll_bytes)
+        self.coll_count.update(other.coll_count)
+        self.loops.extend(other.loops)
+
+
+def _is_fusion_body(name: str) -> bool:
+    return name.startswith("fused_") or ".fused" in name
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_module(hlo)
+    entry = _entry_name(hlo, comps)
+    memo = {}
+
+    def comp_cost(name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        total = Cost()
+        types = {op.name: op.result_type for op in comps.get(name, [])}
+        for op in comps.get(name, []):
+            if op.opcode == "while":
+                body, cond = None, None
+                m = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                if m:
+                    cond = m.group(1)
+                m = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if m:
+                    body = m.group(1)
+                m = _TRIP.search(op.rest)
+                if m:                               # XLA's own annotation
+                    n = max(int(m.group(1)), 1)
+                else:                               # fallback: parse the cond
+                    n = trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    inner = comp_cost(body, in_fusion)
+                    total.add(inner.scaled(n))
+                    total.loops.append((body, n))
+                continue
+            if op.opcode in ("call", "conditional", "async-start", "map"):
+                for c in op.called:
+                    if c in comps:
+                        total.add(comp_cost(c, in_fusion))
+                continue
+            if op.opcode == "fusion":
+                for c in op.called:
+                    if c in comps:
+                        total.add(comp_cost(c, True))   # flops only
+                if not in_fusion:
+                    total.hbm_bytes += _shape_bytes(op.result_type)
+                    total.hbm_bytes += sum(
+                        _shape_bytes(types.get(o, "")) for o in op.operands)
+                continue
+            if op.opcode in ("dot", "convolution"):
+                total.flops += _dot_flops(op, types)
+            kind = op.opcode.replace("-start", "")
+            if kind in COLLECTIVE_KINDS and not op.opcode.endswith("-done"):
+                b = _shape_bytes(op.result_type)
+                if op.opcode == "all-gather-start":
+                    b //= 2
+                total.coll_bytes[kind] += b
+                total.coll_count[kind] += 1
+            if not in_fusion and op.opcode in _KERNEL_OPS:
+                if op.opcode == "dynamic-update-slice":
+                    # in-place on TPU: traffic = write+read of the UPDATE
+                    ops_ = op.operands
+                    upd = _shape_bytes(types.get(ops_[1], "")) if \
+                        len(ops_) > 1 else 0
+                    total.hbm_bytes += 2 * upd
+                elif op.opcode == "dynamic-slice":
+                    # reads only the slice it produces
+                    total.hbm_bytes += 2 * _shape_bytes(op.result_type)
+                else:
+                    total.hbm_bytes += _shape_bytes(op.result_type)
+                    total.hbm_bytes += sum(
+                        _shape_bytes(types.get(o, "")) for o in op.operands)
+        memo[key] = total
+        return total
+
+    c = comp_cost(entry, False)
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "collective_bytes": dict(c.coll_bytes),
+        "collective_count": dict(c.coll_count),
+        "total_collective_bytes": float(sum(c.coll_bytes.values())),
+        "loops": c.loops,
+    }

@@ -1,0 +1,80 @@
+"""Parse collective traffic and op statistics out of compiled HLO text.
+
+``compiled.as_text()`` is the post-SPMD, per-device module: shapes are shard
+shapes, collectives are explicit ops.  We classify every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+and account its LARGEST operand/result bytes as that op's wire payload
+(per device).  The roofline's collective term is then
+
+    collective_term = per_device_collective_bytes / link_bw
+
+(equivalently Σ-over-chips / (chips × link_bw), the assignment's form).
+
+This is intentionally a *structural* profile — no wall clock exists for TPU
+on this container; the same parse also powers the §Perf iteration loop
+(counting redundant gathers, remat recompute, etc.)."""
+from __future__ import annotations
+
+import collections
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# start-flavoured async variants count once (the -done carries no new bytes)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s*"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(", re.M)
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[dims] group in a type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective payload bytes by op kind + op counts."""
+    bytes_by_kind = collections.Counter()
+    count_by_kind = collections.Counter()
+    for m in _OP_RE.finditer(hlo_text):
+        result_type, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        b = shape_bytes(result_type)
+        if op.endswith("all-gather-start"):
+            # result tuple repeats the operand; gather payload is the output
+            b = b // 2 if b else b
+        bytes_by_kind[kind] += b
+        count_by_kind[kind] += 1
+    return {
+        "per_device_bytes": dict(bytes_by_kind),
+        "counts": dict(count_by_kind),
+        "total_per_device_bytes": sum(bytes_by_kind.values()),
+    }
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> list:
+    """(op_name, count) histogram — the 'profile' for §Perf iteration."""
+    ops = re.findall(r"=\s*(?:\([^=]*?\)|\S+)\s*([a-z][\w\-]*)\(", hlo_text)
+    return collections.Counter(ops).most_common(top)
+
+
+def fusion_count(hlo_text: str) -> int:
+    return len(re.findall(r"\bfusion\(", hlo_text))

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is pure
+data parallelism crossing DCI (gradient all-reduce, optionally int8-
+compressed — distributed/compression.py).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run pins the device count via XLA_FLAGS before
+any jax import; tests import this file under a 1-device CPU)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int | None = None):
+    """Largest (data, model) mesh on the CURRENT device set (examples,
+    reduced-scale training, elastic restarts)."""
+    n = len(jax.devices())
+    if model is None:
+        model = 1
+        for cand in (16, 8, 4, 2):
+            if n % cand == 0 and n >= cand:
+                model = cand
+                break
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def mesh_num_devices(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,7 @@
+"""Model definitions: unified decoder LM, encoder-decoder (whisper),
+population model (the paper's ParallelMLPs lives in repro.core)."""
+from repro.models import encdec, lm
+from repro.models.encdec import EncDecConfig
+from repro.models.lm import LayerSpec, LMConfig
+
+__all__ = ["lm", "encdec", "LMConfig", "LayerSpec", "EncDecConfig"]

@@ -1,0 +1,330 @@
+"""Whisper-style encoder–decoder (audio arch, per assignment).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d_model); sinusoidal positions are
+added here (whisper's encoder uses sinusoidal embeddings post-conv).  The
+decoder uses a learned position table sized by ``max_target`` — whisper's
+natural 448 for real use, 32k for the assigned decode_32k dry-run cell
+(documented in DESIGN.md).
+
+Layers: encoder = [self-attn (non-causal) + FFN]; decoder = [causal
+self-attn + cross-attn + FFN]; LayerNorm + biases everywhere (whisper).
+Both stacks are single lax.scans over stacked params.  Cross-attention
+K/V are projected ONCE from the encoder output per decoder layer and act
+as a static cache during decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ACT_RESIDUAL, BATCH_AXES, constrain, stack_spec
+from repro.nn import attention as attn_lib
+from repro.nn.attention import AttnConfig
+from repro.nn.common import (dense_init, embed_init, norm_apply, norm_init,
+                             sinusoidal_positions, truncated_normal_init)
+from repro.nn.ffn import FFNConfig, ffn_apply, ffn_init
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_enc_layers: int
+    n_dec_layers: int
+    attn: AttnConfig
+    ffn: FFNConfig
+    max_target: int = 448
+    param_dtype: str = "bfloat16"
+    vocab_pad_to: int = 128
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab + m - 1) // m) * m
+
+    def num_params(self) -> int:
+        abs_p, _ = abstract_params(self)
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abs_p))
+
+    def num_active_params(self) -> int:
+        return self.num_params()
+
+
+def _enc_layer_init(key, cfg: EncDecConfig):
+    ka, kf = jax.random.split(key)
+    params, specs = {}, {}
+    for nm in ("norm1", "norm2"):
+        params[nm], specs[nm] = norm_init(cfg.d_model, cfg.dtype, "layernorm")
+    params["attn"], specs["attn"] = attn_lib.attn_init(ka, cfg.attn, cfg.dtype)
+    params["ffn"], specs["ffn"] = ffn_init(kf, cfg.ffn, cfg.dtype)
+    return params, specs
+
+
+def _dec_layer_init(key, cfg: EncDecConfig):
+    ka, kc, kf = jax.random.split(key, 3)
+    params, specs = {}, {}
+    for nm in ("norm1", "norm2", "norm3"):
+        params[nm], specs[nm] = norm_init(cfg.d_model, cfg.dtype, "layernorm")
+    params["self_attn"], specs["self_attn"] = attn_lib.attn_init(
+        ka, cfg.attn, cfg.dtype)
+    params["cross_attn"], specs["cross_attn"] = attn_lib.attn_init(
+        kc, cfg.attn, cfg.dtype)
+    params["ffn"], specs["ffn"] = ffn_init(kf, cfg.ffn, cfg.dtype)
+    return params, specs
+
+
+def init_params(key, cfg: EncDecConfig):
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    params, specs = {}, {}
+    ekeys = jax.random.split(ke, cfg.n_enc_layers)
+    params["encoder"] = jax.vmap(
+        lambda k: _enc_layer_init(k, cfg)[0])(ekeys)
+    specs["encoder"] = stack_spec(_enc_layer_init(ke, cfg)[1])
+    dkeys = jax.random.split(kd, cfg.n_dec_layers)
+    params["decoder"] = jax.vmap(
+        lambda k: _dec_layer_init(k, cfg)[0])(dkeys)
+    specs["decoder"] = stack_spec(_dec_layer_init(kd, cfg)[1])
+    p, s = embed_init(kt, cfg.padded_vocab, cfg.d_model, cfg.dtype)
+    params["embed"], specs["embed"] = p, s          # tied readout (whisper)
+    params["dec_pos"] = truncated_normal_init(
+        kp, (cfg.max_target, cfg.d_model), cfg.dtype, 0.02)
+    specs["dec_pos"] = P(None, None)
+    for nm in ("enc_norm", "dec_norm"):
+        params[nm], specs[nm] = norm_init(cfg.d_model, cfg.dtype, "layernorm")
+    return params, specs
+
+
+def abstract_params(cfg: EncDecConfig):
+    box = {}
+
+    def build(key):
+        p, s = init_params(key, cfg)
+        box["specs"] = s
+        return p
+
+    abs_p = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return abs_p, box["specs"]
+
+
+# --------------------------------------------------------------------- #
+# forward                                                               #
+# --------------------------------------------------------------------- #
+
+def encode(params, cfg: EncDecConfig, frames):
+    """frames (B,S,D) stub embeddings -> encoder states (B,S,D)."""
+    b, s, _ = frames.shape
+    x = frames.astype(cfg.dtype) + sinusoidal_positions(
+        s, cfg.d_model, cfg.dtype)[None]
+    x = constrain(x, ACT_RESIDUAL)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, lp):
+        xc = constrain(xc, ACT_RESIDUAL)
+        h = norm_apply(lp["norm1"], xc)
+        xc = xc + attn_lib.attention(lp["attn"], cfg.attn, h, positions,
+                                     causal=False, window=None)
+        xc = xc + ffn_apply(lp["ffn"], cfg.ffn, norm_apply(lp["norm2"], xc))
+        return xc, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"])
+    return norm_apply(params["enc_norm"], x)
+
+
+def cross_kv(params, cfg: EncDecConfig, enc_out):
+    """Project per-decoder-layer cross K/V from encoder states (the static
+    half of the decode cache).  -> (L,B,Senc,hkv,dh) ×2."""
+    def one(lp):
+        b, s, _ = enc_out.shape
+        k = (enc_out @ lp["cross_attn"]["wk"]["w"]).reshape(
+            b, s, cfg.attn.n_kv_heads, cfg.attn.d_head)
+        v = (enc_out @ lp["cross_attn"]["wv"]["w"]).reshape(
+            b, s, cfg.attn.n_kv_heads, cfg.attn.d_head)
+        if cfg.attn.bias:
+            k = k + lp["cross_attn"]["wk"]["b"].reshape(
+                cfg.attn.n_kv_heads, cfg.attn.d_head)
+            v = v + lp["cross_attn"]["wv"]["b"].reshape(
+                cfg.attn.n_kv_heads, cfg.attn.d_head)
+        return k, v
+
+    return jax.lax.map(lambda lp: one(lp), params["decoder"])
+
+
+def _decoder_stack(params, cfg: EncDecConfig, x, positions, enc_out, enc_pos):
+    """Shared by train forward (full target sequence)."""
+    def body(xc, lp):
+        xc = constrain(xc, ACT_RESIDUAL)
+        h = norm_apply(lp["norm1"], xc)
+        xc = xc + attn_lib.attention(lp["self_attn"], cfg.attn, h, positions,
+                                     causal=True, window=None)
+        h = norm_apply(lp["norm2"], xc)
+        k, v = _layer_cross_kv(lp, cfg, enc_out)
+        xc = xc + attn_lib.attention(lp["cross_attn"], cfg.attn, h, positions,
+                                     causal=False, window=None,
+                                     kv_override=(k, v), kv_positions=enc_pos)
+        xc = xc + ffn_apply(lp["ffn"], cfg.ffn, norm_apply(lp["norm3"], xc))
+        return xc, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["decoder"])
+    return norm_apply(params["dec_norm"], x)
+
+
+def _layer_cross_kv(lp, cfg: EncDecConfig, enc_out):
+    b, s, _ = enc_out.shape
+    k = (enc_out @ lp["cross_attn"]["wk"]["w"]).reshape(
+        b, s, cfg.attn.n_kv_heads, cfg.attn.d_head)
+    v = (enc_out @ lp["cross_attn"]["wv"]["w"]).reshape(
+        b, s, cfg.attn.n_kv_heads, cfg.attn.d_head)
+    if cfg.attn.bias:
+        k = k + lp["cross_attn"]["wk"]["b"].reshape(
+            cfg.attn.n_kv_heads, cfg.attn.d_head)
+        v = v + lp["cross_attn"]["wv"]["b"].reshape(
+            cfg.attn.n_kv_heads, cfg.attn.d_head)
+    return k, v
+
+
+def _vocab_mask(cfg, dtype):
+    if cfg.padded_vocab == cfg.vocab:
+        return None
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, NEG) \
+        .astype(dtype)
+
+
+def forward(params, cfg: EncDecConfig, batch, mesh=None):
+    """batch: {frames (B,Se,D), tokens (B,St)} -> (logits (B,St,Vp), aux)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    b, st = batch["tokens"].shape
+    se = enc_out.shape[1]
+    x = jnp.take(params["embed"]["embedding"], batch["tokens"], axis=0)
+    x = x + params["dec_pos"][:st][None]
+    positions = jnp.broadcast_to(jnp.arange(st, dtype=jnp.int32)[None], (b, st))
+    enc_pos = jnp.arange(se, dtype=jnp.int32)
+    x = _decoder_stack(params, cfg, x, positions, enc_out, enc_pos)
+    logits = x @ params["embed"]["embedding"].T
+    logits = constrain(logits, P(BATCH_AXES, None, "model"))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_and_metrics(params, cfg: EncDecConfig, batch, mesh=None):
+    logits, aux = forward(params, cfg, batch, mesh)
+    lf = logits.astype(jnp.float32)
+    vm = _vocab_mask(cfg, jnp.float32)
+    if vm is not None:
+        lf = lf + vm
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, batch["labels"][..., None].astype(jnp.int32), axis=-1)[..., 0]
+    loss = (lse - gold).mean()
+    return loss, {"loss": loss, "aux_loss": aux}
+
+
+def make_train_step(cfg: EncDecConfig, optimizer, lr_fn, *, num_micro: int = 1,
+                    grad_clip: float = 1.0, mesh=None):
+    from repro.optim import apply_updates, clip_by_global_norm
+
+    def loss_fn(p, mb):
+        return loss_and_metrics(p, cfg, mb, mesh)
+
+    def train_step(params, opt_state, batch, step):
+        lr = lr_fn(step)
+        if num_micro == 1:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(num_micro, x.shape[0] // num_micro,
+                                    *x.shape[1:]), batch)
+
+            def micro(carry, m):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, m)
+                return (jax.tree.map(lambda a, bb: a + bb.astype(jnp.float32),
+                                     g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / num_micro, gsum)
+            loss = lsum / num_micro
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        upd, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = apply_updates(params, upd)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return train_step
+
+
+# --------------------------------------------------------------------- #
+# serving                                                               #
+# --------------------------------------------------------------------- #
+
+def init_self_caches(cfg: EncDecConfig, batch: int, max_len: int):
+    proto = attn_lib.init_kv_cache(cfg.attn, batch, max_len, cfg.dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_dec_layers,) + a.shape),
+        proto)
+
+
+def make_serve_step(cfg: EncDecConfig, mesh=None):
+    """One decoder token against (self KV ring, static cross KV).
+
+    caches = {"self": stacked ring caches, "cross_k"/"cross_v":
+    (L,B,Se,hkv,dh), "enc_pos": (Se,)}."""
+
+    def serve_step(params, caches, batch, cur_pos):
+        b = batch["tokens"].shape[0]
+        x = jnp.take(params["embed"]["embedding"], batch["tokens"], axis=0)
+        x = x + params["dec_pos"][cur_pos][:, None]
+        scale = cfg.attn.softmax_scale or cfg.attn.d_head ** -0.5
+
+        def body(xc, xs):
+            lp, cache, ck, cv = xs
+            h = norm_apply(lp["norm1"], xc)
+            mix, cache = attn_lib.decode_step(lp["self_attn"], cfg.attn, h,
+                                              cache, cur_pos, window=None)
+            xc = xc + mix
+            # cross attention: 1 query token vs static encoder K/V
+            h = norm_apply(lp["norm2"], xc)
+            q, _, _ = attn_lib.qkv_project(lp["cross_attn"], cfg.attn, h)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q, ck,
+                           preferred_element_type=jnp.float32) * scale
+            w = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(xc.dtype), cv)
+            xc = xc + attn_lib.out_project(lp["cross_attn"], cfg.attn, o)
+            xc = xc + ffn_apply(lp["ffn"], cfg.ffn, norm_apply(lp["norm3"], xc))
+            return xc, cache
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["decoder"], caches["self"],
+                      caches["cross_k"], caches["cross_v"]))
+        x = norm_apply(params["dec_norm"], x)
+        logits = x @ params["embed"]["embedding"].T
+        vm = _vocab_mask(cfg, logits.dtype)
+        if vm is not None:
+            logits = logits + vm
+        caches = dict(caches, self=new_self)
+        return logits, caches
+
+    return serve_step
+
+
+def prepare_serve_caches(params, cfg: EncDecConfig, frames, max_len: int):
+    """Encode + project cross K/V + empty self caches."""
+    enc_out = encode(params, cfg, frames)
+    ck, cv = cross_kv(params, cfg, enc_out)
+    return {"self": init_self_caches(cfg, frames.shape[0], max_len),
+            "cross_k": ck, "cross_v": cv}

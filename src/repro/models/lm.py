@@ -1,0 +1,617 @@
+"""Unified decoder-only LM covering the assigned architecture families:
+
+  dense GQA            — qwen3, h2o-danube (SWA), command-r (parallel block,
+                         LayerNorm, tied+scaled logits), nemotron (relu²),
+                         qwen2-vl backbone (M-RoPE, qkv-bias, embeds frontend)
+  MoE                  — deepseek-moe (64e top-6 + shared, first-layer dense),
+                         mixtral (8e top-2, SWA)
+  SSM (attention-free) — mamba2 (SSD blocks, no FFN)
+  hybrid               — hymba (parallel attn+SSM heads per layer, mixed
+                         SWA/global pattern)
+
+One config, one forward, one train/serve step.  Layers are grouped into
+maximal runs with identical structure; each group is ONE ``lax.scan`` over
+stacked parameters (constant-size HLO regardless of depth — what keeps 96-
+layer dry-run compiles tractable) with per-layer scalars (SWA window) passed
+as scanned operands, so heterogeneous window patterns don't break stacking.
+
+Sharding: specs are declared at init (see nn/*.py) — FSDP over 'data',
+TP/EP over 'model', batch over ('pod','data'), SP residual (S over 'model').
+The forward only places *constraints* at group boundaries; GSPMD propagates
+through layer internals.  All specs degrade gracefully off-mesh (CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (ACT_RESIDUAL, BATCH_AXES, constrain,
+                                        stack_spec)
+from repro.nn import attention as attn_lib
+from repro.nn import ffn as ffn_lib
+from repro.nn import hybrid as hybrid_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.attention import AttnConfig
+from repro.nn.common import embed_init, norm_apply, norm_init, dense_init
+from repro.nn.ffn import FFNConfig, MoEConfig
+from repro.nn.hybrid import HybridConfig
+from repro.nn.ssm import SSMConfig
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"     # attn | ssm | hybrid
+    ffn: str = "dense"      # dense | moe | none
+    window: int = 0         # 0 = full attention; >0 = SWA window
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    vocab: int
+    d_model: int
+    layers: tuple                      # tuple[LayerSpec]
+    attn: Optional[AttnConfig] = None
+    ssm: Optional[SSMConfig] = None
+    ffn: Optional[FFNConfig] = None    # dense FFN (per-layer width overrides
+    dense_ffn0: Optional[FFNConfig] = None  # ffn for 'dense' layers in MoE archs
+    moe: Optional[MoEConfig] = None
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = False
+    logit_scale: float = 1.0           # command-r multiplies logits
+    parallel_block: bool = False       # command-r: x + attn(n(x)) + ffn(n(x))
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    moe_impl: str = "dense"            # dense | shard_map  (EP all-to-all)
+    frontend: str = "tokens"           # tokens | embeds (vlm/audio stub)
+    vocab_pad_to: int = 128
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def groups(self):
+        """Maximal runs of layers with identical (mixer, ffn) structure."""
+        out = []
+        i = 0
+        while i < len(self.layers):
+            j = i
+            sig = (self.layers[i].mixer, self.layers[i].ffn)
+            while (j + 1 < len(self.layers)
+                   and (self.layers[j + 1].mixer, self.layers[j + 1].ffn) == sig):
+                j += 1
+            out.append((sig, self.layers[i:j + 1], i))
+            i = j + 1
+        return out
+
+    def hybrid_cfg(self) -> HybridConfig:
+        return HybridConfig(self.attn, self.ssm)
+
+    def num_params(self) -> int:
+        """Exact parameter count (from abstract shapes, no allocation)."""
+        abs_p, _ = abstract_params(self)
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abs_p))
+
+    def num_active_params(self) -> int:
+        """Active-per-token params (MoE: top_k + shared experts only)."""
+        total = self.num_params()
+        if self.moe is None:
+            return total
+        n_moe_layers = sum(1 for l in self.layers if l.ffn == "moe")
+        per_expert = 3 * self.d_model * self.moe.d_expert
+        inactive = n_moe_layers * per_expert * (self.moe.num_experts
+                                                - self.moe.top_k)
+        return total - inactive
+
+
+# --------------------------------------------------------------------- #
+# init                                                                  #
+# --------------------------------------------------------------------- #
+
+def _init_layer(key, cfg: LMConfig, mixer: str, ffn_kind: str):
+    km, kf, k_ = jax.random.split(key, 3)
+    params, specs = {}, {}
+    p, s = norm_init(cfg.d_model, cfg.dtype, cfg.norm)
+    params["norm1"], specs["norm1"] = p, s
+    if mixer == "attn":
+        p, s = attn_lib.attn_init(km, cfg.attn, cfg.dtype)
+    elif mixer == "ssm":
+        p, s = ssm_lib.ssm_init(km, cfg.ssm, cfg.dtype)
+    elif mixer == "hybrid":
+        p, s = hybrid_lib.hybrid_init(km, cfg.hybrid_cfg(), cfg.dtype)
+    else:
+        raise ValueError(mixer)
+    params["mixer"], specs["mixer"] = p, s
+    if ffn_kind != "none":
+        if not cfg.parallel_block:
+            p, s = norm_init(cfg.d_model, cfg.dtype, cfg.norm)
+            params["norm2"], specs["norm2"] = p, s
+        if ffn_kind == "dense":
+            fcfg = cfg.dense_ffn0 if (cfg.moe is not None
+                                      and cfg.dense_ffn0 is not None) else cfg.ffn
+            p, s = ffn_lib.ffn_init(kf, fcfg, cfg.dtype)
+        elif ffn_kind == "moe":
+            p, s = ffn_lib.moe_init(kf, cfg.moe, cfg.dtype)
+        else:
+            raise ValueError(ffn_kind)
+        params["ffn"], specs["ffn"] = p, s
+    return params, specs
+
+
+def init_params(key, cfg: LMConfig):
+    """Returns (params, specs).  Group layers are vmap-stacked on axis 0."""
+    keys = jax.random.split(key, 3 + len(cfg.groups()))
+    params, specs = {}, {}
+    if cfg.frontend == "tokens" or cfg.tie_embeddings:
+        p, s = embed_init(keys[0], cfg.padded_vocab, cfg.d_model, cfg.dtype)
+        params["embed"], specs["embed"] = p, s
+    for gi, ((mixer, ffn_kind), layer_specs, _) in enumerate(cfg.groups()):
+        n = len(layer_specs)
+        gkeys = jax.random.split(keys[3 + gi], n)
+        gp, gs = jax.vmap(
+            lambda k: _init_layer(k, cfg, mixer, ffn_kind)[0])(gkeys), None
+        _, gs = _init_layer(keys[3 + gi], cfg, mixer, ffn_kind)
+        params[f"g{gi}"] = gp
+        specs[f"g{gi}"] = stack_spec(gs)
+    p, s = norm_init(cfg.d_model, cfg.dtype, cfg.norm)
+    params["final_norm"], specs["final_norm"] = p, s
+    if not cfg.tie_embeddings:
+        p, s = dense_init(keys[1], cfg.d_model, cfg.padded_vocab, cfg.dtype,
+                          P("data", "model"))
+        params["lm_head"], specs["lm_head"] = p, s
+    return params, specs
+
+
+def abstract_params(cfg: LMConfig):
+    """(ShapeDtypeStruct tree, spec tree) with ZERO allocation — the spec
+    tree (plain Python objects) is captured through a side-channel while
+    eval_shape traces the param construction abstractly."""
+    box = {}
+
+    def build(key):
+        p, s = init_params(key, cfg)
+        box["specs"] = s
+        return p
+
+    abs_p = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return abs_p, box["specs"]
+
+
+# --------------------------------------------------------------------- #
+# forward                                                               #
+# --------------------------------------------------------------------- #
+
+def _vocab_mask(cfg: LMConfig, dtype):
+    if cfg.padded_vocab == cfg.vocab:
+        return None
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, NEG) \
+        .astype(dtype)
+
+
+def _layer_apply(lp, cfg: LMConfig, mixer: str, ffn_kind: str, x, positions,
+                 window, mesh):
+    """One transformer block.  window: traced int32 (0 = full attention)."""
+    h = norm_apply(lp["norm1"], x)
+    if mixer == "attn":
+        mix = attn_lib.attention(lp["mixer"], cfg.attn, h, positions,
+                                 window=window)
+    elif mixer == "ssm":
+        mix = ssm_lib.ssm_apply(lp["mixer"], cfg.ssm, h)
+    else:
+        mix = hybrid_lib.hybrid_apply(lp["mixer"], cfg.hybrid_cfg(), h,
+                                      positions, window=window)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind == "none":
+        return x + mix, aux
+    if cfg.parallel_block:
+        f = h                              # command-r: shared input norm
+    else:
+        x = x + mix
+        f = norm_apply(lp["norm2"], x)
+    if ffn_kind == "dense":
+        fcfg = cfg.dense_ffn0 if (cfg.moe is not None
+                                  and cfg.dense_ffn0 is not None) else cfg.ffn
+        y = ffn_lib.ffn_apply(lp["ffn"], fcfg, f)
+    else:
+        y, aux = _moe_dispatch(lp["ffn"], cfg, f, mesh)
+    if cfg.parallel_block:
+        return x + mix + y, aux
+    return x + y, aux
+
+
+def _moe_dispatch(pf, cfg: LMConfig, f, mesh):
+    """Pick the MoE execution strategy: EP all-to-all (experts ≥ mesh axis),
+    TP experts (experts < mesh axis), or the auto-shardable dense path."""
+    if cfg.moe_impl == "shard_map" and mesh is not None:
+        if cfg.moe.sharding == "tp":
+            return ffn_lib.moe_apply_tp_shard_map(
+                pf, cfg.moe, f, mesh, tp_axis="model", sp_axis=_dp_axes())
+        return ffn_lib.moe_apply_shard_map(
+            pf, cfg.moe, f, mesh, ep_axis="model", sp_axis=_dp_axes())
+    return ffn_lib.moe_apply_dense(pf, cfg.moe, f)
+
+
+def _dp_axes():
+    from repro.distributed.sharding import mesh_axis_sizes
+    sizes = mesh_axis_sizes()
+    return tuple(a for a in BATCH_AXES if a in sizes) or ("data",)
+
+
+def _group_scan(gp, cfg: LMConfig, mixer, ffn_kind, layer_specs, x, positions,
+                mesh):
+    windows = jnp.asarray([ls.window for ls in layer_specs], jnp.int32)
+
+    def body(carry, xs):
+        xc, aux = carry
+        lp, win = xs
+        xc = constrain(xc, ACT_RESIDUAL)
+        xc, a = _layer_apply(lp, cfg, mixer, ffn_kind, xc, positions, win, mesh)
+        return (xc, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (gp, windows))
+    return x, aux
+
+
+def _embed_in(params, cfg: LMConfig, batch):
+    if cfg.frontend == "embeds":
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"]["embedding"], tokens, axis=0)
+    return x
+
+
+def _positions_for(cfg: LMConfig, b, s):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.attn is not None and cfg.attn.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[None], (3, b, s))   # text-equivalent stub
+    return pos
+
+
+def forward(params, cfg: LMConfig, batch, mesh=None):
+    """batch: {tokens|embeds} -> (logits (B,S,Vp), aux_loss)."""
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[:2]
+    positions = _positions_for(cfg, b, s)
+    x = constrain(x, ACT_RESIDUAL)
+    aux = jnp.zeros((), jnp.float32)
+    for gi, ((mixer, ffn_kind), layer_specs, _) in enumerate(cfg.groups()):
+        x, a = _group_scan(params[f"g{gi}"], cfg, mixer, ffn_kind, layer_specs,
+                           x, positions, mesh)
+        aux = aux + a
+    x = norm_apply(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["embedding"].T
+    else:
+        logits = x @ params["lm_head"]["w"]
+    logits = logits * cfg.logit_scale
+    logits = constrain(logits, P(BATCH_AXES, None, "model"))
+    return logits, aux
+
+
+def softmax_xent(logits, labels, cfg: LMConfig, z_loss: float = 1e-4):
+    """Mean NLL over tokens; pad-vocab slots masked; z-loss regulariser."""
+    lf = logits.astype(jnp.float32)
+    vm = _vocab_mask(cfg, jnp.float32)
+    if vm is not None:
+        lf = lf + vm
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    loss = nll.mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse ** 2)
+    return loss
+
+
+def loss_and_metrics(params, cfg: LMConfig, batch, mesh=None):
+    logits, aux = forward(params, cfg, batch, mesh)
+    loss = softmax_xent(logits, batch["labels"], cfg)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": jnp.asarray(batch["labels"].size, jnp.float32)}
+
+
+# --------------------------------------------------------------------- #
+# train step                                                            #
+# --------------------------------------------------------------------- #
+
+def make_train_step(cfg: LMConfig, optimizer, lr_fn, *, num_micro: int = 1,
+                    grad_clip: float = 1.0, mesh=None, param_specs=None,
+                    accum_dtype=jnp.float32):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``num_micro > 1`` runs gradient accumulation as a lax.scan over
+    microbatches (f32 accumulator tree, params closure) — live activations
+    scale with global_batch/num_micro, which is what lets 1M-token steps of
+    a 340B model fit 16 GB chips.  ``param_specs`` pins per-micro grads and
+    the accumulator to the parameter sharding so the data-axis reduction
+    lowers as reduce-scatter instead of full-size all-reduce (§Perf
+    hillclimb iteration 3)."""
+    from repro.optim import apply_updates, clip_by_global_norm
+
+    def loss_fn(p, mb):
+        return loss_and_metrics(p, cfg, mb, mesh)
+
+    def to_param_sharding(tree):
+        if param_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda g, sp: constrain(g, sp), tree, param_specs,
+            is_leaf=lambda x: not isinstance(x, dict))
+
+    def train_step(params, opt_state, batch, step):
+        lr = lr_fn(step)
+        if num_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = to_param_sharding(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(num_micro, x.shape[0] // num_micro,
+                                    *x.shape[1:]), batch)
+            mb = jax.tree.map(
+                lambda x: constrain(x, P(None, BATCH_AXES)), mb)
+
+            def micro(carry, m):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, m)
+                g = to_param_sharding(
+                    jax.tree.map(lambda x: x.astype(accum_dtype), g))
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            # accum_dtype=bf16 halves the two live grad buffers (accumulator
+            # + per-micro grads) — the 340B policy (§Perf iteration 5)
+            zeros = to_param_sharding(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / num_micro, gsum)
+            loss = lsum / num_micro
+            metrics = {"loss": loss}
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        upd, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = apply_updates(params, upd)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, out
+
+    return train_step
+
+
+# --------------------------------------------------------------------- #
+# serving: cache init / prefill / decode                                #
+# --------------------------------------------------------------------- #
+
+def _layer_cache_proto(cfg: LMConfig, mixer: str, batch: int, max_len: int):
+    if mixer == "attn":
+        return attn_lib.init_kv_cache(cfg.attn, batch, max_len, cfg.dtype)
+    if mixer == "ssm":
+        return ssm_lib.init_ssm_cache(cfg.ssm, batch, cfg.dtype)
+    return hybrid_lib.init_hybrid_cache(cfg.hybrid_cfg(), batch, max_len,
+                                        cfg.dtype)
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int):
+    """Per-group stacked decode caches (leading axis = layers in group).
+
+    SWA layers allocate only ``window`` slots (ring buffer) — a group mixing
+    window sizes allocates max(window, ...) per spec uniformity."""
+    caches = {}
+    for gi, ((mixer, _), layer_specs, _) in enumerate(cfg.groups()):
+        n = len(layer_specs)
+        wins = [ls.window for ls in layer_specs]
+        if mixer in ("attn", "hybrid") and all(w > 0 for w in wins):
+            eff_len = min(max_len, max(wins))
+        else:
+            eff_len = max_len
+        proto = _layer_cache_proto(cfg, mixer, batch, eff_len)
+        caches[f"g{gi}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), proto)
+    return caches
+
+
+def generic_cache_specs(abs_caches):
+    """Spec tree for any cache pytree (lm groups or whisper self/cross):
+    KV length / SSM heads shard over 'model', batch over ('pod','data')."""
+    def leaf(path, a):
+        names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        if "conv" in names:       # (L,B,K,convdim)
+            return P(None, BATCH_AXES, None, "model")
+        if "state" in names:      # (L,B,H,P,N)
+            return P(None, BATCH_AXES, "model", None, None)
+        if "pos" in names:        # (L,B,C)
+            return P(None, BATCH_AXES, "model")
+        # k/v/cross: (L,B,C,hkv,dh)
+        return P(None, BATCH_AXES, "model", None, None)
+
+    return jax.tree_util.tree_map_with_path(leaf, abs_caches)
+
+
+def cache_specs(cfg: LMConfig, batch: int, max_len: int):
+    abs_caches = jax.eval_shape(partial(init_caches, cfg, batch, max_len))
+    return generic_cache_specs(abs_caches)
+
+
+def make_serve_step(cfg: LMConfig, mesh=None):
+    """One-token decode: (params, caches, batch{tokens|embeds}, cur_pos) ->
+    (logits (B,1,Vp), new caches)."""
+
+    def serve_step(params, caches, batch, cur_pos):
+        caches = dict(caches)
+        x = _embed_in(params, cfg, batch)          # (B,1,D)
+        x = constrain(x, P(BATCH_AXES, None, None))
+        for gi, ((mixer, ffn_kind), layer_specs, _) in enumerate(cfg.groups()):
+            windows = jnp.asarray([ls.window for ls in layer_specs], jnp.int32)
+
+            def body(xc_cache, xs, mixer=mixer, ffn_kind=ffn_kind):
+                # caches ride in the CARRY and are updated in place with
+                # dynamic-update-slice — XLA aliases the (donated) buffer, so
+                # decode never holds a second copy of the multi-GB KV stack
+                xc, gcaches = xc_cache
+                lp, win, li = xs
+                cache = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(
+                        c, li, 0, keepdims=False), gcaches)
+                h = norm_apply(lp["norm1"], xc)
+                if mixer == "attn":
+                    mix, cache = attn_lib.decode_step(
+                        lp["mixer"], cfg.attn, h, cache, cur_pos, window=win)
+                elif mixer == "ssm":
+                    mix, cache = ssm_lib.ssm_decode_step(
+                        lp["mixer"], cfg.ssm, h, cache)
+                else:
+                    mix, cache = hybrid_lib.hybrid_decode_step(
+                        lp["mixer"], cfg.hybrid_cfg(), h, cache, cur_pos,
+                        window=win)
+                def write(gc):
+                    return jax.tree.map(
+                        lambda c, u: jax.lax.dynamic_update_index_in_dim(
+                            c, u.astype(c.dtype), li, 0), gc, cache)
+
+                if ffn_kind == "none":
+                    return (xc + mix, write(gcaches)), None
+                if cfg.parallel_block:
+                    f = h
+                else:
+                    xc = xc + mix
+                    f = norm_apply(lp["norm2"], xc)
+                if ffn_kind == "dense":
+                    fcfg = cfg.dense_ffn0 if (cfg.moe is not None and
+                                              cfg.dense_ffn0 is not None) \
+                        else cfg.ffn
+                    y = ffn_lib.ffn_apply(lp["ffn"], fcfg, f)
+                else:
+                    y, _ = ffn_lib.moe_apply_dense(lp["ffn"], cfg.moe, f)
+                out = xc + mix + y if cfg.parallel_block else xc + y
+                return (out, write(gcaches)), None
+
+            n_layers = len(layer_specs)
+            (x, caches[f"g{gi}"]), _ = jax.lax.scan(
+                body, (x, caches[f"g{gi}"]),
+                (params[f"g{gi}"], windows,
+                 jnp.arange(n_layers, dtype=jnp.int32)))
+        x = norm_apply(params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["embedding"].T
+        else:
+            logits = x @ params["lm_head"]["w"]
+        logits = logits * cfg.logit_scale
+        vm = _vocab_mask(cfg, logits.dtype)
+        if vm is not None:
+            logits = logits + vm
+        return logits, caches
+
+    return serve_step
+
+
+def prefill(params, cfg: LMConfig, batch, max_len: int, mesh=None):
+    """Full-prompt forward that also builds decode caches.
+
+    Returns (last-position logits (B,1,Vp), caches positioned after S)."""
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[:2]
+    positions = _positions_for(cfg, b, s)
+    x = constrain(x, ACT_RESIDUAL)
+    caches = init_caches(cfg, b, max_len)
+    for gi, ((mixer, ffn_kind), layer_specs, _) in enumerate(cfg.groups()):
+        windows = jnp.asarray([ls.window for ls in layer_specs], jnp.int32)
+        clen = jax.tree.leaves(caches[f"g{gi}"])[0].shape[2] \
+            if mixer != "ssm" else None
+
+        def body(xc, xs, mixer=mixer, ffn_kind=ffn_kind, clen=clen):
+            lp, win = xs
+            h = norm_apply(lp["norm1"], xc)
+            new_cache = None
+            if mixer == "attn":
+                mix, (k, v) = attn_lib.attention(
+                    lp["mixer"], cfg.attn, h, positions, window=win,
+                    return_kv=True)
+                new_cache = _kv_to_ring(k, v, s, clen)
+            elif mixer == "ssm":
+                mix, new_cache = ssm_lib.ssm_apply(
+                    lp["mixer"], cfg.ssm, h, return_cache=True)
+            else:
+                hc = cfg.hybrid_cfg()
+                ya, (k, v) = attn_lib.attention(
+                    lp["mixer"]["attn"], hc.attn, h, positions, window=win,
+                    return_kv=True)
+                ys, sc = ssm_lib.ssm_apply(lp["mixer"]["ssm"], hc.ssm, h,
+                                           return_cache=True)
+                beta = lp["mixer"]["beta"].astype(jnp.float32)
+                mix = (beta[0] * hybrid_lib._headnorm(
+                    lp["mixer"]["attn_out_norm"], ya).astype(jnp.float32)
+                    + beta[1] * hybrid_lib._headnorm(
+                        lp["mixer"]["ssm_out_norm"], ys).astype(jnp.float32)
+                ).astype(xc.dtype)
+                clen_a = clen
+                new_cache = {"attn": _kv_to_ring(k, v, s, clen_a), "ssm": sc}
+            if ffn_kind == "none":
+                return xc + mix, new_cache
+            if cfg.parallel_block:
+                f = h
+            else:
+                xc = xc + mix
+                f = norm_apply(lp["norm2"], xc)
+            if ffn_kind == "dense":
+                fcfg = cfg.dense_ffn0 if (cfg.moe is not None and
+                                          cfg.dense_ffn0 is not None) \
+                    else cfg.ffn
+                y = ffn_lib.ffn_apply(lp["ffn"], fcfg, f)
+            else:
+                y, _ = _moe_dispatch(lp["ffn"], cfg, f, mesh)
+            if cfg.parallel_block:
+                return xc + mix + y, new_cache
+            return xc + y, new_cache
+
+        x, caches[f"g{gi}"] = jax.lax.scan(
+            body, x, (params[f"g{gi}"], windows))
+    x = norm_apply(params["final_norm"], x[:, -1:])
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["embedding"].T
+    else:
+        logits = x @ params["lm_head"]["w"]
+    logits = logits * cfg.logit_scale
+    vm = _vocab_mask(cfg, logits.dtype)
+    if vm is not None:
+        logits = logits + vm
+    return logits, caches
+
+
+def _kv_to_ring(k, v, s: int, clen: int):
+    """Pack prefill (B,S,hkv,dh) k/v into the decode ring-buffer layout."""
+    b = k.shape[0]
+    take = min(s, clen)
+    pos_tail = np.arange(s - take, s)
+    slots = pos_tail % clen
+    ck = jnp.zeros((b, clen) + k.shape[2:], k.dtype)
+    cv = jnp.zeros((b, clen) + v.shape[2:], v.dtype)
+    cpos = jnp.full((b, clen), -1, jnp.int32)
+    ck = ck.at[:, slots].set(k[:, -take:])
+    cv = cv.at[:, slots].set(v[:, -take:])
+    cpos = cpos.at[:, slots].set(jnp.asarray(pos_tail, jnp.int32)[None])
+    return {"k": ck, "v": cv, "pos": cpos}

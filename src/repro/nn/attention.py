@@ -1,0 +1,297 @@
+"""Grouped-query attention with sliding-window, qk-norm, KV cache, and a
+memory-efficient chunked (online-softmax) path for long sequences.
+
+Layout conventions (TP-friendly):
+  * heads live on the 'model' mesh axis; all attention einsums keep the kv-head
+    axis as a batch dimension (GQA is computed grouped — KV is never repeated
+    to query-head count, saving Hq/Hkv × KV memory traffic);
+  * the output projection contracts the sharded head axis → GSPMD inserts the
+    single Megatron-style all-reduce per layer.
+
+The chunked path is a lax.scan over KV blocks with running (max, denom)
+accumulators — flash-attention restructured for XLA:TPU (the MXU consumes the
+per-chunk (Sq × Ck) score tiles; VMEM never holds the full S×S matrix). It is
+exact (tested against the dense path) and is what makes prefill_32k lowerable
+at 32k and SWA archs at 500k context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.common import dense_init, rms_head_norm
+from repro.nn.rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool = False
+    bias: bool = False                  # bias on ALL projections (whisper)
+    qkv_bias: bool = False              # bias on q/k/v only (qwen2-vl)
+    sliding_window: int | None = None   # None = full attention
+    softmax_scale: float | None = None
+    rope_kind: str = "rope"             # 'rope' | 'mrope' | 'none'
+    rope_theta: float = 1e4
+    mrope_sections: tuple = (16, 24, 24)
+
+
+def _apply_pos_emb(cfg: AttnConfig, q, k, positions):
+    """positions: (B,S) for rope, (3,B,S) for mrope.  q (B,S,Hkv,G,dh)."""
+    if cfg.rope_kind == "none":
+        return q, k
+    b, s, hkv, g, dh = q.shape
+    qf = q.reshape(b, s, hkv * g, dh)
+    if cfg.rope_kind == "rope":
+        qf, k = apply_rope(qf, k, positions, dh, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        qf, k = apply_mrope(qf, k, positions, dh, cfg.rope_theta,
+                            cfg.mrope_sections)
+    else:
+        raise ValueError(cfg.rope_kind)
+    return qf.reshape(b, s, hkv, g, dh), k
+
+
+def attn_init(key, cfg: AttnConfig, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    params, specs = {}, {}
+    in_bias = cfg.bias or cfg.qkv_bias
+    for name, k, od in (("wq", kq, hq * dh), ("wk", kk, hkv * dh),
+                        ("wv", kv, hkv * dh)):
+        p, s = dense_init(k, d, od, dtype, P("data", "model"), bias=in_bias)
+        params[name], specs[name] = p, s
+    p, s = dense_init(ko, hq * dh, d, dtype, P("model", "data"), bias=cfg.bias,
+                      stddev=(hq * dh) ** -0.5)
+    params["wo"], specs["wo"] = p, s
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((dh,), dtype)
+        params["k_norm"] = jnp.ones((dh,), dtype)
+        specs["q_norm"] = P(None)
+        specs["k_norm"] = P(None)
+    return params, specs
+
+
+def qkv_project(p, cfg: AttnConfig, x):
+    """x (B,S,D) -> q (B,S,Hkv,G,dh), k,v (B,S,Hkv,dh).
+
+    The flat projection outputs are pinned to the 'model' axis (head/TP
+    sharding) BEFORE the head reshape so the backward builds (D, H·dh/tp)
+    weight grads instead of full matrices + full-size all-reduces
+    (§Perf hillclimb iteration 2; same reasoning as ffn._tp_inner)."""
+    b, s, _ = x.shape
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = _tp_cols(x @ p["wq"]["w"], s) \
+        .reshape(b, s, cfg.n_kv_heads, g, cfg.d_head)
+    k = _tp_cols(x @ p["wk"]["w"], s) \
+        .reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = _tp_cols(x @ p["wv"]["w"], s) \
+        .reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.bias or cfg.qkv_bias:
+        q = q + p["wq"]["b"].reshape(cfg.n_kv_heads, g, cfg.d_head)
+        k = k + p["wk"]["b"].reshape(cfg.n_kv_heads, cfg.d_head)
+        v = v + p["wv"]["b"].reshape(cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def out_project(p, cfg: AttnConfig, o):
+    """o (B,S,Hkv,G,dh) -> (B,S,D)."""
+    b, s = o.shape[:2]
+    of = _tp_cols(o.reshape(b, s, cfg.n_heads * cfg.d_head), s)
+    y = of @ p["wo"]["w"]
+    if cfg.bias:
+        y = y + p["wo"]["b"]
+    return y
+
+
+def _tp_cols(h, s):
+    """Pin flat head columns to 'model' (training/prefill only — decode's
+    1-token projections stay replicated to keep the KV cache C-sharded).
+    Width-gated like ffn._tp_inner: narrow projections (small models, GQA
+    K/V) don't amortise the resharding."""
+    from repro.distributed.sharding import (BATCH_AXES, TP_INNER_MIN_COLS,
+                                            constrain)
+    if s == 1 or h.shape[-1] < TP_INNER_MIN_COLS:
+        return h
+    from jax.sharding import PartitionSpec
+    return constrain(h, PartitionSpec(BATCH_AXES, None, "model"))
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window, dtype):
+    """(Sq, Sk) additive mask from absolute positions.
+
+    ``window`` may be None (full), a static int, or a *traced* int32 scalar
+    where <= 0 means full attention — the traced form is what lets a scan
+    over layers mix SWA and global layers (hymba) under one stacked body.
+    Negative kv positions are UNIVERSALLY invalid (chunk/ring padding)."""
+    dpos = q_pos[:, None] - kv_pos[None, :]
+    ok = kv_pos[None, :] >= 0
+    if causal:
+        ok &= dpos >= 0
+    if window is not None:
+        if isinstance(window, (int, np.integer)):
+            if window > 0:
+                ok &= dpos < window
+        else:  # traced scalar
+            ok &= jnp.where(window > 0, dpos < window, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def attend_dense(q, k, v, q_pos, kv_pos, *, causal: bool, window: int | None,
+                 scale: float):
+    """Reference/short-seq path. q (B,Sq,Hkv,G,dh), k/v (B,Sk,Hkv,dh)."""
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) * scale
+    scores = scores.astype(jnp.float32) + _mask_bias(
+        q_pos, kv_pos, causal, window, jnp.float32)[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def attend_chunked(q, k, v, q_pos, kv_pos, *, causal: bool, window: int | None,
+                   scale: float, chunk: int = 1024):
+    """Exact online-softmax attention, scanned over KV chunks.
+
+    Memory: O(Sq · chunk) score tile instead of O(Sq · Sk)."""
+    b, sq, hkv, g, dh = q.shape
+    sk = k.shape[1]
+    if sk % chunk:
+        pad = (-sk) % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)  # < 0: invalid
+        sk += pad
+    nc = sk // chunk
+    kc = k.reshape(b, nc, chunk, hkv, dh)
+    vc = v.reshape(b, nc, chunk, hkv, dh)
+    pc = kv_pos.reshape(nc, chunk)
+
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inputs):
+        m, l, acc = carry                     # (B,Hkv,G,Sq), same, (B,Sq,Hkv,G,dh)
+        kb, vb, pb = inputs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(jnp.float32)) * scale
+        s = s + _mask_bias(q_pos, pb, causal, window, jnp.float32)[None, None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p_.sum(axis=-1)
+        acc = acc * jnp.moveaxis(alpha, 3, 1)[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bqhgd", p_, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / jnp.moveaxis(l, 3, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+_USE_CFG = object()
+
+
+def attention(p, cfg: AttnConfig, x, positions, *, causal: bool = True,
+              chunked_threshold: int = 2048, kv_override=None,
+              kv_positions=None, window=_USE_CFG, return_kv: bool = False):
+    """Full-sequence attention (training / prefill / cross-attention).
+
+    ``kv_override=(k, v)`` turns this into cross-attention (whisper decoder):
+    q comes from x, kv from the encoder output projections.
+    ``window`` may be a traced scalar (hybrid archs mix SWA/global layers
+    under one scanned block) — default uses cfg.sliding_window.
+    ``return_kv=True`` also returns the post-rope (k, v) — the prefill path
+    turns them into the decode cache."""
+    scale = cfg.softmax_scale or cfg.d_head ** -0.5
+    if window is _USE_CFG:
+        window = cfg.sliding_window
+    q, k, v = qkv_project(p, cfg, x)
+    if kv_override is not None:
+        k, v = kv_override
+    else:
+        q, k = _apply_pos_emb(cfg, q, k, positions)
+    mpos = positions[0] if cfg.rope_kind == "mrope" else positions
+    q_pos = mpos[0]                       # mask positions, shared across batch
+    kv_pos = kv_positions if kv_positions is not None else q_pos
+    if k.shape[1] > chunked_threshold:
+        o = attend_chunked(q, k, v, q_pos, kv_pos, causal=causal,
+                           window=window, scale=scale)
+    else:
+        o = attend_dense(q, k, v, q_pos, kv_pos, causal=causal,
+                         window=window, scale=scale)
+    y = out_project(p, cfg, o)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# --------------------------------------------------------------------- #
+# decode with KV cache                                                  #
+# --------------------------------------------------------------------- #
+
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype):
+    """Cache length for SWA layers is bounded by the window (ring buffer)."""
+    clen = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, clen, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((batch, clen), -1, jnp.int32)}
+
+
+def decode_step(p, cfg: AttnConfig, x, cache, cur_pos, window=_USE_CFG):
+    """One-token decode. x (B,1,D); cur_pos (B,) absolute position.
+
+    Ring-buffer insert at cur_pos % cache_len; the stored absolute positions
+    drive the mask, so SWA and full attention share one code path."""
+    scale = cfg.softmax_scale or cfg.d_head ** -0.5
+    if window is _USE_CFG:
+        window = cfg.sliding_window
+    q, k_new, v_new = qkv_project(p, cfg, x)
+    if cfg.rope_kind == "mrope":
+        rope_pos = jnp.broadcast_to(cur_pos[None, :, None], (3, x.shape[0], 1))
+    else:
+        rope_pos = cur_pos[:, None]
+    q, k_new = _apply_pos_emb(cfg, q, k_new, rope_pos)
+    clen = cache["k"].shape[1]
+    slot = (cur_pos % clen).astype(jnp.int32)                     # (B,)
+    bidx = jnp.arange(x.shape[0])
+    # NOTE: XLA:CPU float-normalises bf16 scatter/DUS through f32 (visible
+    # as a full-cache convert round-trip in dry-run HLO); XLA:TPU executes
+    # bf16 cache updates natively — EXPERIMENTS.md §Dry-run quantifies the
+    # delta.  A one-hot select variant measured strictly worse on CPU.
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    pos = cache["pos"].at[bidx, slot].set(cur_pos)
+    # scores over the whole ring buffer; invalid slots have pos == -1.
+    # K stays in cache dtype with f32 ACCUMULATION (preferred_element_type):
+    # upcasting the ring would chain an f32 copy of the whole cache through
+    # the layer-scan carry (observed as a 9 GiB convert+DUS in the dry-run).
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale     # (B,Hkv,G,1,C)
+    dpos = cur_pos[:, None] - pos                                  # (B,C)
+    ok = (pos >= 0) & (dpos >= 0)
+    if window is not None:
+        if isinstance(window, (int, np.integer)):
+            if window > 0:
+                ok &= dpos < window
+        else:  # traced scalar; <= 0 means full attention
+            ok &= jnp.where(window > 0, dpos < window, True)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(x.dtype), v)
+    return out_project(p, cfg, o), {"k": k, "v": v, "pos": pos}

@@ -1,0 +1,117 @@
+"""Shared NN building blocks (functional, param-trees as nested dicts).
+
+Every init function returns ``(params, specs)`` where ``specs`` mirrors the
+param tree with ``jax.sharding.PartitionSpec`` leaves — the distribution layer
+consumes the spec tree directly, so sharding is declared where parameters are
+born instead of via path-regex guessing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def truncated_normal_init(key, shape, dtype, stddev):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype) * stddev
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, spec: P,
+               stddev: float | None = None, bias: bool = False,
+               bias_spec: P | None = None):
+    """Weight (in, out) + optional bias (out,)."""
+    stddev = stddev if stddev is not None else in_dim ** -0.5
+    w = truncated_normal_init(key, (in_dim, out_dim), dtype, stddev)
+    params, specs = {"w": w}, {"w": spec}
+    if bias:
+        params["b"] = jnp.zeros((out_dim,), dtype)
+        specs["b"] = bias_spec if bias_spec is not None else P(spec[-1])
+    return params, specs
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --------------------------------------------------------------------- #
+# norms                                                                 #
+# --------------------------------------------------------------------- #
+
+def norm_init(dim: int, dtype, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}, {"scale": P(None)}
+    elif kind == "layernorm":
+        return ({"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+                {"scale": P(None), "bias": P(None)})
+    raise ValueError(kind)
+
+
+def norm_apply(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm (Qwen3): normalise the last (head_dim) axis."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# embedding                                                             #
+# --------------------------------------------------------------------- #
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    w = truncated_normal_init(key, (vocab, dim), dtype, 1.0)
+    return {"embedding": w}, {"embedding": P("model", "data")}
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def embed_attend(p, x):
+    """Tied readout: logits = x @ E^T."""
+    return x @ p["embedding"].T
+
+
+# --------------------------------------------------------------------- #
+# misc                                                                  #
+# --------------------------------------------------------------------- #
+
+def sinusoidal_positions(seq: int, dim: int, dtype=jnp.float32):
+    pos = np.arange(seq)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+FFN_ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": squared_relu,
+    "relu": jax.nn.relu,
+}

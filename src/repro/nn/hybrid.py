@@ -1,0 +1,98 @@
+"""Hymba-style hybrid block: attention heads and SSM (Mamba2) heads run in
+PARALLEL on the same input and their outputs are fused.
+
+This is the paper's construction applied inside one transformer layer
+(DESIGN.md §4.3): the attention path and the SSM path are two *independent
+sub-networks sharing an input*, exactly like two members of a ParallelMLP
+population.  Their parameters receive gradients only through their own
+output — fusing them costs nothing in correctness and buys one pass over
+the input activations (the paper's locality argument).
+
+Fusion follows Hymba (arXiv 2411.13676 §2.1): each path's output is
+RMS-normalised (so magnitudes are comparable) and combined with learned
+per-path scalars β:
+
+    y = β_attn · norm(attn_path(x)) + β_ssm · norm(ssm_path(x))
+
+(each path includes its own output projection).
+
+The attention sub-path reuses repro.nn.attention (GQA + SWA + cache); the
+SSM sub-path reuses repro.nn.ssm (chunked SSD).  Both caches live side by
+side in the layer cache — the SWA ring buffer is bounded and the SSM state
+is O(1), which is what makes hymba a `long_500k` arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import attention as attn_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.attention import AttnConfig
+from repro.nn.ssm import SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    attn: AttnConfig
+    ssm: SSMConfig
+
+    @property
+    def d_model(self) -> int:
+        return self.attn.d_model
+
+
+def _headnorm(scale, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def hybrid_init(key, cfg: HybridConfig, dtype):
+    ka, ks = jax.random.split(key)
+    pa, sa = attn_lib.attn_init(ka, cfg.attn, dtype)
+    ps, ss = ssm_lib.ssm_init(ks, cfg.ssm, dtype)
+    params = {
+        "attn": pa, "ssm": ps,
+        "attn_out_norm": jnp.ones((cfg.d_model,), dtype),
+        "ssm_out_norm": jnp.ones((cfg.d_model,), dtype),
+        "beta": jnp.ones((2,), jnp.float32),
+    }
+    specs = {
+        "attn": sa, "ssm": ss,
+        "attn_out_norm": P(None), "ssm_out_norm": P(None),
+        "beta": P(None),
+    }
+    return params, specs
+
+
+def hybrid_apply(p, cfg: HybridConfig, x, positions, *, window=attn_lib._USE_CFG):
+    """Full-sequence mixer. x (B,S,D) -> (B,S,D)."""
+    ya = attn_lib.attention(p["attn"], cfg.attn, x, positions, window=window)
+    ys = ssm_lib.ssm_apply(p["ssm"], cfg.ssm, x)
+    beta = p["beta"].astype(jnp.float32)
+    out = (beta[0] * _headnorm(p["attn_out_norm"], ya).astype(jnp.float32)
+           + beta[1] * _headnorm(p["ssm_out_norm"], ys).astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def init_hybrid_cache(cfg: HybridConfig, batch: int, max_len: int, dtype):
+    return {
+        "attn": attn_lib.init_kv_cache(cfg.attn, batch, max_len, dtype),
+        "ssm": ssm_lib.init_ssm_cache(cfg.ssm, batch, dtype),
+    }
+
+
+def hybrid_decode_step(p, cfg: HybridConfig, x, cache, cur_pos,
+                       window=attn_lib._USE_CFG):
+    """One-token decode through both paths. x (B,1,D)."""
+    ya, attn_cache = attn_lib.decode_step(p["attn"], cfg.attn, x, cache["attn"],
+                                          cur_pos, window=window)
+    ys, ssm_cache = ssm_lib.ssm_decode_step(p["ssm"], cfg.ssm, x, cache["ssm"])
+    beta = p["beta"].astype(jnp.float32)
+    out = (beta[0] * _headnorm(p["attn_out_norm"], ya).astype(jnp.float32)
+           + beta[1] * _headnorm(p["ssm_out_norm"], ys).astype(jnp.float32))
+    return out.astype(x.dtype), {"attn": attn_cache, "ssm": ssm_cache}

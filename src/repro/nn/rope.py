@@ -1,0 +1,51 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the head_dim/2 frequency bands into (temporal, height, width)
+sections; each section rotates by its own position stream.  For pure text the
+three streams coincide and M-RoPE == RoPE (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def _rotate(x, cos, sin):
+    # x (..., d); pairs are (even, odd) interleaved as two halves
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(q, k, positions, head_dim: int, theta: float = 1e4):
+    """q (B,S,Hq,d), k (B,S,Hk,d), positions (B,S) int32."""
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta), jnp.float32)  # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs               # (B,S,d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return (_rotate(q.astype(jnp.float32), cos, sin).astype(q.dtype),
+            _rotate(k.astype(jnp.float32), cos, sin).astype(k.dtype))
+
+
+def apply_mrope(q, k, positions3, head_dim: int, theta: float = 1e6,
+                sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE. positions3 (3,B,S): temporal/height/width streams.
+
+    ``sections`` partitions the d/2 frequency bands; section j's bands take
+    their rotation angle from position stream j."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta), jnp.float32)  # (d/2,)
+    # angle per stream then select per band section
+    ang_streams = positions3.astype(jnp.float32)[..., None] * freqs      # (3,B,S,d/2)
+    sec_id = np.repeat(np.arange(3), sections)                           # (d/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_streams, 0, -1),                                # (B,S,d/2,3)
+        jnp.asarray(sec_id)[None, None, :, None], axis=-1)[..., 0]       # (B,S,d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return (_rotate(q.astype(jnp.float32), cos, sin).astype(q.dtype),
+            _rotate(k.astype(jnp.float32), cos, sin).astype(k.dtype))

@@ -1,0 +1,236 @@
+"""Mamba2 — state-space duality (SSD), chunked (arXiv 2405.21060 §6).
+
+The SSD algorithm computes a selective-SSM scan as: quadratic attention-like
+matmuls *within* chunks + a low-rank state recurrence *between* chunks.  On
+TPU this is the right decomposition for the same reason the paper's M3 is
+(DESIGN.md §2): everything becomes dense MXU matmuls over chunk-sized tiles,
+with the only sequential dependency carried through an (H, P, N) state —
+O(S/Q) scan steps instead of O(S).
+
+Shapes: x (B,S,H,P) heads×headdim, A (H,) decay rates, B̃/C̃ (B,S,G,N)
+state projections (G groups broadcast to H heads), dt (B,S,H) step sizes.
+Decode keeps a recurrent state (B,H,P,N) + a depthwise-conv ring buffer —
+constant memory at 500k context, which is why mamba2/hymba own `long_500k`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.common import dense_init, norm_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def proj_dim(self) -> int:
+        # [z (gate), x, B, C, dt]
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def ssm_init(key, cfg: SSMConfig, dtype):
+    kin, kconv, kdt, ka, kout = jax.random.split(key, 5)
+    params, specs = {}, {}
+    p, s = dense_init(kin, cfg.d_model, cfg.proj_dim, dtype, P("data", "model"))
+    params["in_proj"], specs["in_proj"] = p, s
+    params["conv_w"] = jax.random.normal(
+        kconv, (cfg.d_conv, cfg.conv_dim), dtype) * cfg.d_conv ** -0.5
+    params["conv_b"] = jnp.zeros((cfg.conv_dim,), dtype)
+    specs["conv_w"], specs["conv_b"] = P(None, "model"), P("model")
+    # dt bias: softplus^-1 of uniform [dt_min, dt_max] (mamba2 init)
+    u = jax.random.uniform(kdt, (cfg.n_heads,), jnp.float32)
+    dt0 = jnp.exp(u * (np.log(cfg.dt_max) - np.log(cfg.dt_min)) + np.log(cfg.dt_min))
+    params["dt_bias"] = (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(jnp.float32)
+    specs["dt_bias"] = P("model")
+    params["A_log"] = jnp.log(jax.random.uniform(ka, (cfg.n_heads,), jnp.float32,
+                                                 1.0, 16.0))
+    params["D"] = jnp.ones((cfg.n_heads,), jnp.float32)
+    specs["A_log"], specs["D"] = P("model"), P("model")
+    params["norm_scale"] = jnp.ones((cfg.d_inner,), dtype)
+    specs["norm_scale"] = P("model")
+    p, s = dense_init(kout, cfg.d_inner, cfg.d_model, dtype, P("model", "data"),
+                      stddev=cfg.d_inner ** -0.5)
+    params["out_proj"], specs["out_proj"] = p, s
+    return params, specs
+
+
+def _segsum(x):
+    """x (..., L) -> (..., L, L) with out[i,j] = sum_{j<k<=i} x[k], -inf above diag."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((l, l), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int, initial_state=None):
+    """Chunked SSD.  x (B,S,H,P), dt (B,S,H) (post-softplus), a (H,) negative,
+    b/c (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bs, s, h, p_ = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xf = (x * dt[..., None]).astype(jnp.float32)           # dt-weighted input
+    adt = (a[None, None, :] * dt).astype(jnp.float32)      # (B,S,H)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    # chunked views
+    xc = xf.reshape(bs, nc, chunk, h, p_)
+    ac = adt.reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2)   # (B,H,C,L)
+    bc = bf.reshape(bs, nc, chunk, g, n)
+    cc = cf.reshape(bs, nc, chunk, g, n)
+    # broadcast groups to heads
+    bch = jnp.repeat(bc, rep, axis=3)                           # (B,C,L,H,N)
+    cch = jnp.repeat(cc, rep, axis=3)
+
+    a_cs = jnp.cumsum(ac, axis=-1)                              # (B,H,C,L)
+
+    # 1. intra-chunk (quadratic, attention-like)
+    ldecay = jnp.exp(_segsum(ac))                               # (B,H,C,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        cch, bch, ldecay, xc)
+
+    # 2. chunk states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)               # (B,H,C,L)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bch, decay_states, xc)
+
+    # 3. inter-chunk recurrence over chunk states
+    if initial_state is None:
+        initial_state = jnp.zeros((bs, h, p_, n), jnp.float32)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)
+    # (B, C+1, H, P, N)
+    chunk_sum = a_cs[..., -1]                                   # (B,H,C)
+    decay_chunk = jnp.exp(_segsum(jnp.pad(chunk_sum, ((0, 0), (0, 0), (1, 0)))))
+    decay_chunk = jnp.where(jnp.isfinite(decay_chunk), decay_chunk, 0.0)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    states_in, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output within chunk
+    state_decay_out = jnp.exp(a_cs)                             # (B,H,C,L)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cch, states_in,
+                       state_decay_out)
+
+    y = (y_diag + y_off).reshape(bs, s, h, p_).astype(x.dtype)
+    return y, final_state
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: SSMConfig, xbc, batch_shape):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xbc[..., :di].reshape(*batch_shape, cfg.n_heads, cfg.head_dim)
+    b = xbc[..., di: di + gn].reshape(*batch_shape, cfg.n_groups, cfg.d_state)
+    c = xbc[..., di + gn:].reshape(*batch_shape, cfg.n_groups, cfg.d_state)
+    return x, b, c
+
+
+def ssm_apply(p, cfg: SSMConfig, u, *, return_cache: bool = False):
+    """Full-sequence Mamba2 mixer. u (B,S,D) -> (B,S,D).
+
+    ``return_cache=True`` additionally returns the decode cache after the
+    last position (prefill: final SSM state + conv ring tail)."""
+    bs, s, _ = u.shape
+    z, xbc_raw, dt = _split_proj(cfg, u @ p["in_proj"]["w"])
+    # causal depthwise conv over seq
+    xbc_pad = jnp.pad(xbc_raw, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i: i + s] * p["conv_w"][i][None, None, :]
+               for i in range(cfg.d_conv)) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    x, b, c = _split_xbc(cfg, xbc, (bs, s))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    pad = (-s) % cfg.chunk
+    if pad:
+        # pad seq to a chunk multiple with dt=0 — exp(a·0)=1 and x·dt=0, so
+        # padded steps are exact identities on the state (prefill stays exact)
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bp = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cp = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, final_state = ssd_scan(xp, dtp, a, bp, cp, cfg.chunk)
+        y = y[:, :s]
+    else:
+        y, final_state = ssd_scan(x, dt, a, b, c, cfg.chunk)
+    y = y + x * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bs, s, cfg.d_inner)
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = norm_apply({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    out = y @ p["out_proj"]["w"]
+    if return_cache:
+        cache = {"conv": xbc_pad[:, s: s + cfg.d_conv - 1]
+                 if s >= cfg.d_conv - 1 else xbc_pad[:, -(cfg.d_conv - 1):],
+                 "state": final_state}
+        return out, cache
+    return out
+
+
+# --------------------------------------------------------------------- #
+# decode                                                                #
+# --------------------------------------------------------------------- #
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+    }
+
+
+def ssm_decode_step(p, cfg: SSMConfig, u, cache):
+    """One token. u (B,1,D).  O(1) state update — no KV growth."""
+    bs = u.shape[0]
+    z, xbc_new, dt = _split_proj(cfg, u[:, 0] @ p["in_proj"]["w"])
+    window = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)  # (B,K,C)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    x, b, c = _split_xbc(cfg, xbc, (bs,))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["A_log"])                                      # (H,)
+    rep = cfg.n_heads // cfg.n_groups
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)           # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(a[None] * dt)                                 # (B,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]                   # (B,H,P)
+    state = cache["state"] * decay[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xdt, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch).astype(u.dtype)
+    y = y + x * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(bs, cfg.d_inner)
+    y = norm_apply({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    out = (y @ p["out_proj"]["w"])[:, None]
+    return out, {"conv": window[:, 1:], "state": state}

@@ -1,0 +1,12 @@
+"""Optimizers + schedules (optax-free, sharding-aware)."""
+from repro.optim.optimizers import (OPTIMIZERS, SCHEDULES, Optimizer,
+                                    adafactor, adamw, apply_updates,
+                                    clip_by_global_norm, constant_lr,
+                                    global_norm, make_optimizer, sgd,
+                                    tree_cast, tree_zeros_like, warmup_cosine)
+
+__all__ = [
+    "OPTIMIZERS", "SCHEDULES", "Optimizer", "adafactor", "adamw",
+    "apply_updates", "clip_by_global_norm", "constant_lr", "global_norm",
+    "make_optimizer", "sgd", "tree_cast", "tree_zeros_like", "warmup_cosine",
+]

@@ -1,0 +1,260 @@
+"""Optimizers — functional, tree-based, sharding-preserving.
+
+No optax in this environment; these are minimal-but-production
+implementations with the features the assigned scales require:
+
+  * ``sgd``        — momentum optional; the paper trains with plain SGD.
+  * ``adamw``      — decoupled weight decay; *state dtype policy* (m/v can be
+    bf16 — halves optimizer HBM, needed ≥70B params on 16 GB v5e chips).
+  * ``adafactor``  — factored second moment (row/col statistics, O(n+m) per
+    matrix) with bf16 momentum; what makes nemotron-4-340b's optimizer state
+    fit 256×16 GB.
+
+API: ``Optimizer(init, update, state_specs)``.
+  init(params) -> state
+  update(grads, state, params, lr) -> (updates, new_state)   # updates: deltas
+  state_specs(param_specs, abstract_params) -> spec tree matching state
+
+``state_specs`` needs the *abstract* params (shapes) because adafactor's
+state structure depends on each leaf's rank.  Every state leaf inherits its
+sharding from the param leaf it tracks (factored leaves drop the reduced
+dim's axis), so FSDP-sharded params get FSDP-sharded optimizer state — ZeRO
+for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _is_spec(x):
+    return isinstance(x, P)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]
+    state_specs: Callable[[Any, Any], Any]
+
+
+# --------------------------------------------------------------------- #
+# SGD                                                                   #
+# --------------------------------------------------------------------- #
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        st = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = tree_zeros_like(params, jnp.float32)
+        return st
+
+    def update(grads, state, params, lr):
+        if not momentum:
+            upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+            return upd, {"count": state["count"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)),
+                mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, mu)
+        return upd, {"count": state["count"] + 1, "mu": mu}
+
+    def state_specs(param_specs, abstract_params):
+        st = {"count": P()}
+        if momentum:
+            st["mu"] = param_specs
+        return st
+
+    return Optimizer(init, update, state_specs)
+
+
+# --------------------------------------------------------------------- #
+# AdamW                                                                 #
+# --------------------------------------------------------------------- #
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    """state_dtype=bf16 halves m/v HBM; the moment math stays f32."""
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": tree_zeros_like(params, state_dtype),
+                "v": tree_zeros_like(params, state_dtype)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** cf
+        bc2 = 1.0 - b2 ** cf
+
+        def leaf(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step, m32.astype(state_dtype), v32.astype(state_dtype)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        out = [leaf(g, m, v, p) for g, m, v, p in zip(
+            flat_g, tdef.flatten_up_to(state["m"]),
+            tdef.flatten_up_to(state["v"]), tdef.flatten_up_to(params))]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"count": c,
+                 "m": tdef.unflatten([o[1] for o in out]),
+                 "v": tdef.unflatten([o[2] for o in out])})
+
+    def state_specs(param_specs, abstract_params):
+        return {"count": P(), "m": param_specs, "v": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+# --------------------------------------------------------------------- #
+# Adafactor (factored v, optional bf16 momentum)                        #
+# --------------------------------------------------------------------- #
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor(b2: float = 0.99, eps: float = 1e-30, momentum: float = 0.9,
+              momentum_dtype=jnp.bfloat16, weight_decay: float = 0.0,
+              clip_threshold: float = 1.0) -> Optimizer:
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                st = {"v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                      "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            else:
+                st = {"v": jnp.zeros(p.shape, jnp.float32)}
+            if momentum:
+                st["m"] = jnp.zeros(p.shape, momentum_dtype)
+            return st
+        return {"count": jnp.zeros((), jnp.int32),
+                "leaves": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+
+        def leaf(g, st, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            new_st = {}
+            if "v" in st:
+                v = b2 * st["v"] + (1 - b2) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                new_st["v"] = v
+            else:
+                v_row = b2 * st["v_row"] + (1 - b2) * g2.mean(-1)
+                v_col = b2 * st["v_col"] + (1 - b2) * g2.mean(-2)
+                r = v_row / jnp.maximum(v_row.mean(-1, keepdims=True), eps)
+                u = gf * jax.lax.rsqrt(
+                    r[..., None] * v_col[..., None, :] + eps)
+                new_st["v_row"], new_st["v_col"] = v_row, v_col
+            u_rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, u_rms / clip_threshold)
+            if momentum:
+                m = momentum * st["m"].astype(jnp.float32) + (1 - momentum) * u
+                new_st["m"] = m.astype(momentum_dtype)
+                u = m
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr * u, new_st
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        is_state_leaf = lambda x: isinstance(x, dict) and (
+            "v" in x or "v_row" in x)
+        flat_st = jax.tree.flatten(state["leaves"], is_leaf=is_state_leaf)[0]
+        out = [leaf(g, s, p) for g, s, p in
+               zip(flat_g, flat_st, tdef.flatten_up_to(params))]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"count": c, "leaves": tdef.unflatten([o[1] for o in out])})
+
+    def state_specs(param_specs, abstract_params):
+        def leaf(spec, p):
+            if not _is_spec(spec):
+                spec = P()
+            axes = list(spec) + [None] * (len(p.shape) - len(spec))
+            st = {}
+            if _factored(p.shape):
+                st["v_row"] = P(*axes[:-1])
+                st["v_col"] = P(*(axes[:-2] + axes[-1:]))
+            else:
+                st["v"] = P(*axes)
+            if momentum:
+                st["m"] = P(*axes)
+            return st
+        return {"count": P(),
+                "leaves": jax.tree.map(leaf, param_specs, abstract_params,
+                                       is_leaf=_is_spec)}
+
+    return Optimizer(init, update, state_specs)
+
+
+OPTIMIZERS = {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)
+
+
+def apply_updates(params, updates):
+    """params += updates (updates f32; cast back to the param dtype)."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+# --------------------------------------------------------------------- #
+# LR schedules                                                          #
+# --------------------------------------------------------------------- #
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+    return lr
+
+
+def constant_lr(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant_lr}

@@ -1,0 +1,108 @@
+"""Attention: chunked==dense (exactness of the online-softmax path), SWA
+masks, GQA grouping, decode-vs-full consistency, RoPE/M-RoPE equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import (AttnConfig, attn_init, attention, decode_step,
+                                init_kv_cache)
+from repro.nn.rope import apply_mrope, apply_rope
+
+
+def _setup(window=None, qk_norm=False, kv=2, rope="rope"):
+    cfg = AttnConfig(d_model=48, n_heads=6, n_kv_heads=kv, d_head=8,
+                     qk_norm=qk_norm, sliding_window=window, rope_kind=rope,
+                     mrope_sections=(1, 1, 2))
+    p, _ = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, p
+
+
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("seq", [8, 33, 64])
+def test_chunked_equals_dense(window, seq):
+    cfg, p = _setup(window=window)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, seq, 48))
+    pos = jnp.broadcast_to(jnp.arange(seq)[None], (2, seq))
+    dense = attention(p, cfg, x, pos, chunked_threshold=10**9)
+    chunked = attention(p, cfg, x, pos, chunked_threshold=1)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_swa_masks_far_tokens():
+    """With window w, output at position t must not depend on tokens < t-w+1."""
+    cfg, p = _setup(window=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 48))
+    pos = jnp.arange(16)[None]
+    base = attention(p, cfg, x, pos)
+    x2 = x.at[0, 0].add(100.0)       # perturb token 0
+    out2 = attention(p, cfg, x2, pos)
+    # positions >= 4 cannot see token 0
+    np.testing.assert_allclose(np.asarray(out2[0, 4:]),
+                               np.asarray(base[0, 4:]), atol=1e-4)
+    assert not np.allclose(np.asarray(out2[0, 1]), np.asarray(base[0, 1]))
+
+
+def test_causality():
+    cfg, p = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 12, 48))
+    pos = jnp.arange(12)[None]
+    base = attention(p, cfg, x, pos)
+    x2 = x.at[0, -1].add(10.0)       # future token
+    out2 = attention(p, cfg, x2, pos)
+    np.testing.assert_allclose(np.asarray(out2[0, :-1]),
+                               np.asarray(base[0, :-1]), atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_decode_matches_full(window):
+    cfg, p = _setup(window=window, qk_norm=True)
+    S = 12
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, S, 48))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (2, S))
+    full = attention(p, cfg, x, pos)
+    cache = init_kv_cache(cfg, 2, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = decode_step(p, cfg, x[:, t:t + 1], cache,
+                               jnp.full((2,), t, jnp.int32))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+    if window:   # ring buffer bounded by the window
+        assert cache["k"].shape[1] == window
+
+
+def test_mrope_equals_rope_for_text():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 2, 8))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    q1, k1 = apply_rope(q, k, pos, 8, 1e4)
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    q2, k2 = apply_mrope(q, k, pos3, 8, 1e4, sections=(1, 1, 2))
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), atol=1e-6)
+
+
+def test_gqa_grouping_matches_repeated_kv():
+    """GQA grouped einsum == repeating KV to query heads."""
+    cfg, p = _setup(kv=2)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 10, 48))
+    pos = jnp.arange(10)[None]
+    from repro.nn.attention import qkv_project, attend_dense, out_project, _apply_pos_emb
+    q, k, v = qkv_project(p, cfg, x)
+    q, k = _apply_pos_emb(cfg, q, k, pos)
+    o1 = attend_dense(q, k, v, pos[0], pos[0], causal=True, window=None,
+                      scale=cfg.d_head ** -0.5)
+    # repeat kv to full head count, run as MHA (group dim 1)
+    g = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    qr = q.reshape(1, 10, cfg.n_heads, 1, cfg.d_head)
+    o2 = attend_dense(qr, kr, vr, pos[0], pos[0], causal=True, window=None,
+                      scale=cfg.d_head ** -0.5)
+    np.testing.assert_allclose(
+        np.asarray(o1.reshape(1, 10, -1)), np.asarray(o2.reshape(1, 10, -1)),
+        rtol=2e-5, atol=2e-5)

@@ -1,0 +1,74 @@
+"""Checkpointing: roundtrip fidelity, atomic commit, GC, async path,
+shape-mismatch detection."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_steps, restore, save
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.zeros((4,), jnp.bfloat16)},
+            "opt": {"count": jnp.asarray(3, jnp.int32),
+                    "m": {"w": jnp.ones((8, 4)), "b": jnp.ones((4,))}}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 7, t)
+    assert latest_steps(str(tmp_path)) == [7]
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    got, step = restore(str(tmp_path), like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(t)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    # fake a torn write: step dir without META.ok
+    torn = tmp_path / "step_00000002"
+    shutil.copytree(tmp_path / "step_00000001", torn)
+    os.remove(torn / "META.ok")
+    assert latest_steps(str(tmp_path)) == [1]
+    _, step = restore(str(tmp_path), t)
+    assert step == 1
+
+
+def test_keep_last_gc(tmp_path):
+    t = _tree()
+    for s in range(5):
+        save(str(tmp_path), s, t, keep_last=2)
+    assert latest_steps(str(tmp_path)) == [3, 4]
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save(str(tmp_path), 0, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), {"w": jnp.zeros((8, 4))})
+
+
+def test_missing_leaf_raises(tmp_path):
+    save(str(tmp_path), 0, {"w": jnp.zeros((4,))})
+    with pytest.raises(KeyError):
+        restore(str(tmp_path), {"w": jnp.zeros((4,)), "extra": jnp.zeros(1)})
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), every=2, keep_last=10)
+    t = _tree()
+    saved = [s for s in range(6) if ck.maybe_save(s, t)]
+    ck.wait()
+    assert saved == [0, 2, 4]
+    assert latest_steps(str(tmp_path)) == [0, 2, 4]
+    got, step = restore(str(tmp_path), t)
+    assert step == 4

@@ -1,0 +1,56 @@
+"""Data pipeline: determinism in (seed, step) — the restart-safety
+contract — plus learnability structure."""
+import numpy as np
+
+from repro.data import TabularTask, TokenTask
+
+
+def test_tabular_deterministic():
+    a = TabularTask(200, 10, seed=3)
+    b = TabularTask(200, 10, seed=3)
+    np.testing.assert_array_equal(a.x, b.x)
+    xa, ya = a.batch(17, 32)
+    xb, yb = b.batch(17, 32)
+    np.testing.assert_array_equal(xa, xb)
+    np.testing.assert_array_equal(ya, yb)
+    assert xa.shape == (32, 10) and ya.shape == (32,)
+
+
+def test_tabular_epoch_covers_dataset():
+    t = TabularTask(128, 5, seed=0)
+    seen = set()
+    for k in range(4):                      # one epoch = 4 batches of 32
+        x, _ = t.batch(k, 32)
+        seen.update(map(tuple, np.round(x, 5)))
+    assert len(seen) == 128
+
+
+def test_tabular_classes_separable():
+    """A linear probe beats chance comfortably — MLPs have signal to learn."""
+    t = TabularTask(2000, 10, n_classes=2, seed=1)
+    (xtr, ytr), (xte, yte) = t.split()
+    # least squares on ±1 targets
+    w = np.linalg.lstsq(xtr, 2.0 * ytr - 1.0, rcond=None)[0]
+    acc = ((xte @ w > 0) == yte).mean()
+    assert acc > 0.7, acc
+
+
+def test_token_task_deterministic_and_learnable():
+    t = TokenTask(vocab=512, seed=5)
+    b1 = t.batch(9, 4, 64)
+    b2 = TokenTask(vocab=512, seed=5).batch(9, 4, 64)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-tokens
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # deterministic transition hit-rate ≈ 85% → predictable structure
+    toks, labs = b1["tokens"], b1["labels"]
+    jump = t._jump
+    pred = (toks + jump[toks % t._v]) % t._v
+    assert (pred == labs).mean() > 0.7
+
+
+def test_different_steps_differ():
+    t = TabularTask(100, 5, seed=0)
+    x1, _ = t.batch(0, 32)
+    x2, _ = t.batch(1, 32)
+    assert not np.array_equal(x1, x2)

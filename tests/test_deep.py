@@ -1,0 +1,102 @@
+"""Deep ParallelMLPs (paper §7 / Figure 3): the block-diagonal fusion keeps
+MULTI-hidden-layer members independent — fused training equals standalone
+training, the paper's open conjecture verified."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.activations import ACTIVATIONS
+from repro.core.deep import (DeepPopulation, extract_member, forward,
+                             fused_loss, init_params, member_forward,
+                             sgd_step)
+
+DP = DeepPopulation(
+    in_features=6, out_features=3,
+    widths=((4, 2), (1, 3), (9, 5), (9, 5), (2, 7)),
+    activations=("relu", "tanh", "gelu", "relu", "mish"),
+    block=8)
+
+
+def test_forward_matches_members():
+    params = init_params(jax.random.PRNGKey(0), DP)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 6))
+    fused = forward(params, x, DP)
+    for m in range(DP.num_members):
+        mem = extract_member(params, DP, m)
+        want = member_forward(mem, x)
+        np.testing.assert_allclose(np.asarray(fused[:, m]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"member {m}")
+
+
+def standalone_step(member, x, y, lr):
+    act_name = member["activation"]
+
+    def loss(flat):
+        w_in, b_in, mids, w_out, b_out = flat
+        act = ACTIVATIONS[act_name]
+        h = act(x @ w_in.T + b_in)
+        for (w, b) in mids:
+            h = act(h @ w.T + b)
+        logits = h @ w_out.T + b_out
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    flat = (member["w_in"], member["b_in"],
+            tuple((l["w"], l["b"]) for l in member["mid"]),
+            member["w_out"], member["b_out"])
+    g = jax.grad(loss)(flat)
+    new_flat = jax.tree.map(lambda p, gg: p - lr * gg, flat, g)
+    return {"w_in": new_flat[0], "b_in": new_flat[1],
+            "mid": [{"w": w, "b": b} for w, b in new_flat[2]],
+            "w_out": new_flat[3], "b_out": new_flat[4],
+            "activation": act_name}
+
+
+def test_deep_fused_training_is_independent():
+    """Paper §7 conjecture: M3 + block-diagonal mid layers keep multi-layer
+    members exactly independent under fused SGD."""
+    params = init_params(jax.random.PRNGKey(42), DP)
+    members = [extract_member(params, DP, m) for m in range(DP.num_members)]
+    key = jax.random.PRNGKey(7)
+    lr = 0.05
+    for _ in range(4):
+        key, k1, k2 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (16, 6))
+        y = jax.random.randint(k2, (16,), 0, 3)
+        params, _, _ = sgd_step(params, x, y, lr, DP)
+        members = [standalone_step(m, x, y, lr) for m in members]
+    for m in range(DP.num_members):
+        got = extract_member(params, DP, m)
+        want = members[m]
+        np.testing.assert_allclose(
+            np.asarray(got["w_in"]), np.asarray(want["w_in"]),
+            rtol=2e-4, atol=2e-5, err_msg=f"member {m} w_in")
+        for l in range(DP.depth - 1):
+            np.testing.assert_allclose(
+                np.asarray(got["mid"][l]["w"]),
+                np.asarray(want["mid"][l]["w"]),
+                rtol=2e-4, atol=2e-5,
+                err_msg=f"member {m} mid layer {l} — cross-member leak!")
+        np.testing.assert_allclose(
+            np.asarray(got["w_out"]), np.asarray(want["w_out"]),
+            rtol=2e-4, atol=2e-5, err_msg=f"member {m} w_out")
+
+
+def test_depth_mismatch_rejected():
+    with pytest.raises(ValueError):
+        DeepPopulation(4, 2, ((3, 4), (3,)), ("relu", "relu"))
+
+
+def test_three_hidden_layers():
+    dp = DeepPopulation(5, 2, ((3, 4, 2), (6, 1, 5)), ("relu", "tanh"),
+                        block=4)
+    params = init_params(jax.random.PRNGKey(0), dp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 5))
+    fused = forward(params, x, dp)
+    assert fused.shape == (4, 2, 2)
+    for m in range(2):
+        want = member_forward(extract_member(params, dp, m), x)
+        np.testing.assert_allclose(np.asarray(fused[:, m]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

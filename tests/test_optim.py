@@ -1,0 +1,127 @@
+"""Optimizers: reference-math agreement, dtype policies, factored shapes,
+schedules, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, apply_updates, clip_by_global_norm,
+                         constant_lr, global_norm, make_optimizer, sgd,
+                         warmup_cosine)
+
+
+def test_sgd_matches_formula():
+    opt = sgd()
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p, 0.1)
+    p2 = apply_updates(p, upd)
+    np.testing.assert_allclose(np.asarray(p2["w"]), [0.95, 2.1], atol=1e-7)
+
+
+def test_sgd_momentum():
+    opt = sgd(momentum=0.9)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    st = opt.init(p)
+    vel = 0.0
+    pv = 0.0
+    for _ in range(3):
+        upd, st = opt.update(g, st, p, 0.1)
+        p = apply_updates(p, upd)
+        vel = 0.9 * vel + 1.0
+        pv -= 0.1 * vel
+    np.testing.assert_allclose(float(p["w"][0]), pv, rtol=1e-6)
+
+
+def test_adamw_matches_reference():
+    b1, b2, eps, wd, lr = 0.9, 0.95, 1e-8, 0.1, 1e-2
+    opt = adamw(b1=b1, b2=b2, eps=eps, weight_decay=wd)
+    p = {"w": jnp.asarray([0.3, -0.7])}
+    st = opt.init(p)
+    m = np.zeros(2)
+    v = np.zeros(2)
+    pw = np.asarray(p["w"]).copy()
+    for t in range(1, 4):
+        g = np.asarray([0.1 * t, -0.2])
+        upd, st = opt.update({"w": jnp.asarray(g)}, st, p, lr)
+        p = apply_updates(p, upd)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        pw = pw - lr * (mh / (np.sqrt(vh) + eps) + wd * pw)
+        np.testing.assert_allclose(np.asarray(p["w"]), pw, rtol=1e-5)
+
+
+def test_adamw_bf16_state_halves_memory():
+    opt = adamw(state_dtype=jnp.bfloat16)
+    p = {"w": jnp.zeros((128, 64))}
+    st = opt.init(p)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    upd, st = opt.update({"w": jnp.ones((128, 64))}, st, p, 1e-3)
+    assert st["v"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(upd["w"], np.float32)).all()
+
+
+def test_adafactor_factored_state_is_small():
+    opt = adafactor()
+    p = {"w": jnp.zeros((512, 256)), "b": jnp.zeros((256,))}
+    st = opt.init(p)
+    leaves = st["leaves"]
+    assert leaves["w"]["v_row"].shape == (512,)
+    assert leaves["w"]["v_col"].shape == (256,)
+    assert "v" in leaves["b"]                      # vectors unfactored
+    assert leaves["w"]["m"].dtype == jnp.bfloat16
+    # state for the matrix is O(n+m), not O(nm)
+    matrix_state = leaves["w"]["v_row"].size + leaves["w"]["v_col"].size
+    assert matrix_state < p["w"].size // 64
+
+
+def test_adafactor_descends():
+    opt = adafactor(momentum=0.0)
+    w = jnp.asarray(np.random.default_rng(0).normal(0, 1, (16, 8)),
+                    jnp.float32)
+    p = {"w": w}
+    st = opt.init(p)
+
+    def loss(pp):
+        return (pp["w"] ** 2).sum()
+
+    for _ in range(20):
+        g = jax.grad(loss)(p)
+        upd, st = opt.update(g, st, p, 0.05)
+        p = apply_updates(p, upd)
+    assert float(loss(p)) < float(loss({"w": w}))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 10.0, rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    # under the limit → untouched
+    same, _ = clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(g["a"]))
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, warmup_steps=10, total_steps=110, min_ratio=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert 0.09 < float(lr(jnp.asarray(110))) < 0.11
+    assert float(lr(jnp.asarray(60))) < 1.0
+
+
+def test_state_spec_structures_match():
+    from jax.sharding import PartitionSpec as P
+    p = {"w": jnp.zeros((8, 4)), "nest": {"v": jnp.zeros((4,))}}
+    specs = {"w": P("data", "model"), "nest": {"v": P(None)}}
+    absp = jax.eval_shape(lambda: p)
+    for name in ("sgd", "adamw", "adafactor"):
+        opt = make_optimizer(name)
+        st = opt.init(p)
+        ss = opt.state_specs(specs, absp)
+        assert jax.tree.structure(st) == jax.tree.structure(
+            ss, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,76 @@
+"""Population layout invariants (property-based).
+
+The fused layout is the paper's core data structure; everything else trusts
+these invariants: block alignment, disjoint member slices covering the
+fused axis, padding masks, per-unit metadata consistency."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.activations import PAPER_TEN
+from repro.core.population import Population
+
+ACTS = st.sampled_from(sorted(PAPER_TEN))
+
+
+@st.composite
+def populations(draw):
+    n = draw(st.integers(1, 12))
+    sizes = draw(st.lists(st.integers(1, 70), min_size=n, max_size=n))
+    acts = draw(st.lists(ACTS, min_size=n, max_size=n))
+    block = draw(st.sampled_from([1, 2, 8, 128]))
+    return Population(5, 3, tuple(sizes), tuple(acts), block=block)
+
+
+@given(populations())
+@settings(max_examples=60, deadline=None)
+def test_layout_invariants(pop):
+    # alignment
+    assert pop.total_hidden % pop.block == 0
+    assert all(s % pop.block == 0 for s in pop.padded_sizes)
+    # offsets partition the axis
+    assert pop.offsets[0] == 0 and pop.offsets[-1] == pop.total_hidden
+    assert np.all(np.diff(pop.offsets) == pop.padded_sizes)
+    # per-unit member ids: monotone, counts match padded sizes
+    seg = pop.segment_ids
+    assert seg.shape == (pop.total_hidden,)
+    assert np.all(np.diff(seg) >= 0)
+    counts = np.bincount(seg, minlength=pop.num_members)
+    assert np.all(counts == pop.padded_sizes)
+    # mask marks exactly the real units
+    assert pop.hidden_mask.sum() == sum(pop.hidden_sizes)
+    for m in range(pop.num_members):
+        sl = pop.member_slice(m)
+        assert np.all(pop.hidden_mask[sl] == 1.0)
+        assert sl.stop - sl.start == pop.hidden_sizes[m]
+    # block-level ids expand back to unit-level
+    assert np.all(np.repeat(pop.block_segment_ids, pop.block) == seg)
+    assert np.all(np.repeat(pop.block_act_ids, pop.block) == pop.act_ids)
+
+
+@given(populations())
+@settings(max_examples=30, deadline=None)
+def test_sorted_is_permutation(pop):
+    s = pop.sorted()
+    assert sorted(zip(s.activations, s.hidden_sizes)) == \
+        sorted(zip(pop.activations, pop.hidden_sizes))
+    # sorted ⇒ act runs are at most one per activation
+    names = [a for a, _, _ in s.act_runs]
+    assert len(names) == len(set(names))
+
+
+def test_grid_matches_paper():
+    pop = Population.grid(100, 2, range(1, 101), PAPER_TEN, repeats=10,
+                          block=128)
+    assert pop.num_members == 10_000
+    assert pop.total_hidden == 10_000 * 128     # all sizes pad to 128
+    assert set(pop.hidden_sizes) == set(range(1, 101))
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        Population(4, 2, (3,), ("relu", "tanh"))
+    with pytest.raises(ValueError):
+        Population(4, 2, (0,), ("relu",))
+    with pytest.raises(ValueError):
+        Population(4, 2, (3,), ("nope",))

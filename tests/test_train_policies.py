@@ -1,0 +1,103 @@
+"""Training-policy features added in §Perf: bf16 gradient accumulation,
+microbatch-count invariance, and the hymba mixed global/SWA window pattern
+under one scanned stack."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.launch.cells import build_optimizer
+from repro.models import lm
+from repro.optim import constant_lr
+
+
+def _setup(arch_id="qwen3-1.7b"):
+    arch = get_arch(arch_id, reduced=True)
+    cfg = arch.model
+    params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+    k = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(k, (8, 32), 0, cfg.vocab),
+             "labels": jax.random.randint(k, (8, 32), 0, cfg.vocab)}
+    return arch, cfg, params, batch
+
+
+def test_microbatch_count_invariance():
+    """num_micro=1 vs 4 give the same update (f32 accumulation)."""
+    arch, cfg, params, batch = _setup()
+    opt = build_optimizer(arch)
+    outs = {}
+    for n in (1, 4):
+        step = lm.make_train_step(cfg, opt, constant_lr(1e-3), num_micro=n)
+        p, _, m = jax.jit(step)(params, opt.init(params), batch,
+                                jnp.zeros((), jnp.int32))
+        outs[n] = (p, float(m["loss"]))
+    assert abs(outs[1][1] - outs[4][1]) < 1e-4
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_bf16_accumulation_close_to_f32():
+    """§Perf iter 5: bf16 accumulation tracks f32 within bf16 resolution."""
+    arch, cfg, params, batch = _setup()
+    opt = build_optimizer(arch)
+    ps = {}
+    for dt in (jnp.float32, jnp.bfloat16):
+        step = lm.make_train_step(cfg, opt, constant_lr(1e-3), num_micro=4,
+                                  accum_dtype=dt)
+        p, _, _ = jax.jit(step)(params, opt.init(params), batch,
+                                jnp.zeros((), jnp.int32))
+        ps[dt] = p
+    deltas = []
+    for a, b, p0 in zip(jax.tree.leaves(ps[jnp.float32]),
+                        jax.tree.leaves(ps[jnp.bfloat16]),
+                        jax.tree.leaves(params)):
+        step_size = np.abs(np.asarray(a, np.float32)
+                           - np.asarray(p0, np.float32)).mean()
+        diff = np.abs(np.asarray(a, np.float32)
+                      - np.asarray(b, np.float32)).mean()
+        if step_size > 0:
+            deltas.append(diff / step_size)
+    # bf16 accumulation error stays a small fraction of the actual update
+    assert np.mean(deltas) < 0.15, np.mean(deltas)
+
+
+def test_hymba_window_pattern_is_heterogeneous():
+    """Global layers (window=0) must see past the SWA window while windowed
+    layers must not — all under ONE scanned stack with traced windows."""
+    arch = get_arch("hymba-1.5b", reduced=True)
+    cfg = arch.model
+    assert {ls.window for ls in cfg.layers} == {0, 16}
+    params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+    S = 40
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)
+    base, _ = lm.forward(params, cfg, {"tokens": toks})
+    # perturb token 0; with a global layer present, the LAST position (far
+    # beyond every 16-token window) must still change
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab)
+    out2, _ = lm.forward(params, cfg, {"tokens": toks2})
+    assert not np.allclose(np.asarray(base[0, -1], np.float32),
+                           np.asarray(out2[0, -1], np.float32), atol=1e-5)
+
+    # with ONLY windowed layers (and no SSM path) the influence would die;
+    # verify the mask logic via a pure-SWA attn-only variant
+    swa_cfg = dataclasses.replace(
+        cfg, layers=tuple(lm.LayerSpec("attn", "dense", 16)
+                          for _ in range(3)))
+    p2, _ = lm.init_params(jax.random.PRNGKey(0), swa_cfg)
+    b1, _ = lm.forward(p2, swa_cfg, {"tokens": toks})
+    b2, _ = lm.forward(p2, swa_cfg, {"tokens": toks2})
+    # 3 layers × window 16 → receptive field ≤ 48 ≥ S… use last pos vs
+    # a LONGER gap: perturbation at 0 cannot reach position 39 through
+    # 2 windowed attn hops of 15 (max reach 30) — wait 3 hops reach 45.
+    # Use 2 layers to bound reach at 30 < 39:
+    swa2 = dataclasses.replace(swa_cfg, layers=swa_cfg.layers[:2])
+    p3, _ = lm.init_params(jax.random.PRNGKey(0), swa2)
+    c1, _ = lm.forward(p3, swa2, {"tokens": toks})
+    c2, _ = lm.forward(p3, swa2, {"tokens": toks2})
+    np.testing.assert_allclose(np.asarray(c1[0, -1], np.float32),
+                               np.asarray(c2[0, -1], np.float32), atol=1e-4)
