@@ -12,17 +12,26 @@ population layout:
 Reports CPU wall-clock (fwd+bwd) AND the lowered dot-flops / HBM-byte
 profile from the static HLO cost model — the structural numbers are what
 transfer to TPU.
+
+``--deep`` benches the layered-population engine instead: full fwd+bwd of a
+mixed-depth LayeredPopulation with the block-diagonal mid layers run as the
+per-bucket einsum loop vs the Pallas block_diag_gemm kernel (interpret mode
+on CPU — wall-clock is NOT indicative there, the HLO structural numbers
+are), and writes the rows to BENCH_deep.json so kernel perf is tracked
+per-PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Population, init_params
+from repro.core import LayeredPopulation, Population, init_params
+from repro.core import deep as deep_mod
 from repro.core.activations import PAPER_TEN
 from repro.core.m3 import M3_IMPLS
 from repro.launch.hlo_cost import analyze
@@ -53,13 +62,73 @@ def bench(pop, batch, impl, iters=5):
     return wall, stats
 
 
+def bench_deep(lp, batch, bd_impl, iters=3):
+    params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, lp.in_features))
+    y = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0,
+                           lp.out_features)
+
+    def loss(p):
+        return deep_mod.fused_loss(p, x, y, lp, "bucketed", bd_impl)[0]
+
+    step = jax.jit(jax.grad(loss))
+    out = step(params)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = step(params)
+    jax.block_until_ready(out)
+    wall = (time.perf_counter() - t0) / iters
+    # profile the SAME fwd+bwd computation the wall-clock measures, so the
+    # tracked structural numbers catch backward-pass regressions too
+    stats = analyze(step.lower(params).compile().as_text())
+    return wall, stats
+
+
+def run_deep(args):
+    """Mixed-depth layered population: einsum bucket loop vs the Pallas
+    block-diagonal kernel (interpret on CPU)."""
+    base = [(24,), (13, 5), (17, 9), (32, 16, 8)]
+    lp = LayeredPopulation.grid(
+        20, 2, base, ("relu", "tanh"),
+        repeats=max(args.members // (2 * len(base)), 1), block=args.block)
+    print(f"# population: {lp.describe()}")
+    print("bd_impl,wall_ms,dot_gflops,hbm_mb")
+    rows = {}
+    for impl in args.bd_impls:
+        wall, stats = bench_deep(lp, args.batch, impl)
+        rows[impl] = {"wall_ms": round(wall * 1e3, 2),
+                      "dot_gflops": round(stats["flops"] / 1e9, 4),
+                      "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2)}
+        print(f"{impl},{wall*1e3:.2f},{stats['flops']/1e9:.3f},"
+              f"{stats['hbm_bytes']/1e6:.1f}", flush=True)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"bench": "deep_population",
+                       "population": lp.describe(),
+                       "batch": args.batch, "results": rows}, f, indent=2)
+        print(f"# wrote {args.json_out}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--members", type=int, default=300)
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--block", type=int, default=8)
     ap.add_argument("--impls", nargs="+", default=sorted(M3_IMPLS))
+    ap.add_argument("--deep", action="store_true",
+                    help="bench the layered engine (BD_IMPLS shoot-out) "
+                         "instead of the single-layer M3 variants")
+    ap.add_argument("--bd-impls", nargs="+", default=["einsum", "pallas"])
+    ap.add_argument("--json-out", default=None,
+                    help="write results as JSON (BENCH_*.json tracking)")
     args = ap.parse_args(argv)
+
+    if args.deep:
+        if args.json_out is None:
+            args.json_out = "BENCH_deep.json"
+        run_deep(args)
+        return
 
     hidden = range(1, args.members // 10 + 1)
     pop = Population.grid(100, 2, hidden, PAPER_TEN, repeats=1,

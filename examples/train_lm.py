@@ -14,6 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro.checkpoint import AsyncCheckpointer
 from repro.data import TokenTask
 from repro.launch.mesh import make_host_mesh
@@ -48,7 +49,7 @@ def main():
 
     cfg = config_100m()
     mesh = make_host_mesh()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
         n = sum(x.size for x in jax.tree.leaves(params))
         print(f"model: {cfg.name}  params={n/1e6:.1f}M  "

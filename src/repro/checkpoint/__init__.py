@@ -1,5 +1,10 @@
-"""Atomic sharded checkpointing with async commit + elastic restore."""
+"""Atomic sharded checkpointing with async commit + elastic restore, plus
+layout-carrying fused-population checkpoints."""
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_steps,
-                                         restore, save)
+                                         layout_from_meta, load_meta, restore,
+                                         restore_population, save,
+                                         save_population)
 
-__all__ = ["AsyncCheckpointer", "latest_steps", "restore", "save"]
+__all__ = ["AsyncCheckpointer", "latest_steps", "layout_from_meta",
+           "load_meta", "restore", "restore_population", "save",
+           "save_population"]

@@ -38,8 +38,13 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
-def save(directory: str, step: int, state_tree, keep_last: int = 3) -> str:
-    """Atomic synchronous save.  Returns the committed path."""
+def save(directory: str, step: int, state_tree, keep_last: int = 3,
+         meta: dict | None = None) -> str:
+    """Atomic synchronous save.  Returns the committed path.
+
+    ``meta``: optional JSON-serialisable dict stored alongside the manifest —
+    population checkpoints use it to persist the fused layout so restore can
+    rebuild the parameter tree without the original code path."""
     tgt = os.path.join(directory, f"step_{step:08d}")
     tmp = tgt + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -56,7 +61,8 @@ def save(directory: str, step: int, state_tree, keep_last: int = 3) -> str:
     np.savez(os.path.join(tmp, "arrays.npz"),
              **{k: v for k, v in host.items()})
     with open(os.path.join(tmp, "tree.json"), "w") as f:
-        json.dump({"step": step, "manifest": manifest}, f)
+        json.dump({"step": step, "manifest": manifest,
+                   "meta": meta or {}}, f)
     with open(os.path.join(tmp, "META.ok"), "w") as f:
         f.write(str(time.time()))
     if os.path.exists(tgt):
@@ -131,6 +137,113 @@ def restore(directory: str, like_tree, shardings=None, step: int | None = None):
         jax.tree_util.tree_structure(like_tree),
         flat_restored)
     return tree, step
+
+
+def load_meta(directory: str, step: int | None = None) -> tuple:
+    """The ``meta`` dict stored with a checkpoint → (meta, step)."""
+    steps = latest_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    with open(os.path.join(directory, f"step_{step:08d}", "tree.json")) as f:
+        return json.load(f).get("meta", {}), step
+
+
+# --------------------------------------------------------------------- #
+# fused-population checkpoints (layout travels WITH the parameters)     #
+# --------------------------------------------------------------------- #
+
+def _layout_meta(layout, params) -> dict:
+    from repro.core.population import LayeredPopulation, Population
+    if isinstance(layout, Population):
+        layout = layout.layered()
+    if not isinstance(layout, LayeredPopulation):
+        raise TypeError(f"not a population layout: {type(layout)}")
+    # two parameter schemas share the layout format: the layered engine
+    # (core.deep: w_in/b_in/mid/w_out/b_out) and the single-layer module
+    # (core.parallel_mlp: w1/b1/w2/b2) — recorded so restore rebuilds the
+    # matching tree.
+    if "w_in" in params:
+        schema = "layered"
+    elif "w1" in params:
+        schema = "single"
+    else:
+        raise TypeError(f"unrecognised population params: {sorted(params)}")
+    dtype = str(jax.tree.leaves(params)[0].dtype)
+    return {"population": {
+        "in_features": layout.in_features,
+        "out_features": layout.out_features,
+        "widths": [list(w) for w in layout.widths],
+        "activations": [list(a) for a in layout.activations],
+        "block": layout.block,
+        "schema": schema,
+        "dtype": dtype,
+    }}
+
+
+def layout_from_meta(meta: dict):
+    from repro.core.population import LayeredPopulation
+    p = meta["population"]
+    return LayeredPopulation(
+        int(p["in_features"]), int(p["out_features"]),
+        tuple(tuple(int(h) for h in w) for w in p["widths"]),
+        tuple(tuple(a) for a in p["activations"]),
+        block=int(p["block"]))
+
+
+def save_population(directory: str, step: int, params, layout,
+                    keep_last: int = 3, extra_state=None) -> str:
+    """Checkpoint fused population parameters WITH their static layout
+    (widths, per-layer activations, block, param schema, dtype), so
+    ``restore_population`` reconstructs both without the constructing code.
+    ``extra_state`` (e.g. optimizer state) is stored under its own subtree."""
+    tree = {"params": params}
+    if extra_state is not None:
+        tree["extra"] = extra_state
+    return save(directory, step, tree, keep_last=keep_last,
+                meta=_layout_meta(layout, params))
+
+
+def restore_population(directory: str, step: int | None = None,
+                       extra_like=None):
+    """→ (params, layout, step[, extra_state]).
+
+    The parameter tree is rebuilt from the stored layout, schema, and dtype —
+    no live params needed.  The returned layout MATCHES the params: a
+    ``LayeredPopulation`` for layered-engine checkpoints, a ``Population``
+    for single-layer (parallel_mlp) ones, so (params, layout) always works
+    together in forward/selection.  Pass ``extra_like`` (matching the
+    ``extra_state`` given to ``save_population``) to restore it too."""
+    import jax.numpy as jnp
+    meta, step = load_meta(directory, step)
+    if "population" not in meta:
+        raise ValueError(f"{directory} step {step}: not a population "
+                         "checkpoint (no layout meta)")
+    lp = layout_from_meta(meta)
+    pmeta = meta["population"]
+    # string → jax dtype (handles bfloat16, which numpy's dtype() doesn't)
+    dtype = jnp.zeros((), pmeta.get("dtype", "float32")).dtype
+    layout = lp
+    if pmeta.get("schema", "layered") == "single":
+        from repro.core import parallel_mlp
+        from repro.core.population import Population
+        layout = Population(lp.in_features, lp.out_features,
+                            tuple(w[0] for w in lp.widths),
+                            tuple(a[0] for a in lp.activations),
+                            block=lp.block)
+        abstract = jax.eval_shape(
+            lambda k: parallel_mlp.init_params(k, layout, dtype),
+            jax.random.PRNGKey(0))
+    else:
+        from repro.core.deep import abstract_params
+        abstract = abstract_params(lp, dtype)
+    like = {"params": abstract}
+    if extra_like is not None:
+        like["extra"] = extra_like
+    tree, step = restore(directory, like, step=step)
+    if extra_like is not None:
+        return tree["params"], layout, step, tree["extra"]
+    return tree["params"], layout, step
 
 
 class AsyncCheckpointer:

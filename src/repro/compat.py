@@ -1,0 +1,66 @@
+"""jax version compatibility.
+
+The codebase targets the current jax mesh API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``make_mesh(..., axis_types=...)``);
+CI containers pin older CPU wheels (0.4.x) where those names don't exist
+but the equivalent thread-local mesh context does.  Everything version-
+dependent funnels through this module so the rest of the code reads as
+current-API jax.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """jax.make_mesh with Auto axis_types when the installed jax has them."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh.
+
+    New jax: ``jax.set_mesh``.  Old jax: ``Mesh`` is itself the context
+    manager that installs the thread-local resource env (the pjit-era
+    spelling of the same thing)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when unset (old jax) / empty (new jax
+    returns an AbstractMesh with no axis_names — callers check both)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib  # pre-0.5 thread-local env
+    env = getattr(mesh_lib.thread_resources, "env", None)
+    m = getattr(env, "physical_mesh", None)
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map (new) / jax.experimental.shard_map (old); ``check``
+    maps to check_vma / check_rep respectively."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict: old jax returned a
+    one-entry-per-device LIST of dicts, new jax returns the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

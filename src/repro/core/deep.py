@@ -1,164 +1,200 @@
-"""Deep ParallelMLPs — the paper's §7/Figure 3 future work, implemented.
+"""Layered ParallelMLPs — the paper's §7/Figure 3 headline extension, as the
+repo's ONE population engine.
 
 The paper trains populations with ONE hidden layer because only the first
 projection (input→hidden) is trivially fusable: every later projection must
-not reduce across members.  Figure 3 sketches the fix; this module builds
-it:
+not reduce across members.  Figure 3 sketches the fix; this module builds it
+on top of the layered layout (``repro.core.population.LayeredPopulation``):
 
   * layer 0:            ordinary fused matmul  (H1_tot × F)       — as paper
   * layers 1..L-1:      BLOCK-DIAGONAL segment matmul: member m's units in
                         layer l+1 contract ONLY member m's units in layer l.
-                        With members sorted into runs of equal padded widths
-                        this is a per-bucket batched einsum
-                        (B, n, h_in) × (n, h_out, h_in) → (B, n, h_out) —
-                        dense MXU work, no scatter, gradients independent by
-                        construction (same argument as M3; the Pallas analogue
-                        is kernels/moe_gemm with member-id = "expert"-id).
+                        Two registered implementations (``BD_IMPLS``):
+                          einsum — per-bucket batched einsum
+                                   (B, n, h_in) × (n, h_out, h_in) → (B, n, h_out)
+                          pallas — ONE dense segment-blocked matmul
+                                   (kernels/block_diag.py, custom VJP), the
+                                   moe_gemm weight-tile-selection trick with
+                                   member-id = "expert"-id (DESIGN.md §3)
   * output layer:       the paper's M3 (repro.core.m3).
 
-Independence is asserted against standalone two-hidden-layer training in
-tests/test_deep.py — the paper's §7 conjecture, verified.
+Members may have DIFFERENT depths: a shallow member's final activations ride
+through later layers as exact identity pass-throughs (no weight, no bias, no
+activation), so mixed-depth fused training still equals standalone training —
+verified in tests/test_layered.py.  Per-member learning rates are free under
+this layout (every parameter belongs to exactly one member): pass a (P,)
+vector to ``sgd_step`` or build an optimizer scale tree with
+``member_lr_tree``.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.activations import ACTIVATIONS
+from repro.core.activations import ACTIVATIONS, apply_activations_sliced
 from repro.core.m3 import m3 as _m3_apply
-from repro.core.population import Population
+from repro.core.population import LayeredPopulation, Population
+
+# The unified engine: DeepPopulation (uniform depth, one activation per
+# member) is just the degenerate LayeredPopulation.
+DeepPopulation = LayeredPopulation
 
 
-@dataclasses.dataclass(frozen=True)
-class DeepPopulation:
-    """P members, member m having hidden widths ``widths[m]`` (one entry per
-    hidden layer; all members share the same DEPTH) and one activation."""
+# ---------------------------------------------------------------------- #
+# block-diagonal mid-layer projection (registry, like m3.M3_IMPLS)       #
+# ---------------------------------------------------------------------- #
 
-    in_features: int
-    out_features: int
-    widths: tuple          # tuple[tuple[int, ...]] — per member, per layer
-    activations: tuple     # per member
-    block: int = 8
-
-    def __post_init__(self):
-        depths = {len(w) for w in self.widths}
-        if len(depths) != 1:
-            raise ValueError(f"all members need the same depth, got {depths}")
-        object.__setattr__(self, "widths", tuple(tuple(w) for w in self.widths))
-
-    @property
-    def num_members(self) -> int:
-        return len(self.widths)
-
-    @property
-    def depth(self) -> int:
-        return len(self.widths[0])
-
-    @dataclasses.dataclass(frozen=True)
-    class _Key:
-        pass
-
-    def layer_pop(self, l: int) -> Population:
-        """The fused layout of hidden layer l (member order preserved)."""
-        return Population(self.in_features, self.out_features,
-                          tuple(w[l] for w in self.widths),
-                          self.activations, block=self.block)
-
-    def buckets(self, l: int):
-        """Contiguous runs of members with identical padded (in, out) widths
-        for the l→l+1 block-diagonal projection.  Static python data."""
-        pin, pout = self.layer_pop(l), self.layer_pop(l + 1)
-        runs = []
-        m = 0
-        while m < self.num_members:
-            n = 1
-            key = (pin.padded_sizes[m], pout.padded_sizes[m])
-            while m + n < self.num_members and \
-                    (pin.padded_sizes[m + n], pout.padded_sizes[m + n]) == key:
-                n += 1
-            runs.append((m, n, int(key[0]), int(key[1]),
-                         int(pin.offsets[m]), int(pout.offsets[m])))
-            m += n
-        return runs
-
-
-def init_params(key, dp: DeepPopulation, dtype=jnp.float32) -> dict:
-    keys = jax.random.split(key, dp.depth + 2)
-    p0 = dp.layer_pop(0)
-    bound = 1.0 / np.sqrt(dp.in_features)
-    params = {
-        "w_in": jax.random.uniform(keys[0], (p0.total_hidden, dp.in_features),
-                                   dtype, -bound, bound),
-        "b_in": jax.random.uniform(keys[0], (p0.total_hidden,), dtype,
-                                   -bound, bound),
-        "mid": [],
-    }
-    for l in range(dp.depth - 1):
-        pin, pout = dp.layer_pop(l), dp.layer_pop(l + 1)
-        wl = []
-        fan_in = np.repeat(np.array([w[l] for w in dp.widths], np.float32),
-                           pout.padded_sizes)
-        kl = jax.random.split(keys[1 + l], len(dp.buckets(l)))
-        for bi, (m0, n, hin, hout, off_in, off_out) in enumerate(dp.buckets(l)):
-            b = 1.0 / np.sqrt(max(min(w[l] for w in dp.widths[m0:m0 + n]), 1))
-            wl.append(jax.random.uniform(kl[bi], (n, hout, hin), dtype, -1, 1)
-                      * jnp.asarray(
-                          1.0 / np.sqrt(np.maximum(
-                              [w[l] for w in dp.widths[m0:m0 + n]], 1)),
-                          dtype)[:, None, None])
-        pl = dp.layer_pop(l + 1)
-        params["mid"].append({
-            "w": wl,
-            "b": jax.random.uniform(keys[1 + l], (pl.total_hidden,), dtype,
-                                    -1, 1) * jnp.asarray(
-                1.0 / np.sqrt(fan_in), dtype)})
-    plast = dp.layer_pop(dp.depth - 1)
-    fan_last = np.repeat(np.array([w[-1] for w in dp.widths], np.float32),
-                         plast.padded_sizes)
-    params["w_out"] = (jax.random.uniform(
-        keys[-1], (dp.out_features, plast.total_hidden), dtype, -1, 1)
-        * jnp.asarray(1.0 / np.sqrt(fan_last), dtype)[None, :])
-    params["b_out"] = (jax.random.uniform(
-        keys[-1], (dp.num_members, dp.out_features), dtype, -1, 1)
-        * jnp.asarray(1.0 / np.sqrt(
-            np.array([w[-1] for w in dp.widths], np.float32)), dtype)[:, None])
-    return params
-
-
-def block_diag_matmul(h, w_buckets, dp: DeepPopulation, l: int):
-    """h (B, H_l_tot) → (B, H_{l+1}_tot): member-block-diagonal projection."""
+def block_diag_einsum(h: jax.Array, w_buckets, lp: LayeredPopulation,
+                      l: int) -> jax.Array:
+    """h (B, H_l_tot) → (B, H_{l+1}_tot) as a loop of per-bucket batched
+    einsums; pass-through buckets are slice copies."""
     b = h.shape[0]
     outs = []
-    for (m0, n, hin, hout, off_in, off_out), w in zip(dp.buckets(l),
-                                                      w_buckets):
-        hh = h[:, off_in: off_in + n * hin].reshape(b, n, hin)
-        outs.append(jnp.einsum("bnh,noh->bno", hh, w).reshape(b, n * hout))
+    wi = 0
+    for (m0, n, hin, hout, off_in, off_out, real) in lp.proj_buckets(l):
+        if real:
+            hh = h[:, off_in: off_in + n * hin].reshape(b, n, hin)
+            outs.append(jnp.einsum("bnh,noh->bno", hh, w_buckets[wi])
+                        .reshape(b, n * hout))
+            wi += 1
+        else:
+            outs.append(h[:, off_in: off_in + n * hin])
     return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
 
 
-def _act(dp: DeepPopulation, pop: Population, h):
-    from repro.core.activations import apply_activations_sliced
+def pack_weight_tiles(w_buckets, lp: LayeredPopulation, l: int) -> jax.Array:
+    """Per-bucket (n, hout, hin) arrays → the flat (n_param_blocks, blk, blk)
+    tile array consumed by the Pallas kernel (member-major, row-major over
+    each member's tile grid — matching ``LayeredPopulation.bd_layout``).
+    Pure reshapes/transposes, so gradients flow back to the bucket arrays."""
+    blk = lp.block
+    tiles = []
+    wi = 0
+    for (m0, n, hin, hout, off_in, off_out, real) in lp.proj_buckets(l):
+        if not real:
+            continue
+        w = w_buckets[wi]
+        wi += 1
+        ob, ib = hout // blk, hin // blk
+        tiles.append(w.reshape(n, ob, blk, ib, blk)
+                     .transpose(0, 1, 3, 2, 4)
+                     .reshape(n * ob * ib, blk, blk))
+    return jnp.concatenate(tiles, axis=0)
+
+
+def block_diag_pallas(h: jax.Array, w_buckets, lp: LayeredPopulation, l: int,
+                      *, interpret: bool | None = None,
+                      block_b: int = 128) -> jax.Array:
+    from repro.kernels.ops import block_diag_gemm  # lazy: kernels import pallas
+    wb = pack_weight_tiles(w_buckets, lp, l)
+    return block_diag_gemm(h, wb, lp.bd_layout(l), block_b=block_b,
+                           interpret=interpret)
+
+
+BD_IMPLS = {
+    "einsum": block_diag_einsum,
+    "pallas": block_diag_pallas,
+}
+
+
+def block_diag_matmul(h: jax.Array, w_buckets, lp: LayeredPopulation, l: int,
+                      impl: str = "einsum", **kw) -> jax.Array:
+    """Member-block-diagonal projection of layer l → l+1."""
+    return BD_IMPLS[impl](h, w_buckets, lp, l, **kw)
+
+
+# ---------------------------------------------------------------------- #
+# parameters                                                             #
+# ---------------------------------------------------------------------- #
+
+def init_params(key, lp: LayeredPopulation, dtype=jnp.float32) -> dict:
+    """torch.nn.Linear-style init (U(±1/√fan_in), per-member fan-in), every
+    parameter drawn from its OWN key.  Pass-through bias slices start (and
+    stay — their gradient is masked) at zero."""
+    n_mid = lp.depth - 1
+    keys = jax.random.split(key, 2 * n_mid + 4)
+    p0 = lp.layer_pop(0)
+    bound = 1.0 / np.sqrt(lp.in_features)
+    params = {
+        "w_in": jax.random.uniform(keys[0], (p0.total_hidden, lp.in_features),
+                                   dtype, -bound, bound),
+        "b_in": jax.random.uniform(keys[1], (p0.total_hidden,), dtype,
+                                   -bound, bound),
+        "mid": [],
+    }
+    for l in range(n_mid):
+        kw_, kb_ = keys[2 + 2 * l], keys[3 + 2 * l]
+        pout = lp.layer_pop(l + 1)
+        real_buckets = [bk for bk in lp.proj_buckets(l) if bk[6]]
+        kl = jax.random.split(kw_, max(len(real_buckets), 1))
+        wl = []
+        for bi, (m0, n, hin, hout, off_in, off_out, real) in \
+                enumerate(real_buckets):
+            fan = np.array([lp.layer_width(m, l) for m in range(m0, m0 + n)],
+                           np.float32)
+            wl.append(jax.random.uniform(kl[bi], (n, hout, hin), dtype, -1, 1)
+                      * jnp.asarray(1.0 / np.sqrt(fan), dtype)[:, None, None])
+        fan_unit = np.repeat(
+            np.array([lp.layer_width(m, l) for m in range(lp.num_members)],
+                     np.float32),
+            pout.padded_sizes)
+        mask = lp.active_unit_mask(l + 1)
+        params["mid"].append({
+            "w": wl,
+            "b": jax.random.uniform(kb_, (pout.total_hidden,), dtype, -1, 1)
+            * jnp.asarray(mask / np.sqrt(fan_unit), dtype)})
+    plast = lp.layer_pop(lp.depth - 1)
+    fan_last = np.repeat(np.array([w[-1] for w in lp.widths], np.float32),
+                         plast.padded_sizes)
+    params["w_out"] = (jax.random.uniform(
+        keys[-2], (lp.out_features, plast.total_hidden), dtype, -1, 1)
+        * jnp.asarray(1.0 / np.sqrt(fan_last), dtype)[None, :])
+    params["b_out"] = (jax.random.uniform(
+        keys[-1], (lp.num_members, lp.out_features), dtype, -1, 1)
+        * jnp.asarray(1.0 / np.sqrt(
+            np.array([w[-1] for w in lp.widths], np.float32)), dtype)[:, None])
+    return params
+
+
+def abstract_params(lp: LayeredPopulation, dtype=jnp.float32):
+    """Shape/dtype tree of ``init_params`` without allocating (checkpoint
+    restore, dry-run costing)."""
+    return jax.eval_shape(lambda k: init_params(k, lp, dtype),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------- #
+# forward / loss / step                                                  #
+# ---------------------------------------------------------------------- #
+
+def _act(lp: LayeredPopulation, l: int, h: jax.Array) -> jax.Array:
+    pop = lp.layer_pop(l)
     h = apply_activations_sliced(h, pop.act_runs)
     return h * jnp.asarray(pop.hidden_mask, h.dtype)
 
 
-def forward(params, x, dp: DeepPopulation, m3_impl: str = "bucketed"):
+def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
+            bd_impl: str = "einsum", bd_kwargs: dict | None = None,
+            m3_kwargs: dict | None = None):
     """x (B, F) → logits (B, P, O) — every member an independent deep MLP."""
-    h = _act(dp, dp.layer_pop(0), x @ params["w_in"].T + params["b_in"])
-    for l in range(dp.depth - 1):
-        h = block_diag_matmul(h, params["mid"][l]["w"], dp, l)
-        h = _act(dp, dp.layer_pop(l + 1), h + params["mid"][l]["b"])
-    y = _m3_apply(h, params["w_out"], dp.layer_pop(dp.depth - 1), impl=m3_impl)
+    h = _act(lp, 0, x @ params["w_in"].T + params["b_in"])
+    for l in range(lp.depth - 1):
+        h = block_diag_matmul(h, params["mid"][l]["w"], lp, l, impl=bd_impl,
+                              **(bd_kwargs or {}))
+        h = h + params["mid"][l]["b"] * jnp.asarray(
+            lp.active_unit_mask(l + 1), h.dtype)
+        h = _act(lp, l + 1, h)
+    y = _m3_apply(h, params["w_out"], lp.layer_pop(lp.depth - 1),
+                  impl=m3_impl, **(m3_kwargs or {}))
     return y + params["b_out"][None]
 
 
-def fused_loss(params, x, targets, dp: DeepPopulation):
-    logits = forward(params, x, dp)
+def fused_loss(params, x, targets, lp: LayeredPopulation,
+               m3_impl: str = "bucketed", bd_impl: str = "einsum"):
+    logits = forward(params, x, lp, m3_impl=m3_impl, bd_impl=bd_impl)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(
         logp, targets[:, None, None].astype(jnp.int32), axis=-1)[..., 0]
@@ -166,38 +202,78 @@ def fused_loss(params, x, targets, dp: DeepPopulation):
     return per.sum(), per
 
 
-@partial(jax.jit, static_argnames=("dp",))
-def sgd_step(params, x, targets, lr, dp: DeepPopulation):
+def member_lr_tree(lp: LayeredPopulation, lr) -> dict:
+    """Per-member learning rates (P,) → a scale tree matching ``init_params``
+    (every parameter belongs to exactly one member, so per-member LRs are a
+    broadcast, not a loop — the paper's §7 'parallelise the learning rate')."""
+    lr = jnp.asarray(lr, jnp.float32)
+    p0 = lp.layer_pop(0)
+    u0 = lr[jnp.asarray(p0.segment_ids)]
+    tree = {"w_in": u0[:, None], "b_in": u0, "mid": []}
+    for l in range(lp.depth - 1):
+        pout = lp.layer_pop(l + 1)
+        wl = [lr[m0:m0 + n][:, None, None]
+              for (m0, n, *_rest, real) in lp.proj_buckets(l) if real]
+        tree["mid"].append({
+            "w": wl, "b": lr[jnp.asarray(pout.segment_ids)]})
+    plast = lp.layer_pop(lp.depth - 1)
+    tree["w_out"] = lr[jnp.asarray(plast.segment_ids)][None, :]
+    tree["b_out"] = lr[:, None]
+    return tree
+
+
+@partial(jax.jit, static_argnames=("lp", "m3_impl", "bd_impl"))
+def sgd_step(params, x, targets, lr, lp: LayeredPopulation,
+             m3_impl: str = "bucketed", bd_impl: str = "einsum"):
+    """One fused SGD step.  ``lr`` may be a scalar or a per-member (P,)
+    vector."""
     (loss, per), grads = jax.value_and_grad(fused_loss, has_aux=True)(
-        params, x, targets, dp)
-    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        params, x, targets, lp, m3_impl, bd_impl)
+    lr = jnp.asarray(lr)
+    if lr.ndim == 0:
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    else:
+        scales = member_lr_tree(lp, lr)
+        new = jax.tree.map(lambda p, g, s: p - s * g, params, grads, scales)
     return new, loss, per
 
 
-def extract_member(params, dp: DeepPopulation, m: int) -> dict:
-    """Standalone deep MLP of member m (REAL units only)."""
-    p0 = dp.layer_pop(0)
-    sl = p0.member_slice(m)
-    out = {"w_in": params["w_in"][sl], "b_in": params["b_in"][sl],
-           "mid": [], "activation": dp.activations[m]}
-    for l in range(dp.depth - 1):
-        pin, pout = dp.layer_pop(l), dp.layer_pop(l + 1)
-        for (m0, n, hin, hout, off_in, off_out), w in zip(dp.buckets(l),
-                                                          params["mid"][l]["w"]):
+# ---------------------------------------------------------------------- #
+# member extraction (standalone baseline)                                #
+# ---------------------------------------------------------------------- #
+
+def extract_member(params, lp: LayeredPopulation, m: int) -> dict:
+    """Standalone deep MLP of member m (REAL units and layers only)."""
+    d = lp.member_depths[m]
+    p0 = lp.layer_pop(0)
+    out = {"w_in": params["w_in"][p0.member_slice(m)],
+           "b_in": params["b_in"][p0.member_slice(m)],
+           "mid": [],
+           "activations": lp.activations[m],
+           "activation": lp.activations[m][0]}
+    for l in range(d - 1):
+        wi = 0
+        for (m0, n, hin, hout, off_in, off_out, real) in lp.proj_buckets(l):
             if m0 <= m < m0 + n:
-                wm = w[m - m0][: dp.widths[m][l + 1], : dp.widths[m][l]]
+                assert real, f"member {m} has no real projection at layer {l}"
+                wm = params["mid"][l]["w"][wi][m - m0][
+                    : lp.widths[m][l + 1], : lp.widths[m][l]]
                 break
-        bm = params["mid"][l]["b"][pout.member_slice(m)]
+            if real:
+                wi += 1
+        bm = params["mid"][l]["b"][lp.layer_pop(l + 1).member_slice(m)]
         out["mid"].append({"w": wm, "b": bm})
-    plast = dp.layer_pop(dp.depth - 1)
+    plast = lp.layer_pop(lp.depth - 1)
     out["w_out"] = params["w_out"][:, plast.member_slice(m)]
     out["b_out"] = params["b_out"][m]
     return out
 
 
 def member_forward(member: dict, x):
-    act = ACTIVATIONS[member["activation"]]
-    h = act(x @ member["w_in"].T + member["b_in"])
-    for lay in member["mid"]:
-        h = act(h @ lay["w"].T + lay["b"])
+    """Forward of one extracted member, honouring per-layer activations."""
+    acts = member.get("activations") or (member["activation"],) * (
+        len(member["mid"]) + 1)
+    h = ACTIVATIONS[acts[0]](x @ member["w_in"].T + member["b_in"])
+    for l, lay in enumerate(member["mid"]):
+        h = ACTIVATIONS[acts[l + 1]](h @ lay["w"].T + lay["b"])
     return h @ member["w_out"].T + member["b_out"]

@@ -73,22 +73,10 @@ def m3_onehot(h: jax.Array, w2: jax.Array, pop: Population) -> jax.Array:
 # ---------------------------------------------------------------------- #
 
 def _buckets(pop: Population):
-    """Contiguous runs of members with identical *padded* size.
-
-    Population.grid sorts by (activation, size), so runs are short; the
-    general case still works, just with more buckets.  Returns static
-    (start_member, n_members, padded_size, start_col) tuples.
-    """
-    out = []
-    sizes = pop.padded_sizes
-    m = 0
-    while m < pop.num_members:
-        n = 1
-        while m + n < pop.num_members and sizes[m + n] == sizes[m]:
-            n += 1
-        out.append((m, n, int(sizes[m]), int(pop.offsets[m])))
-        m += n
-    return out
+    """Contiguous runs of members with identical *padded* size — now owned by
+    the layout primitive itself (``Population.size_buckets``); kept as an
+    alias for callers of the original private helper."""
+    return pop.size_buckets()
 
 
 def m3_bucketed(h: jax.Array, w2: jax.Array, pop: Population) -> jax.Array:
@@ -109,7 +97,7 @@ def m3_bucketed(h: jax.Array, w2: jax.Array, pop: Population) -> jax.Array:
 # ---------------------------------------------------------------------- #
 
 def m3_pallas(h: jax.Array, w2: jax.Array, pop: Population, *,
-              interpret: bool = True, block_b: int = 128) -> jax.Array:
+              interpret: bool | None = None, block_b: int = 128) -> jax.Array:
     from repro.kernels.ops import m3_matmul  # lazy: kernels import pallas
     return m3_matmul(h, w2,
                      block_seg_ids=np.asarray(pop.block_segment_ids),

@@ -10,6 +10,13 @@ this is what turns the paper's scatter-add into a segment-blocked matmul
 receive zero gradient and the fused network is mathematically identical to the
 P independent networks.
 
+``Population`` is the PER-LAYER layout primitive: it owns the bucketing logic
+(``size_buckets`` for the M3 output projection, ``pair_buckets`` for
+block-diagonal layer→layer projections).  ``LayeredPopulation`` composes one
+``Population`` per hidden layer into a deep population with HETEROGENEOUS
+member depths (shallow members ride through later layers as exact identity
+pass-throughs) and per-layer activations (DESIGN.md §3).
+
 All layout quantities are static Python data (computed at trace time), so jit
 sees them as compile-time constants; only the parameter/activation tensors are
 traced.
@@ -17,6 +24,7 @@ traced.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import cached_property
 from typing import Sequence
 
@@ -27,6 +35,22 @@ from repro.core.activations import ACTIVATION_NAMES
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _instance_cache(method):
+    """Memoise a method on the instance (``__dict__``, like cached_property —
+    works on frozen dataclasses and dies with the instance; a process-global
+    lru_cache would pin every layout ever constructed)."""
+    name = method.__name__
+
+    @functools.wraps(method)
+    def wrapper(self, *args):
+        cache = self.__dict__.setdefault("_method_cache", {})
+        key = (name, args)
+        if key not in cache:
+            cache[key] = method(self, *args)
+        return cache[key]
+    return wrapper
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,6 +217,58 @@ class Population:
         assert self.total_hidden % self.block == 0
         return self.act_ids[:: self.block].copy()
 
+    # ------------------------------------------------------------------ #
+    # bucketing primitives (shared by M3 and the block-diagonal layers)  #
+    # ------------------------------------------------------------------ #
+    @_instance_cache
+    def size_buckets(self):
+        """Contiguous runs of members with identical *padded* size.
+
+        The M3 bucketed implementation reshapes each run to (B, n, hs) and
+        batched-matmuls it.  ``Population.grid`` sorts by (activation, size),
+        so runs are short; the general case still works, just with more
+        buckets.  Returns static (start_member, n_members, padded_size,
+        start_col) tuples.
+        """
+        out = []
+        sizes = self.padded_sizes
+        m = 0
+        while m < self.num_members:
+            n = 1
+            while m + n < self.num_members and sizes[m + n] == sizes[m]:
+                n += 1
+            out.append((m, n, int(sizes[m]), int(self.offsets[m])))
+            m += n
+        return tuple(out)
+
+    def pair_buckets(self, out_pop: "Population", keys: Sequence = None):
+        """Contiguous runs of members with identical padded (in, out) widths
+        for a block-diagonal ``self``→``out_pop`` projection (member m's units
+        in ``out_pop`` contract ONLY member m's units in ``self``).
+
+        ``keys`` (optional, one hashable per member) further splits runs —
+        LayeredPopulation uses it to separate real projections from identity
+        pass-throughs.  Returns static (start_member, n_members, padded_in,
+        padded_out, in_offset, out_offset) tuples.
+        """
+        if out_pop.num_members != self.num_members:
+            raise ValueError("pair_buckets: member count mismatch "
+                             f"({self.num_members} vs {out_pop.num_members})")
+        runs = []
+        m = 0
+        while m < self.num_members:
+            n = 1
+            key = (self.padded_sizes[m], out_pop.padded_sizes[m],
+                   None if keys is None else keys[m])
+            while m + n < self.num_members and \
+                    (self.padded_sizes[m + n], out_pop.padded_sizes[m + n],
+                     None if keys is None else keys[m + n]) == key:
+                n += 1
+            runs.append((m, n, int(key[0]), int(key[1]),
+                         int(self.offsets[m]), int(out_pop.offsets[m])))
+            m += n
+        return tuple(runs)
+
     def member_slice(self, m: int) -> slice:
         """Slice of member m's REAL units (excludes padding)."""
         return slice(int(self.offsets[m]), int(self.offsets[m]) + self.hidden_sizes[m])
@@ -203,3 +279,277 @@ class Population:
         return (f"Population(P={self.num_members}, total_hidden={self.total_hidden}, "
                 f"block={self.block}, in={self.in_features}, out={self.out_features}, "
                 f"acts={dict(by_act)})")
+
+    def layered(self) -> "LayeredPopulation":
+        """This population as a depth-1 LayeredPopulation (same layout)."""
+        return LayeredPopulation(
+            self.in_features, self.out_features,
+            tuple((h,) for h in self.hidden_sizes),
+            tuple((a,) for a in self.activations), block=self.block)
+
+
+# ---------------------------------------------------------------------- #
+# layered populations (heterogeneous depths, per-layer activations)      #
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class BlockDiagLayout:
+    """Static scalar-prefetch metadata for one block-diagonal l→l+1
+    projection run as a single Pallas segment-blocked matmul
+    (kernels/block_diag.py; DESIGN.md §3).
+
+    The fused weight is a flat array of (block × block) tiles, member-major,
+    row-major over each member's (out_tile, in_tile) grid, with ONE shared
+    identity tile appended at index ``n_param_blocks`` (used by pass-through
+    members; it is not a parameter).  For output tile t the kernel reduces
+    over k = 0..n_k[t]-1, reading input tile ``in_start[t]+k`` against weight
+    tile ``w_row[t]+k``.  The ``*_t`` fields describe the TRANSPOSED
+    projection (used for dh in the custom VJP), and ``wb_out_tile/wb_in_tile``
+    map each parameter tile to its (dy, h) tile pair for the dw kernel.
+    """
+    block: int
+    n_in_tiles: int
+    n_out_tiles: int
+    n_param_blocks: int
+    k_max: int
+    in_start: tuple
+    w_row: tuple
+    n_k: tuple
+    k_max_t: int
+    in_start_t: tuple
+    w_row_t: tuple
+    n_k_t: tuple
+    perm_t: tuple        # WB_aug permutation building the transposed tiles
+    wb_out_tile: tuple   # per parameter tile
+    wb_in_tile: tuple
+
+
+def _normalise_member_acts(acts, depth_m: int, member: int):
+    if isinstance(acts, str):
+        acts = (acts,) * depth_m
+    acts = tuple(acts)
+    if len(acts) != depth_m:
+        raise ValueError(
+            f"member {member}: {len(acts)} activations for depth {depth_m}")
+    for a in acts:
+        if a not in ACTIVATION_NAMES:
+            raise ValueError(f"unknown activation {a!r}; "
+                             f"known: {sorted(ACTIVATION_NAMES)}")
+    return acts
+
+
+@dataclasses.dataclass(frozen=True)
+class LayeredPopulation:
+    """P independent deep MLPs with HETEROGENEOUS depths fused into one
+    layered layout.
+
+    ``widths[m]`` is member m's per-hidden-layer width tuple (any length ≥ 1);
+    ``activations[m]`` is either one name (used for every layer) or a tuple of
+    names, one per hidden layer.  The population depth is the maximum member
+    depth; a member of depth d < depth occupies, in every layer l ≥ d, a slice
+    of its FINAL width that is carried through unchanged (identity weight, no
+    bias, identity activation) — an exact structural pass-through, so fused
+    training of mixed-depth members equals standalone training (DESIGN.md §3).
+    """
+
+    in_features: int
+    out_features: int
+    widths: tuple          # tuple[tuple[int, ...]] — per member, per layer
+    activations: tuple     # tuple[tuple[str, ...]] — per member, per layer
+    block: int = 8
+
+    def __post_init__(self):
+        if len(self.widths) != len(self.activations):
+            raise ValueError(
+                f"widths ({len(self.widths)}) and activations "
+                f"({len(self.activations)}) must have the same length")
+        if not self.widths:
+            raise ValueError("empty population")
+        widths = tuple(tuple(int(h) for h in w) for w in self.widths)
+        for m, w in enumerate(widths):
+            if len(w) < 1:
+                raise ValueError(f"member {m}: needs at least one hidden layer")
+            for h in w:
+                if h < 1:
+                    raise ValueError(f"member {m}: hidden size must be >= 1")
+        acts = tuple(_normalise_member_acts(a, len(w), m)
+                     for m, (a, w) in enumerate(zip(self.activations, widths)))
+        object.__setattr__(self, "widths", widths)
+        object.__setattr__(self, "activations", acts)
+
+    # ------------------------------------------------------------------ #
+    # constructors                                                       #
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def grid(in_features: int, out_features: int,
+             layer_widths: Sequence[Sequence[int]],
+             activations: Sequence[str], repeats: int = 1, block: int = 8,
+             sort_members: bool = True) -> "LayeredPopulation":
+        """Architecture-search grid: every widths-tuple × activation pair,
+        repeated — the deep generalisation of ``Population.grid`` (the paper's
+        §7 pool of deep candidates).  ``layer_widths`` entries may have
+        different lengths (heterogeneous depths)."""
+        widths, acts = [], []
+        for a in activations:
+            for w in layer_widths:
+                for _ in range(repeats):
+                    widths.append(tuple(int(h) for h in w))
+                    acts.append(a)
+        lp = LayeredPopulation(in_features, out_features, tuple(widths),
+                               tuple(acts), block=block)
+        return lp.sorted() if sort_members else lp
+
+    def sorted(self) -> "LayeredPopulation":
+        """Reorder members so equal-shape members are contiguous: buckets per
+        projection collapse to one run per (depth, padded widths, acts)
+        class."""
+        def key(m):
+            return (len(self.widths[m]),
+                    tuple(_round_up(h, self.block) for h in self.widths[m]),
+                    self.activations[m], self.widths[m])
+        order = sorted(range(self.num_members), key=key)
+        return dataclasses.replace(
+            self,
+            widths=tuple(self.widths[m] for m in order),
+            activations=tuple(self.activations[m] for m in order))
+
+    # ------------------------------------------------------------------ #
+    # per-layer layouts                                                  #
+    # ------------------------------------------------------------------ #
+    @property
+    def num_members(self) -> int:
+        return len(self.widths)
+
+    @cached_property
+    def member_depths(self) -> tuple:
+        return tuple(len(w) for w in self.widths)
+
+    @property
+    def depth(self) -> int:
+        return max(self.member_depths)
+
+    def layer_width(self, m: int, l: int) -> int:
+        """Member m's width at layer l (its final width once passed-through)."""
+        return self.widths[m][min(l, self.member_depths[m] - 1)]
+
+    def layer_act(self, m: int, l: int) -> str:
+        """Member m's activation at layer l (identity once passed-through)."""
+        return self.activations[m][l] if l < self.member_depths[m] else "identity"
+
+    @_instance_cache
+    def layer_pop(self, l: int) -> Population:
+        """The fused per-layer layout of hidden layer l (member order
+        preserved; pass-through members keep their final-layer slot)."""
+        if not 0 <= l < self.depth:
+            raise ValueError(f"layer {l} out of range [0, {self.depth})")
+        return Population(self.in_features, self.out_features,
+                          tuple(self.layer_width(m, l)
+                                for m in range(self.num_members)),
+                          tuple(self.layer_act(m, l)
+                                for m in range(self.num_members)),
+                          block=self.block)
+
+    def proj_real(self, m: int, l: int) -> bool:
+        """True iff member m has a REAL weight in projection l (layer l→l+1)."""
+        return l + 1 < self.member_depths[m]
+
+    @_instance_cache
+    def proj_buckets(self, l: int):
+        """Buckets of projection l: (m0, n, hin, hout, off_in, off_out, real)
+        runs, where ``real`` marks trained weight blocks vs identity
+        pass-throughs (hin == hout there by construction)."""
+        pin, pout = self.layer_pop(l), self.layer_pop(l + 1)
+        flags = tuple(self.proj_real(m, l) for m in range(self.num_members))
+        return tuple(run + (flags[run[0]],)
+                     for run in pin.pair_buckets(pout, keys=flags))
+
+    @_instance_cache
+    def active_unit_mask(self, l: int) -> np.ndarray:
+        """1.0 for fused units of layer l belonging to members whose layer l
+        is REAL (depth > l), 0.0 for pass-through slices.  Gates the mid-layer
+        bias so pass-through members receive no bias (and no bias gradient)."""
+        pop = self.layer_pop(l)
+        mask = np.zeros(pop.total_hidden, dtype=np.float32)
+        for m in range(self.num_members):
+            if self.member_depths[m] > l:
+                mask[pop.offsets[m]: pop.offsets[m + 1]] = 1.0
+        return mask
+
+    @_instance_cache
+    def bd_layout(self, l: int) -> BlockDiagLayout:
+        """Scalar-prefetch metadata for running projection l as ONE Pallas
+        segment-blocked matmul (see BlockDiagLayout)."""
+        pin, pout = self.layer_pop(l), self.layer_pop(l + 1)
+        blk = self.block
+        P = self.num_members
+        ib = (pin.padded_sizes // blk).astype(int)
+        ob = (pout.padded_sizes // blk).astype(int)
+        in_t0 = (pin.offsets // blk).astype(int)
+        out_t0 = (pout.offsets // blk).astype(int)
+        real = [self.proj_real(m, l) for m in range(P)]
+
+        base = np.zeros(P, dtype=int)
+        acc = 0
+        for m in range(P):
+            base[m] = acc
+            if real[m]:
+                acc += ob[m] * ib[m]
+        n_param = acc
+        ident = n_param                       # shared identity tile (appended)
+
+        n_out_tiles = int(out_t0[P])
+        n_in_tiles = int(in_t0[P])
+        in_start = np.zeros(n_out_tiles, int)
+        w_row = np.zeros(n_out_tiles, int)
+        n_k = np.zeros(n_out_tiles, int)
+        for m in range(P):
+            for r in range(ob[m]):
+                t = out_t0[m] + r
+                if real[m]:
+                    in_start[t], w_row[t], n_k[t] = \
+                        in_t0[m], base[m] + r * ib[m], ib[m]
+                else:
+                    in_start[t], w_row[t], n_k[t] = in_t0[m] + r, ident, 1
+
+        # transposed projection (dh): member-major, (in_tile, out_tile)-major
+        in_start_t = np.zeros(n_in_tiles, int)
+        w_row_t = np.zeros(n_in_tiles, int)
+        n_k_t = np.zeros(n_in_tiles, int)
+        perm = np.zeros(n_param + 1, int)
+        perm[n_param] = n_param
+        wb_out_tile = np.zeros(n_param, int)
+        wb_in_tile = np.zeros(n_param, int)
+        for m in range(P):
+            if real[m]:
+                for r in range(ob[m]):
+                    for c in range(ib[m]):
+                        q = base[m] + r * ib[m] + c
+                        perm[base[m] + c * ob[m] + r] = q
+                        wb_out_tile[q] = out_t0[m] + r
+                        wb_in_tile[q] = in_t0[m] + c
+            for c in range(ib[m]):
+                t = in_t0[m] + c
+                if real[m]:
+                    in_start_t[t], w_row_t[t], n_k_t[t] = \
+                        out_t0[m], base[m] + c * ob[m], ob[m]
+                else:
+                    in_start_t[t], w_row_t[t], n_k_t[t] = out_t0[m] + c, ident, 1
+
+        ints = lambda a: tuple(int(v) for v in a)
+        return BlockDiagLayout(
+            block=blk, n_in_tiles=n_in_tiles, n_out_tiles=n_out_tiles,
+            n_param_blocks=n_param,
+            k_max=int(n_k.max()), in_start=ints(in_start),
+            w_row=ints(w_row), n_k=ints(n_k),
+            k_max_t=int(n_k_t.max()), in_start_t=ints(in_start_t),
+            w_row_t=ints(w_row_t), n_k_t=ints(n_k_t),
+            perm_t=ints(perm),
+            wb_out_tile=ints(wb_out_tile), wb_in_tile=ints(wb_in_tile))
+
+    def describe(self) -> str:
+        import collections
+        by_depth = collections.Counter(self.member_depths)
+        return (f"LayeredPopulation(P={self.num_members}, depth={self.depth}, "
+                f"block={self.block}, in={self.in_features}, "
+                f"out={self.out_features}, depths={dict(sorted(by_depth.items()))}, "
+                f"fused_hidden={[self.layer_pop(l).total_hidden for l in range(self.depth)]})")

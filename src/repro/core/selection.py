@@ -1,15 +1,36 @@
 """Model selection over a trained population (paper §5: "perform model
-selection in the large pool of trained MLPs")."""
+selection in the large pool of trained MLPs").
+
+Works over BOTH layouts — the single-layer ``Population`` and the layered
+engine's ``LayeredPopulation`` — dispatching forward/extract to the matching
+module, so architecture search over mixed-depth pools uses the same three
+calls (evaluate → select → leaderboard) as the paper's single-layer grid.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.parallel_mlp import extract_member, forward, member_accuracy, member_losses
-from repro.core.population import Population
+from repro.core import deep as _deep
+from repro.core import parallel_mlp as _pmlp
+from repro.core.parallel_mlp import member_accuracy, member_losses
+from repro.core.population import LayeredPopulation, Population
 
 
-def evaluate_population(params, pop: Population, x, targets,
+def _forward(params, x, layout, **fw):
+    if isinstance(layout, LayeredPopulation):
+        return _deep.forward(params, x, layout, **fw)
+    return _pmlp.forward(params, x, layout, **fw)
+
+
+def extract_member(params, layout, m: int) -> dict:
+    """Standalone params of member m, whichever layout trained them."""
+    if isinstance(layout, LayeredPopulation):
+        return _deep.extract_member(params, layout, m)
+    return _pmlp.extract_member(params, layout, m)
+
+
+def evaluate_population(params, pop, x, targets,
                         task: str = "classification", batch_size: int = 4096,
                         **fw):
     """Per-member metric over a full eval split (batched to bound memory).
@@ -21,7 +42,7 @@ def evaluate_population(params, pop: Population, x, targets,
     seen = 0
     for i in range(0, n, batch_size):
         xb, tb = x[i:i + batch_size], targets[i:i + batch_size]
-        logits = forward(params, xb, pop, **fw)
+        logits = _forward(params, xb, pop, **fw)
         loss_sum = loss_sum + member_losses(logits, tb, task) * xb.shape[0]
         if task == "classification":
             acc_sum = acc_sum + member_accuracy(logits, tb) * xb.shape[0]
@@ -31,20 +52,29 @@ def evaluate_population(params, pop: Population, x, targets,
     return losses, accs
 
 
-def select_best(params, pop: Population, losses) -> tuple[int, dict]:
+def select_best(params, pop, losses) -> tuple[int, dict]:
     """Best member by eval loss → (index, standalone params)."""
     m = int(jnp.argmin(losses))
     return m, extract_member(params, pop, m)
 
 
-def leaderboard(pop: Population, losses, accs=None, k: int = 10):
-    """Top-k members as (rank, member, hidden, activation, loss[, acc])."""
+def _member_arch(pop, m: int):
+    if isinstance(pop, LayeredPopulation):
+        return pop.widths[m], "/".join(dict.fromkeys(pop.activations[m]))
+    return pop.hidden_sizes[m], pop.activations[m]
+
+
+def leaderboard(pop, losses, accs=None, k: int = 10):
+    """Top-k members as (rank, member, hidden, activation, loss[, acc]).
+
+    For layered populations ``hidden`` is the member's width tuple."""
     import numpy as np
     order = np.argsort(np.asarray(losses))[:k]
     rows = []
     for r, m in enumerate(order):
-        row = dict(rank=r + 1, member=int(m), hidden=pop.hidden_sizes[m],
-                   activation=pop.activations[m], loss=float(losses[m]))
+        hidden, act = _member_arch(pop, int(m))
+        row = dict(rank=r + 1, member=int(m), hidden=hidden,
+                   activation=act, loss=float(losses[m]))
         if accs is not None:
             row["acc"] = float(accs[m])
         rows.append(row)

@@ -67,9 +67,9 @@ def elastic_remesh(state_tree, spec_tree, axis_order=("data", "model"),
         if n % cand == 0:
             model = cand
             break
-    mesh = jax.make_mesh((n // model, model), axis_order,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                         devices=np.asarray(devices))
+    from repro.compat import make_mesh
+    mesh = make_mesh((n // model, model), axis_order,
+                     devices=np.asarray(devices))
     abstract = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state_tree)
     sh = logical_to_sharding(spec_tree, mesh, abstract)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh, set_mesh
+
 # canonical spec fragments
 BATCH_AXES = ("pod", "data")        # batch dim shards over both DP axes
 FSDP_AXIS = "data"                  # parameter sharding (ZeRO-3 style)
@@ -36,7 +38,7 @@ TP_INNER_MIN_COLS = 8192
 
 
 def mesh_axis_sizes() -> dict:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return {}
     return dict(mesh.shape)
@@ -110,7 +112,7 @@ def logical_to_sharding(spec_tree, mesh: Mesh, shape_tree):
     """Spec tree + mesh + abstract shapes -> NamedSharding tree (axes
     filtered per-leaf for existence and divisibility)."""
     def leaf(spec, shp):
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             f = filter_spec(spec, shp.shape)
         return NamedSharding(mesh, f)
     return jax.tree.map(leaf, spec_tree, shape_tree,

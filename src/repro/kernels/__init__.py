@@ -2,11 +2,15 @@
 mode on CPU):
 
   m3_matmul       — segment-blocked matmul (the TPU-native M3), fwd + custom bwd
+  block_diag_gemm — block-diagonal member projection (layered-population mid
+                    layers), fwd + custom bwd via the same kernel transposed
   seg_act         — one-pass per-block activation dispatch + padding mask
   moe_gemm        — grouped GEMM (M3's row-segment dual; MoE expert compute)
   flash_attention — fused online-softmax attention (causal/SWA/GQA), the
                     §Perf-identified lever for memory-bound attention cells
 """
-from repro.kernels.ops import flash_attention, m3_matmul, moe_gemm, seg_act
+from repro.kernels.ops import (block_diag_gemm, flash_attention, m3_matmul,
+                               moe_gemm, seg_act)
 
-__all__ = ["flash_attention", "m3_matmul", "moe_gemm", "seg_act"]
+__all__ = ["block_diag_gemm", "flash_attention", "m3_matmul", "moe_gemm",
+           "seg_act"]

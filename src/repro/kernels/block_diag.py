@@ -1,0 +1,140 @@
+"""Block-diagonal GEMM — the mid-layer projection of layered populations
+(DESIGN.md §3).
+
+Member m's units in layer l+1 contract ONLY member m's units in layer l, so
+the fused l→l+1 weight is block-diagonal with one (O_m × I_m) block per
+member.  Instead of a Python loop of per-bucket einsums this runs as ONE
+dense segment-blocked matmul: the weight is stored as a flat array of
+(block × block) tiles (member-major, row-major over each member's tile grid,
+plus one shared identity tile for pass-through members), and three
+scalar-prefetched arrays select, for output tile t at reduction step k,
+
+    input tile   in_start[t] + k
+    weight tile  w_row[t] + k          (the moe_gemm weight-block-selection
+                                        trick, per *column* segment)
+    steps        k < n_k[t]            (members have different fan-ins, so
+                                        the reduction is masked per tile)
+
+Grid (b_tiles, out_tiles, k_max); revisits of an output tile are consecutive
+grid steps (k innermost) — the standard Pallas reduction pattern, f32 VMEM
+accumulation, no scatter.  Tiles past a member's fan-in are clamped to its
+last valid tile by the index map and masked out of the accumulation.
+
+The backward pass reuses the SAME forward kernel for dh (block-diagonal with
+each member block transposed — a static tile permutation + per-tile
+transpose), and ``block_diag_dw`` accumulates each parameter tile's
+dy^T·x over batch tiles (grid (param_tiles, b_tiles)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------- #
+# forward (also computes dh when fed transposed metadata)               #
+# --------------------------------------------------------------------- #
+
+def _fwd_kernel(ins_ref, row_ref, nk_ref, x_ref, w_ref, y_ref, acc_ref):
+    t = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < nk_ref[t])
+    def _accum():
+        # (block_b, blk) @ (blk, blk)^T on the MXU, f32 accumulate; weight
+        # tiles are (out_rows, in_cols) so the contraction is over dim 1/1.
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...][0],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def block_diag_fwd(x: jax.Array, wb: jax.Array, in_start: jax.Array,
+                   w_row: jax.Array, n_k: jax.Array, *,
+                   n_out_tiles: int, k_max: int, block: int, block_b: int,
+                   interpret: bool = False) -> jax.Array:
+    """x (B, in_tiles·blk), wb (n_tiles, blk, blk) → y (B, out_tiles·blk)."""
+    b = x.shape[0]
+    grid = (b // block_b, n_out_tiles, k_max)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block),
+                             lambda i, t, k, ins, row, nk: (i, ins[t] + jnp.minimum(k, nk[t] - 1))),
+                pl.BlockSpec((1, block, block),
+                             lambda i, t, k, ins, row, nk: (row[t] + jnp.minimum(k, nk[t] - 1), 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block),
+                                   lambda i, t, k, ins, row, nk: (i, t)),
+            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_out_tiles * block), x.dtype),
+        interpret=interpret,
+    )(in_start, w_row, n_k, x, wb)
+
+
+# --------------------------------------------------------------------- #
+# backward: dW tiles                                                    #
+# --------------------------------------------------------------------- #
+
+def _dw_kernel(ot_ref, it_ref, dy_ref, x_ref, dw_ref, acc_ref):
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dW[o, i] = sum_b dy[b, o] · x[b, i]  — contract the batch tile
+    acc_ref[...] += jax.lax.dot_general(
+        dy_ref[...], x_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == nb - 1)
+    def _flush():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)[None]
+
+
+def block_diag_dw(dy: jax.Array, x: jax.Array, wb_out_tile: jax.Array,
+                  wb_in_tile: jax.Array, *, n_param_blocks: int, block: int,
+                  block_b: int, interpret: bool = False) -> jax.Array:
+    """dy (B, out_tiles·blk), x (B, in_tiles·blk) → dWB (n_param, blk, blk).
+
+    Parameter tile q reads dy tile wb_out_tile[q] against x tile
+    wb_in_tile[q]; batch is the (inner) reduction grid dimension."""
+    b = x.shape[0]
+    grid = (n_param_blocks, b // block_b)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block),
+                             lambda q, i, ot, it: (i, ot[q])),
+                pl.BlockSpec((block_b, block),
+                             lambda q, i, ot, it: (i, it[q])),
+            ],
+            out_specs=pl.BlockSpec((1, block, block),
+                                   lambda q, i, ot, it: (q, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_param_blocks, block, block),
+                                       dy.dtype),
+        interpret=interpret,
+    )(wb_out_tile, wb_in_tile, dy, x)

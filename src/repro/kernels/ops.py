@@ -13,10 +13,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import block_diag as _bdk
 from repro.kernels import flash_attn as _flashk
 from repro.kernels import m3_matmul as _m3k
 from repro.kernels import moe_gemm as _moek
 from repro.kernels import seg_act as _segk
+
+
+def _resolve_interpret(interpret) -> bool:
+    """None → auto: compile on TPU, interpret elsewhere (CPU containers run
+    the kernel body in Python for correctness validation)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _pad_axis(x: jax.Array, axis: int, mult: int):
@@ -61,12 +70,14 @@ _m3_core.defvjp(_m3_fwd, _m3_bwd)
 
 def m3_matmul(h: jax.Array, w2: jax.Array, block_seg_ids: np.ndarray,
               num_members: int, *, block_h: int, block_b: int = 128,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     """Segment-blocked matmul; differentiable; pads B and O to block multiples.
 
     h (B, H), w2 (O, H), per-block member ids (H/block_h,) -> (B, M, O).
     H must already be block_h-aligned (Population guarantees this).
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
     """
+    interpret = _resolve_interpret(interpret)
     if h.shape[1] % block_h:
         raise ValueError(f"hidden axis {h.shape[1]} not {block_h}-aligned")
     block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
@@ -76,6 +87,90 @@ def m3_matmul(h: jax.Array, w2: jax.Array, block_seg_ids: np.ndarray,
     seg_t = tuple(int(s) for s in np.asarray(block_seg_ids, np.int32))
     y = _m3_core(hp, w2p, seg_t, num_members, block_h, block_b, interpret)
     return y[:b0, :, :o0]
+
+
+# --------------------------------------------------------------------- #
+# block-diagonal GEMM with custom_vjp (layered-population mid layers)   #
+# --------------------------------------------------------------------- #
+
+def _bd_ids(layout, transposed: bool):
+    import numpy as _np
+    if transposed:
+        return (jnp.asarray(_np.asarray(layout.in_start_t, _np.int32)),
+                jnp.asarray(_np.asarray(layout.w_row_t, _np.int32)),
+                jnp.asarray(_np.asarray(layout.n_k_t, _np.int32)))
+    return (jnp.asarray(_np.asarray(layout.in_start, _np.int32)),
+            jnp.asarray(_np.asarray(layout.w_row, _np.int32)),
+            jnp.asarray(_np.asarray(layout.n_k, _np.int32)))
+
+
+def _bd_augment(wb: jax.Array, layout) -> jax.Array:
+    """Append the shared identity tile used by pass-through members (not a
+    parameter — its cotangent is discarded by the VJP)."""
+    eye = jnp.eye(layout.block, dtype=wb.dtype)[None]
+    return jnp.concatenate([wb, eye], axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _bd_core(h, wb, layout, block_b, interpret):
+    ins, row, nk = _bd_ids(layout, transposed=False)
+    return _bdk.block_diag_fwd(
+        h, _bd_augment(wb, layout), ins, row, nk,
+        n_out_tiles=layout.n_out_tiles, k_max=layout.k_max,
+        block=layout.block, block_b=block_b, interpret=interpret)
+
+
+def _bd_fwd(h, wb, layout, block_b, interpret):
+    return _bd_core(h, wb, layout, block_b, interpret), (h, wb)
+
+
+def _bd_bwd(layout, block_b, interpret, res, dy):
+    import numpy as _np
+    h, wb = res
+    # dh: the transposed block-diagonal — same kernel, per-member-transposed
+    # tiles (static permutation + per-tile transpose) and swapped metadata.
+    wb_t = jnp.transpose(
+        _bd_augment(wb, layout)[_np.asarray(layout.perm_t, _np.int32)],
+        (0, 2, 1))
+    ins_t, row_t, nk_t = _bd_ids(layout, transposed=True)
+    dh = _bdk.block_diag_fwd(
+        dy, wb_t, ins_t, row_t, nk_t,
+        n_out_tiles=layout.n_in_tiles, k_max=layout.k_max_t,
+        block=layout.block, block_b=block_b, interpret=interpret)
+    dwb = _bdk.block_diag_dw(
+        dy, h,
+        jnp.asarray(_np.asarray(layout.wb_out_tile, _np.int32)),
+        jnp.asarray(_np.asarray(layout.wb_in_tile, _np.int32)),
+        n_param_blocks=layout.n_param_blocks, block=layout.block,
+        block_b=block_b, interpret=interpret)
+    return dh, dwb
+
+
+_bd_core.defvjp(_bd_fwd, _bd_bwd)
+
+
+def block_diag_gemm(h: jax.Array, wb: jax.Array, layout, *,
+                    block_b: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Block-diagonal member projection; differentiable; pads B.
+
+    h (B, n_in_tiles·blk), wb (n_param_blocks, blk, blk) tile array,
+    ``layout`` a static ``repro.core.population.BlockDiagLayout`` →
+    (B, n_out_tiles·blk).  Pass-through members are identity-copied via the
+    shared appended identity tile and contribute no weight gradient.
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    interpret = _resolve_interpret(interpret)
+    if h.shape[1] != layout.n_in_tiles * layout.block:
+        raise ValueError(f"input axis {h.shape[1]} != "
+                         f"{layout.n_in_tiles}×{layout.block}")
+    if wb.shape != (layout.n_param_blocks, layout.block, layout.block):
+        raise ValueError(f"weight tiles {wb.shape} != "
+                         f"({layout.n_param_blocks}, {layout.block}, {layout.block})")
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    y = _bd_core(hp, wb, layout, block_b, interpret)
+    return y[:b0]
 
 
 # --------------------------------------------------------------------- #

@@ -21,6 +21,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import set_mesh
 from repro.configs import ArchSpec, ShapeSpec
 from repro.distributed.sharding import BATCH_AXES, logical_to_sharding
 from repro.models import encdec, lm
@@ -332,5 +333,5 @@ def make_cell(arch: ArchSpec, sh: ShapeSpec, mesh) -> Cell:
     if not arch.runs(sh.name):
         raise ValueError(f"{arch.arch_id} skips {sh.name}: {arch.skip_reason}")
     builder = _BUILDERS[(arch.kind, sh.kind)]
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         return builder(arch, sh, mesh)

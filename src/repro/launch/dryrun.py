@@ -27,6 +27,7 @@ import traceback
 import jax
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs import ALL_ARCH_IDS, ALL_SHAPES, get_arch, shape
 from repro.launch.cells import make_cell
 from repro.launch.hlo_cost import analyze as hlo_analyze
@@ -62,14 +63,15 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh_num_devices(mesh)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         cell = make_cell(arch, sh, mesh)
         lowered = cell.lower()
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        from repro.compat import cost_analysis_dict
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
     # loop-aware static profile (XLA's cost_analysis counts while bodies
     # once — see hlo_cost.py); raw XLA numbers kept for reference

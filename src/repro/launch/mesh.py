@@ -12,14 +12,14 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int | None = None):
@@ -32,8 +32,7 @@ def make_host_mesh(model: int | None = None):
             if n % cand == 0 and n >= cand:
                 model = cand
                 break
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def mesh_num_devices(mesh) -> int:

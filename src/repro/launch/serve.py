@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs import get_arch
 from repro.distributed.sharding import logical_to_sharding
 from repro.launch.mesh import make_host_mesh
@@ -26,7 +27,7 @@ def generate_lm(arch, prompts, max_new: int, mesh, greedy: bool = True,
                 temperature: float = 1.0, seed: int = 0):
     """prompts: (B, S) int32 -> (B, S+max_new) tokens + timing dict."""
     cfg = arch.model
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
         b, s = prompts.shape
         max_len = s + max_new
@@ -64,7 +65,7 @@ def _pick(logits, greedy, temperature, key):
 
 def generate_encdec(arch, frames, max_new: int, mesh, seed: int = 0):
     cfg = arch.model
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params, _ = encdec.init_params(jax.random.PRNGKey(0), cfg)
         b = frames.shape[0]
         t0 = time.time()

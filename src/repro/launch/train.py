@@ -8,8 +8,15 @@ is identical, only the mesh differs).  Wires together:
   TrainRunner (checkpoint/restart, straggler watchdog) → metrics log
 
 Flags exercise every distributed feature: --compress-grads (int8 cross-pod
-all-reduce), --ckpt-every / --resume, --population (the paper's fused
-population training for LM population runs see examples/quickstart.py).
+all-reduce), --ckpt-every / --resume.
+
+Population archs (``--arch parallelmlp-10k``) train through the layered
+population engine (core.deep): ``--population-depths "64,32,16;13,5;7"``
+builds a heterogeneous-depth LayeredPopulation (members separated by ';',
+per-layer widths by ','), ``--bd-impl pallas`` routes mid layers through the
+block-diagonal Pallas kernel, ``--per-member-lr`` samples one step size per
+member, and checkpoints carry the fused layout (checkpoint.save_population)
+so ``--resume`` needs no flags re-supplied.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.checkpoint import latest_steps, restore
 from repro.configs import get_arch
 from repro.data import TabularTask, TokenTask
@@ -45,7 +53,7 @@ def run_lm(arch, args, mesh):
     cfg = arch.model
     is_encdec = arch.kind == "encdec"
     mod = encdec if is_encdec else lm
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params, p_sh = _init_sharded(
             lambda k: mod.init_params(k, cfg)[0],
             lambda: mod.abstract_params(cfg), mesh)
@@ -106,6 +114,114 @@ def run_lm(arch, args, mesh):
         return runner
 
 
+def parse_depth_spec(spec: str):
+    """"64,32,16;13,5;7" → ((64, 32, 16), (13, 5), (7,)) — one member per
+    ';'-separated group, one hidden layer per ','-separated width."""
+    widths = []
+    for member in spec.split(";"):
+        member = member.strip()
+        if not member:
+            continue
+        widths.append(tuple(int(w) for w in member.split(",")))
+    if not widths:
+        raise ValueError(f"empty population spec {spec!r}")
+    return tuple(widths)
+
+
+def run_population(arch, args):
+    """Fused population training through the layered engine (core.deep):
+    heterogeneous depths, selectable M3 / block-diagonal implementations,
+    per-member learning rates, layout-carrying checkpoints."""
+    from repro.checkpoint import (latest_steps, restore_population,
+                                  save_population)
+    from repro.core import deep
+    from repro.core.activations import PAPER_TEN
+    from repro.core.population import LayeredPopulation, Population
+    from repro.core.selection import evaluate_population, leaderboard
+    from repro.data import TabularTask
+
+    if args.population_depths:
+        widths = parse_depth_spec(args.population_depths)
+        acts = tuple(a.strip() for a in args.population_acts.split(","))
+        if acts == ("paper",):
+            acts = PAPER_TEN
+        lp = LayeredPopulation(
+            args.population_features, args.population_classes,
+            widths * args.population_repeats,
+            tuple(acts[i % len(acts)]
+                  for i in range(len(widths) * args.population_repeats)),
+            block=args.population_block).sorted()
+    else:
+        model = arch.model
+        lp = model.layered() if isinstance(model, Population) else model
+    print(f"population: {lp.describe()}")
+
+    start = 0
+    if args.resume and latest_steps(args.ckpt_dir):
+        params, lp_ckpt, last = restore_population(args.ckpt_dir)
+        if isinstance(lp_ckpt, Population):
+            # single-layer (parallel_mlp) checkpoint → depth-1 layered
+            # params map one-to-one onto the unified engine
+            lp_ckpt = lp_ckpt.layered()
+            params = {"w_in": params["w1"], "b_in": params["b1"],
+                      "mid": [],
+                      "w_out": params["w2"], "b_out": params["b2"]}
+        if lp_ckpt != lp:
+            print("note: resuming with the CHECKPOINT's layout "
+                  f"({lp_ckpt.describe()})")
+            lp = lp_ckpt
+        start = last + 1
+        print(f"resumed from step {last}")
+    else:
+        params = deep.init_params(jax.random.PRNGKey(args.seed), lp)
+
+    # everything below depends on the RESOLVED layout (a resumed checkpoint
+    # may change member count and feature/class dims)
+    task = TabularTask(args.samples, lp.in_features,
+                       n_classes=lp.out_features, seed=args.seed)
+    (xtr, ytr), (xte, yte) = task.split()
+
+    lr = arch.lr
+    if args.per_member_lr:
+        lr = jnp.exp(jax.random.uniform(
+            jax.random.PRNGKey(args.seed + 1), (lp.num_members,),
+            minval=jnp.log(arch.lr * 0.3), maxval=jnp.log(arch.lr * 3.0)))
+        print(f"per-member learning rates in "
+              f"[{arch.lr * 0.3:.4f}, {arch.lr * 3.0:.4f}]")
+
+    t0 = time.time()
+    loss0 = loss = None
+    for step in range(start, args.steps):
+        xb, yb = task.batch(step, args.batch)
+        params, loss, _per = deep.sgd_step(
+            params, jnp.asarray(xb), jnp.asarray(yb), lr, lp,
+            args.m3_impl, args.bd_impl)
+        loss0 = loss if loss0 is None else loss0
+        if step % 50 == 0:
+            print(f"step {step:4d}  mean member loss "
+                  f"{float(loss) / lp.num_members:.4f}")
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            save_population(args.ckpt_dir, step, params, lp)
+    dt = time.time() - t0
+    steps_run = max(args.steps - start, 0)
+    if steps_run:
+        print(f"trained {lp.num_members} MLPs × {steps_run} steps in "
+              f"{dt:.1f}s ({lp.num_members * steps_run / max(dt, 1e-9):.0f} "
+              f"model-steps/s); loss {float(loss0) / lp.num_members:.4f} -> "
+              f"{float(loss) / lp.num_members:.4f}")
+        if args.ckpt_every:
+            save_population(args.ckpt_dir, max(args.steps - 1, 0), params, lp)
+
+    losses, accs = evaluate_population(params, lp, jnp.asarray(xte),
+                                       jnp.asarray(yte))
+    print("leaderboard:")
+    for row in leaderboard(lp, losses, accs, k=min(10, lp.num_members)):
+        print(f"  #{row['rank']:2d} member {row['member']:4d} "
+              f"hidden={row['hidden']} {row['activation']:11s} "
+              f"loss={row['loss']:.4f} acc={row['acc']:.3f}")
+    return params, lp
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -122,16 +238,37 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--straggler-timeout", type=float, default=1e9)
+    # population-engine flags (kind == "population")
+    ap.add_argument("--population-depths", default=None,
+                    help='heterogeneous-depth spec, e.g. "64,32,16;13,5;7" '
+                         "(members by ';', per-layer widths by ',')")
+    ap.add_argument("--population-acts", default="relu",
+                    help="comma list cycled over members, or 'paper' for "
+                         "the ten paper activations")
+    ap.add_argument("--population-repeats", type=int, default=1)
+    ap.add_argument("--population-features", type=int, default=20)
+    ap.add_argument("--population-classes", type=int, default=2)
+    ap.add_argument("--population-block", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=2048)
+    ap.add_argument("--m3-impl", default="bucketed",
+                    choices=["scatter", "onehot", "bucketed", "pallas"])
+    ap.add_argument("--bd-impl", default="einsum",
+                    choices=["einsum", "pallas"])
+    ap.add_argument("--per-member-lr", action="store_true",
+                    help="paper §7: every member gets its own step size")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, reduced=args.reduced)
+    if arch.kind == "population":
+        run_population(arch, args)
+        return
     mesh = make_host_mesh()
     print(f"arch={args.arch} mesh={dict(mesh.shape)} "
           f"devices={len(jax.devices())}")
     if arch.kind in ("lm", "encdec"):
         run_lm(arch, args, mesh)
     else:
-        raise SystemExit("population training: use examples/quickstart.py")
+        raise SystemExit(f"unknown arch kind {arch.kind!r}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,15 @@
-"""Optimizers + schedules (optax-free, sharding-aware)."""
+"""Optimizers + schedules (optax-free, sharding-aware, per-member-lr
+capable: pass a pytree of per-leaf scales as ``lr``)."""
 from repro.optim.optimizers import (OPTIMIZERS, SCHEDULES, Optimizer,
                                     adafactor, adamw, apply_updates,
-                                    clip_by_global_norm, constant_lr,
-                                    global_norm, make_optimizer, sgd,
-                                    tree_cast, tree_zeros_like, warmup_cosine)
+                                    broadcast_lr, clip_by_global_norm,
+                                    constant_lr, global_norm, make_optimizer,
+                                    sgd, tree_cast, tree_zeros_like,
+                                    warmup_cosine)
 
 __all__ = [
     "OPTIMIZERS", "SCHEDULES", "Optimizer", "adafactor", "adamw",
-    "apply_updates", "clip_by_global_norm", "constant_lr", "global_norm",
-    "make_optimizer", "sgd", "tree_cast", "tree_zeros_like", "warmup_cosine",
+    "apply_updates", "broadcast_lr", "clip_by_global_norm", "constant_lr",
+    "global_norm", "make_optimizer", "sgd", "tree_cast", "tree_zeros_like",
+    "warmup_cosine",
 ]

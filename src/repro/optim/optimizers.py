@@ -15,6 +15,12 @@ API: ``Optimizer(init, update, state_specs)``.
   update(grads, state, params, lr) -> (updates, new_state)   # updates: deltas
   state_specs(param_specs, abstract_params) -> spec tree matching state
 
+``lr`` may be a scalar OR a pytree of per-leaf scale arrays matching the
+param tree (broadcastable against each leaf) — this is how per-member
+learning rates reach fused populations: ``core.deep.member_lr_tree``
+expands a (P,) vector into exactly such a tree, and every optimizer here
+applies it leaf-wise (the paper's §7 "parallelise the learning rate too").
+
 ``state_specs`` needs the *abstract* params (shapes) because adafactor's
 state structure depends on each leaf's rank.  Every state leaf inherits its
 sharding from the param leaf it tracks (factored leaves drop the reduced
@@ -55,6 +61,27 @@ def _is_spec(x):
     return isinstance(x, P)
 
 
+def broadcast_lr(lr, tree):
+    """Normalise ``lr`` to a pytree matching ``tree``.
+
+    Scalars (python numbers / 0-d arrays) are replicated to every leaf; a
+    pytree (e.g. from ``core.deep.member_lr_tree``) is passed through after a
+    structure check, so mismatches fail loudly here instead of deep inside a
+    tree.map.  A raw per-member (P,) vector is rejected for the same reason —
+    expand it with ``core.deep.member_lr_tree`` first."""
+    if isinstance(lr, (dict, list, tuple)):
+        if jax.tree_util.tree_structure(lr) != jax.tree_util.tree_structure(tree):
+            raise ValueError("lr pytree structure does not match params")
+        return lr
+    if getattr(lr, "ndim", 0) != 0:
+        raise ValueError(
+            f"lr must be a scalar or a pytree of per-leaf scales, got an "
+            f"array of shape {lr.shape}; expand per-member vectors with "
+            "core.deep.member_lr_tree(layout, lr) first")
+    flat, tdef = jax.tree.flatten(tree)
+    return tdef.unflatten([lr] * len(flat))
+
+
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
     init: Callable[[Any], Any]
@@ -74,17 +101,19 @@ def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
         return st
 
     def update(grads, state, params, lr):
+        lrs = broadcast_lr(lr, grads)
         if not momentum:
-            upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+            upd = jax.tree.map(lambda g, l: -l * g.astype(jnp.float32),
+                               grads, lrs)
             return upd, {"count": state["count"] + 1}
         mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
                           state["mu"], grads)
         if nesterov:
             upd = jax.tree.map(
-                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)),
-                mu, grads)
+                lambda m, g, l: -l * (momentum * m + g.astype(jnp.float32)),
+                mu, grads, lrs)
         else:
-            upd = jax.tree.map(lambda m: -lr * m, mu)
+            upd = jax.tree.map(lambda m, l: -l * m, mu, lrs)
         return upd, {"count": state["count"] + 1, "mu": mu}
 
     def state_specs(param_specs, abstract_params):
@@ -115,19 +144,21 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         bc1 = 1.0 - b1 ** cf
         bc2 = 1.0 - b2 ** cf
 
-        def leaf(g, m, v, p):
+        def leaf(g, m, v, p, l):
             gf = g.astype(jnp.float32)
             m32 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
             v32 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
             step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
             if weight_decay:
                 step = step + weight_decay * p.astype(jnp.float32)
-            return -lr * step, m32.astype(state_dtype), v32.astype(state_dtype)
+            return -l * step, m32.astype(state_dtype), v32.astype(state_dtype)
 
         flat_g, tdef = jax.tree.flatten(grads)
-        out = [leaf(g, m, v, p) for g, m, v, p in zip(
+        flat_lr = tdef.flatten_up_to(broadcast_lr(lr, grads))
+        out = [leaf(g, m, v, p, l) for g, m, v, p, l in zip(
             flat_g, tdef.flatten_up_to(state["m"]),
-            tdef.flatten_up_to(state["v"]), tdef.flatten_up_to(params))]
+            tdef.flatten_up_to(state["v"]), tdef.flatten_up_to(params),
+            flat_lr)]
         return (tdef.unflatten([o[0] for o in out]),
                 {"count": c,
                  "m": tdef.unflatten([o[1] for o in out]),
@@ -168,7 +199,7 @@ def adafactor(b2: float = 0.99, eps: float = 1e-30, momentum: float = 0.9,
     def update(grads, state, params, lr):
         c = state["count"] + 1
 
-        def leaf(g, st, p):
+        def leaf(g, st, p, l):
             gf = g.astype(jnp.float32)
             g2 = gf * gf + eps
             new_st = {}
@@ -191,14 +222,15 @@ def adafactor(b2: float = 0.99, eps: float = 1e-30, momentum: float = 0.9,
                 u = m
             if weight_decay:
                 u = u + weight_decay * p.astype(jnp.float32)
-            return -lr * u, new_st
+            return -l * u, new_st
 
         flat_g, tdef = jax.tree.flatten(grads)
         is_state_leaf = lambda x: isinstance(x, dict) and (
             "v" in x or "v_row" in x)
         flat_st = jax.tree.flatten(state["leaves"], is_leaf=is_state_leaf)[0]
-        out = [leaf(g, s, p) for g, s, p in
-               zip(flat_g, flat_st, tdef.flatten_up_to(params))]
+        out = [leaf(g, s, p, l) for g, s, p, l in
+               zip(flat_g, flat_st, tdef.flatten_up_to(params),
+                   tdef.flatten_up_to(broadcast_lr(lr, grads)))]
         return (tdef.unflatten([o[0] for o in out]),
                 {"count": c, "leaves": tdef.unflatten([o[1] for o in out])})
 

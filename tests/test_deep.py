@@ -1,6 +1,8 @@
 """Deep ParallelMLPs (paper §7 / Figure 3): the block-diagonal fusion keeps
 MULTI-hidden-layer members independent — fused training equals standalone
-training, the paper's open conjecture verified."""
+training, the paper's open conjecture verified.  ``DeepPopulation`` is now an
+alias of the unified ``LayeredPopulation`` engine (uniform depth is just the
+degenerate case); heterogeneous-depth coverage lives in test_layered.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -84,9 +86,22 @@ def test_deep_fused_training_is_independent():
             rtol=2e-4, atol=2e-5, err_msg=f"member {m} w_out")
 
 
-def test_depth_mismatch_rejected():
+def test_mixed_depths_now_supported():
+    """Mixed depths are no longer rejected — they are the unified engine's
+    headline feature (shallow members pass through identity-padded layers)."""
+    dp = DeepPopulation(4, 2, ((3, 4), (3,)), ("relu", "relu"))
+    params = init_params(jax.random.PRNGKey(0), dp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 4))
+    fused = forward(params, x, dp)
+    for m in range(2):
+        want = member_forward(extract_member(params, dp, m), x)
+        np.testing.assert_allclose(np.asarray(fused[:, m]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_invalid_activation_rejected():
     with pytest.raises(ValueError):
-        DeepPopulation(4, 2, ((3, 4), (3,)), ("relu", "relu"))
+        DeepPopulation(4, 2, ((3, 4),), ("nope",))
 
 
 def test_three_hidden_layers():

@@ -9,14 +9,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, json
 import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.configs.base import ShapeSpec
 from repro.launch.cells import make_cell
 from repro.launch.hlo_cost import analyze
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 CASES = [
     ("qwen3-1.7b", ShapeSpec("train_4k", "train", 32, 8)),

@@ -80,8 +80,8 @@ def test_quantize_roundtrip_error_feedback():
 def test_compressed_psum_single_axis():
     """On a 1-sized axis the compressed reduce must be a near-identity
     (quantisation only) and converge via error feedback."""
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("pod",))
     g = {"w": jnp.asarray(np.random.default_rng(1).normal(0, 1, (64,)),
                           jnp.float32)}
     err = init_error_feedback(g)
@@ -92,8 +92,8 @@ def test_compressed_psum_single_axis():
     from jax.sharding import PartitionSpec as P
     spec = jax.tree.map(lambda _: P(), g)
     out, err2 = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=(spec, spec),
-                      out_specs=(spec, spec), check_vma=False))(g, err)
+        shard_map(f, mesh=mesh, in_specs=(spec, spec),
+                  out_specs=(spec, spec), check=False))(g, err)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),
                                atol=2e-2)
     # feeding the error back makes the two-step average exact-ish

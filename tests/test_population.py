@@ -5,7 +5,7 @@ these invariants: block alignment, disjoint member slices covering the
 fused axis, padding masks, per-unit metadata consistency."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.activations import PAPER_TEN
 from repro.core.population import Population

@@ -34,11 +34,11 @@ _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, set_mesh
 from repro.distributed.sharding import filter_spec, constrain
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
-with jax.set_mesh(mesh):
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+with set_mesh(mesh):
     # divisibility: dim 3 cannot shard 2-ways -> axis dropped
     assert filter_spec(P(("pod", "data"), "model"), (8, 3)) == \
         P(("pod", "data"), None), filter_spec(P(("pod","data"), "model"), (8, 3))
@@ -62,7 +62,7 @@ def test_filter_spec_divisibility_subprocess():
                        capture_output=True, text=True,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                             "HOME": "/root"},
-                       cwd="/root/repo", timeout=300)
+                       cwd="/root/repo", timeout=900)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
 
@@ -71,14 +71,14 @@ _SUBPROC_MOE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh, set_mesh
 from repro.nn.ffn import MoEConfig, moe_init, moe_apply_dense, moe_apply_shard_map
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = MoEConfig(d_model=16, d_expert=8, num_experts=8, top_k=2,
                 capacity_factor=8.0, sharding="ep")
 p, _ = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_ref, _ = moe_apply_dense(p, cfg, x)
     y_ep, _ = jax.jit(lambda pp, xx: moe_apply_shard_map(
         pp, cfg, xx, mesh, ep_axis="model", sp_axis=("data",)))(p, x)
@@ -94,6 +94,6 @@ def test_moe_shard_map_matches_dense_subprocess():
                        capture_output=True, text=True,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                             "HOME": "/root"},
-                       cwd="/root/repo", timeout=600)
+                       cwd="/root/repo", timeout=900)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
