@@ -62,8 +62,10 @@ def bench(pop, batch, impl, iters=5):
     return wall, stats
 
 
-def bench_deep(lp, batch, bd_impl, iters=3):
+def bench_deep(lp, batch, bd_impl, iters=3, shardings=None):
     params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+    if shardings is not None:
+        params = jax.device_put(params, shardings)
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, lp.in_features))
     y = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0,
                            lp.out_features)
@@ -85,28 +87,109 @@ def bench_deep(lp, batch, bd_impl, iters=3):
     return wall, stats
 
 
+def bench_scan_vs_loop(lp, batch, scan_steps, steps=None, bd_impl="einsum",
+                       shardings=None):
+    """Per-step jitted dispatch loop vs ONE donated lax.scan chunk over the
+    same optimizer steps (deep.make_population_train_step): the scanned
+    chunk pays one dispatch per ``scan_steps`` steps and keeps params on
+    device throughout."""
+    steps = steps or scan_steps * 4
+    steps -= steps % scan_steps
+    params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+    if shardings is not None:
+        params = jax.device_put(params, shardings)
+    xs = jax.random.normal(jax.random.PRNGKey(1),
+                           (steps, batch, lp.in_features))
+    ys = jax.random.randint(jax.random.PRNGKey(2), (steps, batch), 0,
+                            lp.out_features)
+
+    def run_loop(p):
+        for i in range(steps):
+            p, _, _ = deep_mod.sgd_step(p, xs[i], ys[i], 0.05, lp,
+                                        "bucketed", bd_impl)
+        return p
+
+    def run_scan(p, chunk):
+        for c in range(steps // scan_steps):
+            sl = slice(c * scan_steps, (c + 1) * scan_steps)
+            p, _, _ = chunk(p, xs[sl], ys[sl], 0.05)
+        return p
+
+    jax.block_until_ready(run_loop(jax.tree.map(jnp.copy, params)))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_loop(jax.tree.map(jnp.copy, params)))
+    loop_s = time.perf_counter() - t0
+
+    chunk = deep_mod.make_population_train_step(
+        lp, bd_impl=bd_impl, scan_steps=scan_steps)
+    jax.block_until_ready(run_scan(jax.tree.map(jnp.copy, params), chunk))
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_scan(jax.tree.map(jnp.copy, params), chunk))
+    scan_s = time.perf_counter() - t0
+
+    return {"steps": steps, "scan_steps": scan_steps,
+            "loop_ms_per_step": round(loop_s / steps * 1e3, 3),
+            "scan_ms_per_step": round(scan_s / steps * 1e3, 3),
+            "scan_speedup": round(loop_s / max(scan_s, 1e-12), 3)}
+
+
 def run_deep(args):
     """Mixed-depth layered population: einsum bucket loop vs the Pallas
-    block-diagonal kernel (interpret on CPU)."""
+    block-diagonal kernel (interpret on CPU), plus the scanned-chunk vs
+    per-step-loop train-step shoot-out.  ``--sharded`` runs everything
+    under the host mesh (population axis = 'model'; launch with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N to fake devices)."""
+    import contextlib
+
     base = [(24,), (13, 5), (17, 9), (32, 16, 8)]
     lp = LayeredPopulation.grid(
         20, 2, base, ("relu", "tanh"),
         repeats=max(args.members // (2 * len(base)), 1), block=args.block)
+
+    mesh = None
+    shardings = None
+    ctx = contextlib.nullcontext()
+    if args.sharded:
+        from repro.compat import set_mesh
+        from repro.distributed.sharding import (pop_axis_size,
+                                                population_shardings)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        lp = lp.shard_pad(pop_axis_size(mesh))
+        shardings = population_shardings(lp, mesh)
+        ctx = set_mesh(mesh)
+        print(f"# mesh: {dict(mesh.shape)} ({len(jax.devices())} devices)")
     print(f"# population: {lp.describe()}")
-    print("bd_impl,wall_ms,dot_gflops,hbm_mb")
-    rows = {}
-    for impl in args.bd_impls:
-        wall, stats = bench_deep(lp, args.batch, impl)
-        rows[impl] = {"wall_ms": round(wall * 1e3, 2),
-                      "dot_gflops": round(stats["flops"] / 1e9, 4),
-                      "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2)}
-        print(f"{impl},{wall*1e3:.2f},{stats['flops']/1e9:.3f},"
-              f"{stats['hbm_bytes']/1e6:.1f}", flush=True)
+
+    with ctx:
+        print("bd_impl,wall_ms,dot_gflops,hbm_mb")
+        rows = {}
+        for impl in args.bd_impls:
+            wall, stats = bench_deep(lp, args.batch, impl,
+                                     shardings=shardings)
+            rows[impl] = {"wall_ms": round(wall * 1e3, 2),
+                          "dot_gflops": round(stats["flops"] / 1e9, 4),
+                          "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2)}
+            print(f"{impl},{wall*1e3:.2f},{stats['flops']/1e9:.3f},"
+                  f"{stats['hbm_bytes']/1e6:.1f}", flush=True)
+        train = bench_scan_vs_loop(lp, args.batch, args.scan_steps,
+                                   shardings=shardings)
+        print(f"# train step: loop {train['loop_ms_per_step']} ms/step vs "
+              f"scan({train['scan_steps']}) {train['scan_ms_per_step']} "
+              f"ms/step ({train['scan_speedup']}x)", flush=True)
+
+    out = {"bench": "deep_population", "population": lp.describe(),
+           "batch": args.batch, "results": rows, "train_step": train,
+           "sharded": bool(args.sharded),
+           "mesh": dict(mesh.shape) if mesh else None}
+    if "einsum" in rows and "pallas" in rows:
+        # the tracked pallas-vs-einsum HBM regression number (the kernel's
+        # dense tile array reads vs the bucket loop's tight slices)
+        out["hbm_gap_mb"] = round(rows["pallas"]["hbm_mb"]
+                                  - rows["einsum"]["hbm_mb"], 2)
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump({"bench": "deep_population",
-                       "population": lp.describe(),
-                       "batch": args.batch, "results": rows}, f, indent=2)
+            json.dump(out, f, indent=2)
         print(f"# wrote {args.json_out}")
 
 
@@ -120,6 +203,12 @@ def main(argv=None):
                     help="bench the layered engine (BD_IMPLS shoot-out) "
                          "instead of the single-layer M3 variants")
     ap.add_argument("--bd-impls", nargs="+", default=["einsum", "pallas"])
+    ap.add_argument("--sharded", action="store_true",
+                    help="--deep: run under the host mesh (shard-padded "
+                         "population axis; fake devices via XLA_FLAGS)")
+    ap.add_argument("--scan-steps", type=int, default=8,
+                    help="--deep: chunk size for the scan-vs-loop "
+                         "train-step bench")
     ap.add_argument("--json-out", default=None,
                     help="write results as JSON (BENCH_*.json tracking)")
     args = ap.parse_args(argv)

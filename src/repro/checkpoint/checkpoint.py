@@ -176,9 +176,17 @@ def _layout_meta(layout, params) -> dict:
         "widths": [list(w) for w in layout.widths],
         "activations": [list(a) for a in layout.activations],
         "block": layout.block,
+        "n_pad": layout.n_pad,
         "schema": schema,
         "dtype": dtype,
     }}
+
+
+def population_meta(layout, params) -> dict:
+    """Public alias of the layout-meta builder — what a caller (e.g.
+    ``TrainRunner``'s checkpointer) attaches so its generic saves stay
+    ``restore_population``-compatible."""
+    return _layout_meta(layout, params)
 
 
 def layout_from_meta(meta: dict):
@@ -188,7 +196,7 @@ def layout_from_meta(meta: dict):
         int(p["in_features"]), int(p["out_features"]),
         tuple(tuple(int(h) for h in w) for w in p["widths"]),
         tuple(tuple(a) for a in p["activations"]),
-        block=int(p["block"]))
+        block=int(p["block"]), n_pad=int(p.get("n_pad", 0)))
 
 
 def save_population(directory: str, step: int, params, layout,
@@ -205,7 +213,7 @@ def save_population(directory: str, step: int, params, layout,
 
 
 def restore_population(directory: str, step: int | None = None,
-                       extra_like=None):
+                       extra_like=None, mesh=None):
     """→ (params, layout, step[, extra_state]).
 
     The parameter tree is rebuilt from the stored layout, schema, and dtype —
@@ -213,7 +221,11 @@ def restore_population(directory: str, step: int | None = None,
     ``LayeredPopulation`` for layered-engine checkpoints, a ``Population``
     for single-layer (parallel_mlp) ones, so (params, layout) always works
     together in forward/selection.  Pass ``extra_like`` (matching the
-    ``extra_state`` given to ``save_population``) to restore it too."""
+    ``extra_state`` given to ``save_population``) to restore it too.
+
+    ``mesh``: restore SHARDED — parameters are device_put straight onto the
+    mesh through the layout's ``param_specs()`` (elastic: any device count;
+    non-dividing axes replicate).  Extra state restores replicated."""
     import jax.numpy as jnp
     meta, step = load_meta(directory, step)
     if "population" not in meta:
@@ -240,7 +252,12 @@ def restore_population(directory: str, step: int | None = None,
     like = {"params": abstract}
     if extra_like is not None:
         like["extra"] = extra_like
-    tree, step = restore(directory, like, step=step)
+    shardings = None
+    if mesh is not None:
+        from repro.distributed.sharding import logical_to_sharding
+        shardings = {"params": logical_to_sharding(
+            layout.param_specs(), mesh, abstract)}
+    tree, step = restore(directory, like, shardings=shardings, step=step)
     if extra_like is not None:
         return tree["params"], layout, step, tree["extra"]
     return tree["params"], layout, step
@@ -249,24 +266,43 @@ def restore_population(directory: str, step: int | None = None,
 class AsyncCheckpointer:
     """Off-thread commit: ``maybe_save`` snapshots to host synchronously
     (fast) and hands serialisation to a worker; ``wait`` joins in-flight
-    writes (call before exit / before restore)."""
+    writes (call before exit / before restore).
 
-    def __init__(self, directory: str, every: int = 100, keep_last: int = 3):
+    ``meta`` is attached to every save (population runs pass the layout
+    meta so the files stay ``restore_population``-compatible);
+    ``step_map`` translates the caller's step counter into the RECORDED
+    step (a scanned train loop counts chunks but checkpoints must carry
+    global step numbers so resume cadence survives a ``--scan-steps``
+    change); ``save_pred`` replaces the ``step % every`` cadence with an
+    arbitrary predicate on the caller's step counter (a scanned loop fires
+    when a chunk CROSSES a global-step cadence boundary, so ``ckpt_every``
+    keeps meaning global steps, not chunks)."""
+
+    def __init__(self, directory: str, every: int = 100, keep_last: int = 3,
+                 meta: dict | None = None, step_map=None, save_pred=None):
         self.directory = directory
         self.every = every
         self.keep_last = keep_last
+        self.meta = meta
+        self.step_map = step_map or (lambda s: s)
+        self.save_pred = save_pred
         self._thread: threading.Thread | None = None
         self.saved = []
 
     def maybe_save(self, step: int, state_tree) -> bool:
-        if step % self.every:
+        if self.save_pred is not None:
+            if not self.save_pred(step):
+                return False
+        elif not self.every or step % self.every:
             return False
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  state_tree)
+        rec_step = self.step_map(step)
 
         def work():
-            p = save(self.directory, step, host_tree, self.keep_last)
+            p = save(self.directory, rec_step, host_tree, self.keep_last,
+                     meta=self.meta)
             self.saved.append(p)
 
         self._thread = threading.Thread(target=work, daemon=True)

@@ -166,35 +166,84 @@ def abstract_params(lp: LayeredPopulation, dtype=jnp.float32):
                           jax.random.PRNGKey(0))
 
 
+def pad_params(params, lp: LayeredPopulation, lp_pad: LayeredPopulation,
+               key, dtype=jnp.float32) -> dict:
+    """Embed ``params`` (initialised for ``lp``) into the shard-padded
+    layout ``lp_pad = lp.shard_pad(n)``; filler-member parameters are drawn
+    from ``key``.  Because fillers are TRAILING in every member-major axis
+    and never share a bucket with real members (``proj_buckets`` pad flag),
+    the real region of the result is BIT-IDENTICAL to ``params`` — a
+    sharded run initialises exactly like the single-device run."""
+    if lp_pad == lp:
+        return params
+    if (lp_pad.num_real != lp.num_members
+            or lp_pad.widths[:lp.num_members] != lp.widths
+            or lp_pad.depth != lp.depth):
+        raise ValueError("lp_pad is not a shard-padded extension of lp")
+    fill = LayeredPopulation(
+        lp.in_features, lp.out_features,
+        lp_pad.widths[lp_pad.num_real:],
+        lp_pad.activations[lp_pad.num_real:], block=lp.block)
+    fp = init_params(key, fill, dtype)
+    out = {
+        "w_in": jnp.concatenate([params["w_in"], fp["w_in"]], axis=0),
+        "b_in": jnp.concatenate([params["b_in"], fp["b_in"]], axis=0),
+        "mid": [{"w": list(params["mid"][l]["w"]) + list(fp["mid"][l]["w"]),
+                 "b": jnp.concatenate([params["mid"][l]["b"],
+                                       fp["mid"][l]["b"]], axis=0)}
+                for l in range(lp.depth - 1)],
+        "w_out": jnp.concatenate([params["w_out"], fp["w_out"]], axis=1),
+        "b_out": jnp.concatenate([params["b_out"], fp["b_out"]], axis=0),
+    }
+    return out
+
+
 # ---------------------------------------------------------------------- #
 # forward / loss / step                                                  #
 # ---------------------------------------------------------------------- #
 
-def _act(lp: LayeredPopulation, l: int, h: jax.Array) -> jax.Array:
+def _act(lp: LayeredPopulation, l: int, h: jax.Array,
+         act_impl: str = "sliced") -> jax.Array:
+    """Per-layer activation + padding mask: ``sliced`` (one XLA pass per
+    contiguous activation run), ``masked`` (branchless select oracle), or
+    ``pallas`` (kernels/seg_act: one tile-wise lax.switch pass, activation
+    id scalar-prefetched, mask fused — the ROADMAP follow-up)."""
     pop = lp.layer_pop(l)
-    h = apply_activations_sliced(h, pop.act_runs)
+    if act_impl == "sliced":
+        h = apply_activations_sliced(h, pop.act_runs)
+    elif act_impl == "masked":
+        from repro.core.activations import apply_activations_masked
+        h = apply_activations_masked(h, pop.act_ids)
+    elif act_impl == "pallas":
+        from repro.kernels.ops import seg_act  # lazy: kernels import pallas
+        return seg_act(h, pop.block_act_ids, pop.hidden_mask,
+                       block_h=lp.block)
+    else:
+        raise ValueError(f"unknown act_impl {act_impl!r}")
     return h * jnp.asarray(pop.hidden_mask, h.dtype)
 
 
 def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
-            bd_impl: str = "einsum", bd_kwargs: dict | None = None,
-            m3_kwargs: dict | None = None):
+            bd_impl: str = "einsum", act_impl: str = "sliced",
+            bd_kwargs: dict | None = None, m3_kwargs: dict | None = None):
     """x (B, F) → logits (B, P, O) — every member an independent deep MLP."""
-    h = _act(lp, 0, x @ params["w_in"].T + params["b_in"])
+    h = _act(lp, 0, x @ params["w_in"].T + params["b_in"], act_impl)
     for l in range(lp.depth - 1):
         h = block_diag_matmul(h, params["mid"][l]["w"], lp, l, impl=bd_impl,
                               **(bd_kwargs or {}))
         h = h + params["mid"][l]["b"] * jnp.asarray(
             lp.active_unit_mask(l + 1), h.dtype)
-        h = _act(lp, l + 1, h)
+        h = _act(lp, l + 1, h, act_impl)
     y = _m3_apply(h, params["w_out"], lp.layer_pop(lp.depth - 1),
                   impl=m3_impl, **(m3_kwargs or {}))
     return y + params["b_out"][None]
 
 
 def fused_loss(params, x, targets, lp: LayeredPopulation,
-               m3_impl: str = "bucketed", bd_impl: str = "einsum"):
-    logits = forward(params, x, lp, m3_impl=m3_impl, bd_impl=bd_impl)
+               m3_impl: str = "bucketed", bd_impl: str = "einsum",
+               act_impl: str = "sliced"):
+    logits = forward(params, x, lp, m3_impl=m3_impl, bd_impl=bd_impl,
+                     act_impl=act_impl)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(
         logp, targets[:, None, None].astype(jnp.int32), axis=-1)[..., 0]
@@ -222,13 +271,14 @@ def member_lr_tree(lp: LayeredPopulation, lr) -> dict:
     return tree
 
 
-@partial(jax.jit, static_argnames=("lp", "m3_impl", "bd_impl"))
-def sgd_step(params, x, targets, lr, lp: LayeredPopulation,
-             m3_impl: str = "bucketed", bd_impl: str = "einsum"):
-    """One fused SGD step.  ``lr`` may be a scalar or a per-member (P,)
-    vector."""
+def _sgd_update(params, x, targets, lr, lp: LayeredPopulation,
+                m3_impl: str = "bucketed", bd_impl: str = "einsum",
+                act_impl: str = "sliced"):
+    """The un-jitted SGD step body (shared by ``sgd_step`` and the scanned
+    ``make_population_train_step``).  ``lr`` may be a scalar or a
+    per-member (P,) vector."""
     (loss, per), grads = jax.value_and_grad(fused_loss, has_aux=True)(
-        params, x, targets, lp, m3_impl, bd_impl)
+        params, x, targets, lp, m3_impl, bd_impl, act_impl)
     lr = jnp.asarray(lr)
     if lr.ndim == 0:
         new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
@@ -236,6 +286,50 @@ def sgd_step(params, x, targets, lr, lp: LayeredPopulation,
         scales = member_lr_tree(lp, lr)
         new = jax.tree.map(lambda p, g, s: p - s * g, params, grads, scales)
     return new, loss, per
+
+
+@partial(jax.jit, static_argnames=("lp", "m3_impl", "bd_impl", "act_impl"))
+def sgd_step(params, x, targets, lr, lp: LayeredPopulation,
+             m3_impl: str = "bucketed", bd_impl: str = "einsum",
+             act_impl: str = "sliced"):
+    """One fused SGD step.  ``lr`` may be a scalar or a per-member (P,)
+    vector."""
+    return _sgd_update(params, x, targets, lr, lp, m3_impl, bd_impl,
+                       act_impl)
+
+
+def make_population_train_step(lp: LayeredPopulation, *,
+                               m3_impl: str = "bucketed",
+                               bd_impl: str = "einsum",
+                               act_impl: str = "sliced",
+                               scan_steps: int = 1,
+                               donate: bool = True):
+    """Build the jitted multi-step population train chunk.
+
+    Returns ``chunk(params, xs, ys, lr) -> (params, losses, pers)`` where
+    ``xs``/``ys`` carry a leading ``scan_steps`` axis and ``losses``
+    (scan_steps,) / ``pers`` (scan_steps, P) hold every inner step's
+    metrics.  The inner steps run under ONE ``lax.scan``, so the chunk
+    dispatches to the device once per ``scan_steps`` optimizer steps and
+    parameters never round-trip to host between them; ``params`` is donated
+    (the previous step's buffers are reused in place — at 10k members the
+    fused tree is the dominant HBM resident, so the alternative is 2×
+    parameter memory).  Under a mesh, sharded inputs keep their sharding
+    through the scan: member-major layouts are collective-free, so XLA
+    propagates the population axis end to end."""
+    if scan_steps < 1:
+        raise ValueError(f"scan_steps must be >= 1, got {scan_steps}")
+
+    def chunk(params, xs, ys, lr):
+        def body(p, batch):
+            x, y = batch
+            p, loss, per = _sgd_update(p, x, y, lr, lp, m3_impl, bd_impl,
+                                       act_impl)
+            return p, (loss, per)
+        params, (losses, pers) = jax.lax.scan(body, params, (xs, ys))
+        return params, losses, pers
+
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ())
 
 
 # ---------------------------------------------------------------------- #

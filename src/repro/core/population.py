@@ -273,6 +273,17 @@ class Population:
         """Slice of member m's REAL units (excludes padding)."""
         return slice(int(self.offsets[m]), int(self.offsets[m]) + self.hidden_sizes[m])
 
+    def param_specs(self):
+        """PartitionSpec tree matching ``parallel_mlp.init_params`` — every
+        member-major axis (fused hidden, member) shards over the population
+        axis; feature/class axes replicate.  Axes that the ambient mesh lacks
+        or that don't divide degrade to replication via ``filter_spec``."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import POP_AXIS
+        return {"w1": P(POP_AXIS, None), "b1": P(POP_AXIS),
+                "w2": P(None, POP_AXIS), "b2": P(POP_AXIS, None)}
+
     def describe(self) -> str:
         import collections
         by_act = collections.Counter(self.activations)
@@ -357,6 +368,7 @@ class LayeredPopulation:
     widths: tuple          # tuple[tuple[int, ...]] — per member, per layer
     activations: tuple     # tuple[tuple[str, ...]] — per member, per layer
     block: int = 8
+    n_pad: int = 0         # trailing shard-pad members (see shard_pad)
 
     def __post_init__(self):
         if len(self.widths) != len(self.activations):
@@ -365,6 +377,9 @@ class LayeredPopulation:
                 f"({len(self.activations)}) must have the same length")
         if not self.widths:
             raise ValueError("empty population")
+        if not 0 <= self.n_pad < len(self.widths):
+            raise ValueError(f"n_pad {self.n_pad} out of range "
+                             f"[0, {len(self.widths)})")
         widths = tuple(tuple(int(h) for h in w) for w in self.widths)
         for m, w in enumerate(widths):
             if len(w) < 1:
@@ -402,12 +417,15 @@ class LayeredPopulation:
     def sorted(self) -> "LayeredPopulation":
         """Reorder members so equal-shape members are contiguous: buckets per
         projection collapse to one run per (depth, padded widths, acts)
-        class."""
+        class.  Shard-pad members stay trailing (their position is part of
+        the sharding contract — callers exclude them by slicing [-n_pad:])."""
         def key(m):
             return (len(self.widths[m]),
                     tuple(_round_up(h, self.block) for h in self.widths[m]),
                     self.activations[m], self.widths[m])
-        order = sorted(range(self.num_members), key=key)
+        n_real = self.num_members - self.n_pad
+        order = sorted(range(n_real), key=key) + list(
+            range(n_real, self.num_members))
         return dataclasses.replace(
             self,
             widths=tuple(self.widths[m] for m in order),
@@ -419,6 +437,12 @@ class LayeredPopulation:
     @property
     def num_members(self) -> int:
         return len(self.widths)
+
+    @property
+    def num_real(self) -> int:
+        """Members that exist in the user's population (excludes trailing
+        shard-pad filler members)."""
+        return self.num_members - self.n_pad
 
     @cached_property
     def member_depths(self) -> tuple:
@@ -457,10 +481,15 @@ class LayeredPopulation:
     def proj_buckets(self, l: int):
         """Buckets of projection l: (m0, n, hin, hout, off_in, off_out, real)
         runs, where ``real`` marks trained weight blocks vs identity
-        pass-throughs (hin == hout there by construction)."""
+        pass-throughs (hin == hout there by construction).  Shard-pad
+        members never merge into a real member's bucket (the pad flag is
+        part of the run key), so the REAL buckets — runs, shapes, order —
+        are identical with and without padding: ``pad_params`` can embed an
+        unpadded parameter tree leaf-for-leaf."""
         pin, pout = self.layer_pop(l), self.layer_pop(l + 1)
-        flags = tuple(self.proj_real(m, l) for m in range(self.num_members))
-        return tuple(run + (flags[run[0]],)
+        flags = tuple((self.proj_real(m, l), m >= self.num_real)
+                      for m in range(self.num_members))
+        return tuple(run + (flags[run[0]][0],)
                      for run in pin.pair_buckets(pout, keys=flags))
 
     @_instance_cache
@@ -546,10 +575,88 @@ class LayeredPopulation:
             perm_t=ints(perm),
             wb_out_tile=ints(wb_out_tile), wb_in_tile=ints(wb_in_tile))
 
+    # ------------------------------------------------------------------ #
+    # sharding (DESIGN.md §5: the population axis IS the 'model' axis)   #
+    # ------------------------------------------------------------------ #
+    def shard_pad(self, n_shards: int) -> "LayeredPopulation":
+        """Append filler members so the layout divides an ``n_shards``-way
+        population axis: member count ≡ 0 (mod n_shards) and every layer's
+        fused hidden axis ≡ 0 (mod n_shards·block), i.e. each shard holds
+        whole member-aligned blocks.  Fillers are depth-``depth`` identity-
+        activation members appended AFTER the real members (trailing, so
+        member-major arrays slice them off with [:num_real]); they train but
+        are excluded from selection.  Idempotent when already divisible.
+
+        Per-bucket member counts are NOT forced to divide — a bucket whose
+        run doesn't split evenly degrades to replication through
+        ``filter_spec`` (the documented fallback)."""
+        if n_shards <= 1:
+            return self
+        blk, L = self.block, self.depth
+        hidden = [self.layer_pop(l).total_hidden for l in range(L)]
+        mod = n_shards * blk
+        d = (-self.num_members) % n_shards
+        if d == 0 and all(h % mod == 0 for h in hidden):
+            return self
+        if d == 0:
+            d = n_shards          # hidden axes still need fixing
+        # d-1 minimal (width=block) fillers; the LAST filler's per-layer
+        # width absorbs each layer's remaining misalignment.  Solvable
+        # because every quantity involved is a multiple of block.
+        base = ((blk,) * L,) * (d - 1)
+        last = []
+        for l in range(L):
+            h = hidden[l] + (d - 1) * blk
+            c = 1
+            while (h + c * blk) % mod:
+                c += 1
+                assert c <= mod // blk + 1, "shard_pad: no aligning width"
+            last.append(c * blk)
+        widths = self.widths + base + (tuple(last),)
+        acts = self.activations + (("identity",) * L,) * d
+        return dataclasses.replace(self, widths=widths, activations=acts,
+                                   n_pad=self.n_pad + d)
+
+    def param_specs(self):
+        """PartitionSpec tree matching ``deep.init_params``: every
+        member-major axis shards over the population axis —
+
+          w_in  (H0, F)        → P(pop, None)     b_in (H0,)   → P(pop)
+          mid[l] w buckets (n, h_out, h_in) → P(pop, None, None) each
+          mid[l] b (H_{l+1},)  → P(pop)
+          w_out (O, H_last)    → P(None, pop)     b_out (P, O) → P(pop, None)
+
+        Axes the ambient mesh lacks, or whose dim doesn't divide (e.g. a
+        bucket run shorter than the axis), degrade to replication via
+        ``filter_spec``; ``shard_pad`` makes the fused-hidden and member
+        dims divide by construction."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import POP_AXIS
+        mid = []
+        for l in range(self.depth - 1):
+            n_real_buckets = sum(1 for bk in self.proj_buckets(l) if bk[6])
+            mid.append({"w": [P(POP_AXIS, None, None)] * n_real_buckets,
+                        "b": P(POP_AXIS)})
+        return {"w_in": P(POP_AXIS, None), "b_in": P(POP_AXIS), "mid": mid,
+                "w_out": P(None, POP_AXIS), "b_out": P(POP_AXIS, None)}
+
+    def opt_specs(self, opt, dtype=None):
+        """Optimizer-state PartitionSpec tree for training this layout with
+        ``opt`` (a ``repro.optim.Optimizer``): every state leaf inherits the
+        sharding of the parameter it tracks."""
+        import jax.numpy as jnp
+
+        from repro.core.deep import abstract_params
+        return opt.state_specs(
+            self.param_specs(),
+            abstract_params(self, dtype or jnp.float32))
+
     def describe(self) -> str:
         import collections
         by_depth = collections.Counter(self.member_depths)
-        return (f"LayeredPopulation(P={self.num_members}, depth={self.depth}, "
+        pad = f", pad={self.n_pad}" if self.n_pad else ""
+        return (f"LayeredPopulation(P={self.num_members}{pad}, depth={self.depth}, "
                 f"block={self.block}, in={self.in_features}, "
                 f"out={self.out_features}, depths={dict(sorted(by_depth.items()))}, "
                 f"fused_hidden={[self.layer_pop(l).total_hidden for l in range(self.depth)]})")

@@ -8,6 +8,8 @@ calls (evaluate → select → leaderboard) as the paper's single-layer grid.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -30,31 +32,74 @@ def extract_member(params, layout, m: int) -> dict:
     return _pmlp.extract_member(params, layout, m)
 
 
+_DICT_TAG = "__dict__"
+
+
+def _freeze_kwargs(fw: dict) -> tuple:
+    """Forward kwargs → hashable jit-static key (dict values — bd_kwargs /
+    m3_kwargs — become tagged item tuples)."""
+    return tuple(sorted(
+        (k, (_DICT_TAG, tuple(sorted(v.items())))
+         if isinstance(v, dict) else v)
+        for k, v in fw.items()))
+
+
+def _thaw_kwargs(fw: tuple) -> dict:
+    return {k: dict(v[1])
+            if isinstance(v, tuple) and v and v[0] == _DICT_TAG else v
+            for k, v in fw}
+
+
+@partial(jax.jit, static_argnames=("pop", "task", "fw"))
+def _eval_batch(params, xb, tb, pop, task, fw):
+    """One jitted eval batch under the training sharding (cached across
+    ``evaluate_population`` calls on the jit cache — layouts are static
+    hashable dataclasses, exactly like ``deep.sgd_step``)."""
+    from repro.distributed.sharding import POP_LOGITS, POP_MEMBER, constrain
+    logits = constrain(_forward(params, xb, pop, **_thaw_kwargs(fw)),
+                       POP_LOGITS)
+    loss = constrain(member_losses(logits, tb, task), POP_MEMBER)
+    acc = (constrain(member_accuracy(logits, tb), POP_MEMBER)
+           if task == "classification" else jnp.zeros_like(loss))
+    return loss, acc
+
+
 def evaluate_population(params, pop, x, targets,
                         task: str = "classification", batch_size: int = 4096,
                         **fw):
     """Per-member metric over a full eval split (batched to bound memory).
 
+    Runs under the TRAINING sharding: the jitted eval step consumes the
+    sharded parameter tree as-is and constrains logits / per-member
+    reductions to the population axis (no-op off-mesh), so selection over a
+    mesh-sharded population never gathers the fused tensors to one device.
+
     Returns (losses (P,), accuracies (P,) or None)."""
+    fw_key = _freeze_kwargs(fw)
     n = x.shape[0]
     loss_sum = jnp.zeros(pop.num_members)
     acc_sum = jnp.zeros(pop.num_members)
     seen = 0
     for i in range(0, n, batch_size):
         xb, tb = x[i:i + batch_size], targets[i:i + batch_size]
-        logits = _forward(params, xb, pop, **fw)
-        loss_sum = loss_sum + member_losses(logits, tb, task) * xb.shape[0]
-        if task == "classification":
-            acc_sum = acc_sum + member_accuracy(logits, tb) * xb.shape[0]
+        loss, acc = _eval_batch(params, xb, tb, pop, task, fw_key)
+        loss_sum = loss_sum + loss * xb.shape[0]
+        acc_sum = acc_sum + acc * xb.shape[0]
         seen += xb.shape[0]
     losses = loss_sum / seen
     accs = acc_sum / seen if task == "classification" else None
     return losses, accs
 
 
+def _num_real(pop) -> int:
+    """Members eligible for selection (shard-pad fillers are excluded)."""
+    return getattr(pop, "num_real", pop.num_members)
+
+
 def select_best(params, pop, losses) -> tuple[int, dict]:
-    """Best member by eval loss → (index, standalone params)."""
-    m = int(jnp.argmin(losses))
+    """Best member by eval loss → (index, standalone params).  Shard-pad
+    filler members (trailing, ``LayeredPopulation.n_pad``) never win."""
+    m = int(jnp.argmin(losses[:_num_real(pop)]))
     return m, extract_member(params, pop, m)
 
 
@@ -67,9 +112,10 @@ def _member_arch(pop, m: int):
 def leaderboard(pop, losses, accs=None, k: int = 10):
     """Top-k members as (rank, member, hidden, activation, loss[, acc]).
 
-    For layered populations ``hidden`` is the member's width tuple."""
+    For layered populations ``hidden`` is the member's width tuple;
+    shard-pad filler members are excluded from the ranking."""
     import numpy as np
-    order = np.argsort(np.asarray(losses))[:k]
+    order = np.argsort(np.asarray(losses)[:_num_real(pop)])[:k]
     rows = []
     for r, m in enumerate(order):
         hidden, act = _member_arch(pop, int(m))

@@ -6,13 +6,18 @@ from repro.distributed.compression import (compressed_psum,
                                            quantize_int8)
 from repro.distributed.fault_tolerance import (StragglerPolicy, TrainRunner,
                                                elastic_remesh)
-from repro.distributed.sharding import (ACT_RESIDUAL, BATCH_AXES, constrain,
-                                        filter_spec, logical_to_sharding,
-                                        mesh_axis_sizes, stack_spec)
+from repro.distributed.sharding import (ACT_RESIDUAL, BATCH_AXES, POP_AXIS,
+                                        POP_BUCKET, POP_HIDDEN, POP_LOGITS,
+                                        POP_MEMBER, constrain, filter_spec,
+                                        logical_to_sharding, mesh_axis_sizes,
+                                        pop_axis_size, population_shardings,
+                                        stack_spec)
 
 __all__ = [
     "compressed_psum", "compressed_psum_tree", "init_error_feedback",
     "quantize_int8", "StragglerPolicy", "TrainRunner", "elastic_remesh",
-    "ACT_RESIDUAL", "BATCH_AXES", "constrain", "filter_spec",
-    "logical_to_sharding", "mesh_axis_sizes", "stack_spec",
+    "ACT_RESIDUAL", "BATCH_AXES", "POP_AXIS", "POP_BUCKET", "POP_HIDDEN",
+    "POP_LOGITS", "POP_MEMBER", "constrain", "filter_spec",
+    "logical_to_sharding", "mesh_axis_sizes", "pop_axis_size",
+    "population_shardings", "stack_spec",
 ]

@@ -89,24 +89,63 @@ class TrainRunner:
                  ckpt_every: int = 50, keep_last: int = 3,
                  straggler: StragglerPolicy | None = None,
                  failure_hook: Optional[Callable[[int], None]] = None,
-                 max_restarts: int = 3):
+                 max_restarts: int = 3, ckpt_meta: dict | None = None,
+                 ckpt_step_map: Optional[Callable[[int], int]] = None,
+                 ckpt_step_unmap: Optional[Callable[[int], int]] = None,
+                 ckpt_save_pred: Optional[Callable[[int], bool]] = None,
+                 restore_shardings=None):
+        """``ckpt_meta``/``ckpt_step_map``: forwarded to the checkpointer
+        (population runs attach the fused layout and record GLOBAL step
+        numbers while the runner counts scan chunks); ``ckpt_step_unmap``
+        is the inverse of ``ckpt_step_map`` — the crash-restore path maps a
+        restored checkpoint's recorded step back into the runner's step
+        domain.  ``restore_shardings``: optional sharding tree matching
+        ``state`` — crash restores device_put straight back onto the mesh
+        instead of replicating."""
         self.step_fn = step_fn
         self.state = state
         self.ckpt = AsyncCheckpointer(ckpt_dir, every=ckpt_every,
-                                      keep_last=keep_last)
+                                      keep_last=keep_last, meta=ckpt_meta,
+                                      step_map=ckpt_step_map,
+                                      save_pred=ckpt_save_pred)
+        self.ckpt_step_unmap = ckpt_step_unmap or (lambda s: s)
+        self.restore_shardings = restore_shardings
         self.straggler = straggler or StragglerPolicy(timeout_s=1e9)
         self.failure_hook = failure_hook
         self.max_restarts = max_restarts
         self.restarts = 0
         self.metrics_log = []
+        # host snapshot of the INITIAL state: a failure before the first
+        # committed checkpoint replays from step 0 (data is step-indexed, so
+        # replay is exact) — required because the current live state may
+        # have been mutated by completed steps or DELETED by an
+        # argument-donating step that failed mid-chunk.  Skipped when the
+        # directory already holds a committed checkpoint (resume: _restore
+        # reads disk instead) and freed as soon as one commits.
+        self._init_state_host = None if latest_steps(ckpt_dir) else \
+            jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+    def _put(self, host_tree):
+        if self.restore_shardings is not None:
+            return jax.tree.map(jax.device_put, host_tree,
+                                self.restore_shardings)
+        return jax.tree.map(jax.device_put, host_tree)
 
     def _restore(self):
         self.ckpt.wait()
         steps = latest_steps(self.ckpt.directory)
         if not steps:
+            if self._init_state_host is None:
+                # can only happen if the checkpoint dir vanished after a
+                # commit freed the snapshot — nothing left to replay from
+                raise RuntimeError(
+                    f"no committed checkpoint under {self.ckpt.directory} "
+                    "and the initial-state snapshot was already released")
+            self.state = self._put(self._init_state_host)
             return 0
-        self.state, step = restore(self.ckpt.directory, self.state)
-        return step + 1
+        self.state, step = restore(self.ckpt.directory, self.state,
+                                   shardings=self.restore_shardings)
+        return self.ckpt_step_unmap(step) + 1
 
     def run(self, num_steps: int, start_step: int = 0) -> int:
         step = start_step
@@ -119,6 +158,8 @@ class TrainRunner:
                 self.straggler.observe(step, time.time() - t0)
                 self.metrics_log.append((step, metrics))
                 self.ckpt.maybe_save(step, self.state)
+                if self._init_state_host is not None and self.ckpt.saved:
+                    self._init_state_host = None  # a checkpoint committed
                 step += 1
             except (KeyboardInterrupt,):
                 raise

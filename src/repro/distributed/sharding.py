@@ -131,3 +131,35 @@ ACT_RESIDUAL = P(BATCH_AXES, TP_AXIS, None)   # (B, S/model, D): SP residual
 ACT_FULL_SEQ = P(BATCH_AXES, None, None)      # (B, S, D) gathered
 ACT_HEADS = P(BATCH_AXES, None, TP_AXIS, None)          # (B, S, H/model, dh)
 ACT_DECODE = P(BATCH_AXES, None, None)        # (B, 1, D)
+
+# ------------------------------------------------------------------ #
+# population specs (the paper's member axis; DESIGN.md §5)           #
+# ------------------------------------------------------------------ #
+# Fused population tensors are member-major: the fused hidden axis, the
+# per-bucket member axis, and the (P, O) output-bias member axis all shard
+# over POP_AXIS with ZERO cross-member collectives (members are
+# independent by construction).  Logits carry the member axis at dim 1.
+POP_HIDDEN = P(POP_AXIS)                      # (H_tot,) fused hidden
+POP_BUCKET = P(POP_AXIS, None, None)          # (n, h_out, h_in) bucket stack
+POP_LOGITS = P(BATCH_AXES, POP_AXIS, None)    # (B, P, O) per-member logits
+POP_MEMBER = P(POP_AXIS)                      # (P,) per-member reductions
+
+
+def pop_axis_size(mesh=None) -> int:
+    """Size of the population ('model') axis — of ``mesh`` if given, else of
+    the ambient mesh; 1 when unmeshed.  The member-count/hidden-axis
+    divisor that ``LayeredPopulation.shard_pad`` must satisfy."""
+    if mesh is not None:
+        return int(dict(mesh.shape).get(POP_AXIS, 1))
+    return int(mesh_axis_sizes().get(POP_AXIS, 1))
+
+
+def population_shardings(layout, mesh, dtype=None):
+    """``layout.param_specs()`` + mesh → NamedSharding tree for the layout's
+    parameter tree (per-leaf axis filtering handles buckets whose member
+    run doesn't divide the axis — those replicate)."""
+    import jax.numpy as jnp
+
+    from repro.core.deep import abstract_params
+    abs_p = abstract_params(layout, dtype or jnp.float32)
+    return logical_to_sharding(layout.param_specs(), mesh, abs_p)

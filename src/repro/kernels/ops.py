@@ -177,17 +177,67 @@ def block_diag_gemm(h: jax.Array, wb: jax.Array, layout, *,
 # segmented activation                                                  #
 # --------------------------------------------------------------------- #
 
+class _StaticArray:
+    """Hashable wrapper making a numpy constant usable as a jit /
+    custom_vjp STATIC argument without materialising a per-element Python
+    tuple (the fused hidden mask is 10^5-10^6 floats at paper scale —
+    hashing the raw bytes once beats building and caching a tuple)."""
+    __slots__ = ("arr", "_hash")
+
+    def __init__(self, arr, dtype):
+        self.arr = np.ascontiguousarray(np.asarray(arr, dtype))
+        self.arr.setflags(write=False)
+        self._hash = hash((self.arr.shape, self.arr.dtype.str,
+                           self.arr.tobytes()))
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        return (isinstance(other, _StaticArray)
+                and self.arr.dtype == other.arr.dtype
+                and self.arr.shape == other.arr.shape
+                and np.array_equal(self.arr, other.arr))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _seg_core(h, act_ids_s, mask_s, block_h, block_b, interpret):
+    ids = jnp.asarray(act_ids_s.arr)
+    m2 = jnp.asarray(mask_s.arr).reshape(1, -1)
+    return _segk.seg_act(h, ids, m2, block_h=block_h, block_b=block_b,
+                         interpret=interpret)
+
+
+def _seg_fwd(h, act_ids_s, mask_s, block_h, block_b, interpret):
+    return _seg_core(h, act_ids_s, mask_s, block_h, block_b, interpret), h
+
+
+def _seg_bwd(act_ids_s, mask_s, block_h, block_b, interpret, h, dy):
+    ids = jnp.asarray(act_ids_s.arr)
+    m2 = jnp.asarray(mask_s.arr).reshape(1, -1)
+    return (_segk.seg_act_bwd(h, dy, ids, m2, block_h=block_h,
+                              block_b=block_b, interpret=interpret),)
+
+
+_seg_core.defvjp(_seg_fwd, _seg_bwd)
+
+
 def seg_act(h: jax.Array, block_act_ids: np.ndarray, mask: np.ndarray, *,
-            block_h: int, block_b: int = 256, interpret: bool = True) -> jax.Array:
-    """One-pass per-block activation + padding mask. h (B, H) -> (B, H)."""
+            block_h: int, block_b: int = 256,
+            interpret: bool | None = None) -> jax.Array:
+    """One-pass per-block activation + padding mask. h (B, H) -> (B, H).
+
+    Differentiable (custom VJP through the seg_act_bwd kernel).
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    interpret = _resolve_interpret(interpret)
     if h.shape[1] % block_h:
         raise ValueError(f"hidden axis {h.shape[1]} not {block_h}-aligned")
     block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
     hp, b0 = _pad_axis(h, 0, block_b)
-    ids = jnp.asarray(np.asarray(block_act_ids, np.int32))
-    m2 = jnp.asarray(np.asarray(mask, np.float32)).reshape(1, -1)
-    y = _segk.seg_act(hp, ids, m2, block_h=block_h, block_b=block_b,
-                      interpret=interpret)
+    y = _seg_core(hp, _StaticArray(block_act_ids, np.int32),
+                  _StaticArray(mask, np.float32), block_h, block_b,
+                  interpret)
     return y[:b0]
 
 

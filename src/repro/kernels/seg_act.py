@@ -43,3 +43,46 @@ def seg_act(h: jax.Array, block_act_ids: jax.Array, mask: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((b, hh), h.dtype),
         interpret=interpret,
     )(block_act_ids, h, mask)
+
+
+def _vjp_branch(fn):
+    def branch(operands):
+        x, g = operands
+        return jax.vjp(fn, x)[1](g)[0]
+    return branch
+
+
+_VJP_BRANCHES = tuple(_vjp_branch(fn) for fn in ACTIVATION_FNS)
+
+
+def _bwd_kernel(act_ref, h_ref, dy_ref, mask_ref, out_ref):
+    t = pl.program_id(1)
+    x = h_ref[...]
+    g = dy_ref[...] * mask_ref[...].astype(dy_ref.dtype)
+    out_ref[...] = jax.lax.switch(act_ref[t], _VJP_BRANCHES, (x, g))
+
+
+def seg_act_bwd(h: jax.Array, dy: jax.Array, block_act_ids: jax.Array,
+                mask: jax.Array, *, block_h: int, block_b: int,
+                interpret: bool = False) -> jax.Array:
+    """dL/dh of ``seg_act``: dy·mask routed through each block's activation
+    VJP in the same one-pass tile-wise ``lax.switch`` dispatch as the
+    forward (the cotangent of the fused mask-multiply is just another
+    elementwise factor, so it fuses into the same tile read)."""
+    b, hh = h.shape
+    grid = (b // block_b, hh // block_h)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block_h), lambda i, t, act: (i, t)),
+                pl.BlockSpec((block_b, block_h), lambda i, t, act: (i, t)),
+                pl.BlockSpec((1, block_h), lambda i, t, act: (0, t)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block_h), lambda i, t, act: (i, t)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hh), h.dtype),
+        interpret=interpret,
+    )(block_act_ids, h, dy, mask)

@@ -14,9 +14,14 @@ Population archs (``--arch parallelmlp-10k``) train through the layered
 population engine (core.deep): ``--population-depths "64,32,16;13,5;7"``
 builds a heterogeneous-depth LayeredPopulation (members separated by ';',
 per-layer widths by ','), ``--bd-impl pallas`` routes mid layers through the
-block-diagonal Pallas kernel, ``--per-member-lr`` samples one step size per
-member, and checkpoints carry the fused layout (checkpoint.save_population)
-so ``--resume`` needs no flags re-supplied.
+block-diagonal Pallas kernel, ``--act-impl pallas`` routes per-layer
+activations through the seg_act kernel, ``--per-member-lr`` samples one
+step size per member, and checkpoints carry the fused layout
+(checkpoint.save_population) so ``--resume`` needs no flags re-supplied.
+The population path is distribution-native: the layout shard-pads to the
+mesh's 'model' axis, params are born sharded, the step is a donated
+``lax.scan`` chunk (``--scan-steps``), and the loop runs through
+``TrainRunner`` exactly like the LM path.
 """
 from __future__ import annotations
 
@@ -129,16 +134,24 @@ def parse_depth_spec(spec: str):
 
 
 def run_population(arch, args):
-    """Fused population training through the layered engine (core.deep):
-    heterogeneous depths, selectable M3 / block-diagonal implementations,
-    per-member learning rates, layout-carrying checkpoints."""
-    from repro.checkpoint import (latest_steps, restore_population,
-                                  save_population)
+    """Fused population training through the layered engine (core.deep),
+    DISTRIBUTION-NATIVE: the layout is shard-padded to the mesh's
+    population ('model') axis, parameters are born sharded through
+    ``LayeredPopulation.param_specs()``, the step is a jitted
+    argument-donating ``lax.scan`` chunk (``--scan-steps``), and the loop
+    runs through ``TrainRunner`` (checkpoint cadence, straggler watchdog,
+    crash replay) with layout-carrying sharded checkpoints."""
+    from repro.checkpoint import (latest_steps, population_meta,
+                                  restore_population, save_population)
     from repro.core import deep
     from repro.core.activations import PAPER_TEN
     from repro.core.population import LayeredPopulation, Population
     from repro.core.selection import evaluate_population, leaderboard
     from repro.data import TabularTask
+    from repro.distributed import StragglerPolicy, TrainRunner
+    from repro.distributed.sharding import (pop_axis_size,
+                                            population_shardings)
+    from repro.launch.mesh import make_host_mesh
 
     if args.population_depths:
         widths = parse_depth_spec(args.population_depths)
@@ -154,72 +167,139 @@ def run_population(arch, args):
     else:
         model = arch.model
         lp = model.layered() if isinstance(model, Population) else model
-    print(f"population: {lp.describe()}")
 
-    start = 0
-    if args.resume and latest_steps(args.ckpt_dir):
-        params, lp_ckpt, last = restore_population(args.ckpt_dir)
-        if isinstance(lp_ckpt, Population):
-            # single-layer (parallel_mlp) checkpoint → depth-1 layered
-            # params map one-to-one onto the unified engine
-            lp_ckpt = lp_ckpt.layered()
-            params = {"w_in": params["w1"], "b_in": params["b1"],
-                      "mid": [],
-                      "w_out": params["w2"], "b_out": params["b2"]}
-        if lp_ckpt != lp:
-            print("note: resuming with the CHECKPOINT's layout "
-                  f"({lp_ckpt.describe()})")
+    mesh = make_host_mesh()
+    scan = max(args.scan_steps, 1)
+    print(f"mesh={dict(mesh.shape)} devices={len(jax.devices())} "
+          f"scan_steps={scan}")
+
+    with set_mesh(mesh):
+        start = 0
+        if args.resume and latest_steps(args.ckpt_dir):
+            # the checkpoint's layout wins (it matches the stored params and
+            # is already shard-padded for the mesh that wrote it); restore
+            # straight onto THIS mesh through its param specs.
+            params, lp_ckpt, last = restore_population(args.ckpt_dir,
+                                                       mesh=mesh)
+            if isinstance(lp_ckpt, Population):
+                # single-layer (parallel_mlp) checkpoint → depth-1 layered
+                # params map one-to-one onto the unified engine
+                lp_ckpt = lp_ckpt.layered()
+                params = {"w_in": params["w1"], "b_in": params["b1"],
+                          "mid": [],
+                          "w_out": params["w2"], "b_out": params["b2"]}
+            if lp_ckpt != lp and lp_ckpt != lp.shard_pad(pop_axis_size(mesh)):
+                print("note: resuming with the CHECKPOINT's layout "
+                      f"({lp_ckpt.describe()})")
             lp = lp_ckpt
-        start = last + 1
-        print(f"resumed from step {last}")
-    else:
-        params = deep.init_params(jax.random.PRNGKey(args.seed), lp)
+            p_sh = population_shardings(lp, mesh)
+            start = last + 1
+            print(f"resumed from step {last}")
+        else:
+            # shard-pad the layout to the population axis and initialise
+            # born-sharded: the real members' params are BIT-IDENTICAL to a
+            # single-device init (fillers draw from a folded key).
+            lp_real, lp = lp, lp.shard_pad(pop_axis_size(mesh))
+            p_sh = population_shardings(lp, mesh)
 
-    # everything below depends on the RESOLVED layout (a resumed checkpoint
-    # may change member count and feature/class dims)
-    task = TabularTask(args.samples, lp.in_features,
-                       n_classes=lp.out_features, seed=args.seed)
-    (xtr, ytr), (xte, yte) = task.split()
+            def born_sharded(key):
+                p = deep.init_params(key, lp_real)
+                return deep.pad_params(p, lp_real, lp,
+                                       jax.random.fold_in(key, 1))
+            params = jax.jit(born_sharded, out_shardings=p_sh)(
+                jax.random.PRNGKey(args.seed))
+        print(f"population: {lp.describe()}")
 
-    lr = arch.lr
-    if args.per_member_lr:
-        lr = jnp.exp(jax.random.uniform(
-            jax.random.PRNGKey(args.seed + 1), (lp.num_members,),
-            minval=jnp.log(arch.lr * 0.3), maxval=jnp.log(arch.lr * 3.0)))
-        print(f"per-member learning rates in "
-              f"[{arch.lr * 0.3:.4f}, {arch.lr * 3.0:.4f}]")
+        # everything below depends on the RESOLVED layout (a resumed
+        # checkpoint may change member count and feature/class dims)
+        task = TabularTask(args.samples, lp.in_features,
+                           n_classes=lp.out_features, seed=args.seed)
+        (xtr, ytr), (xte, yte) = task.split()
 
-    t0 = time.time()
-    loss0 = loss = None
-    for step in range(start, args.steps):
-        xb, yb = task.batch(step, args.batch)
-        params, loss, _per = deep.sgd_step(
-            params, jnp.asarray(xb), jnp.asarray(yb), lr, lp,
-            args.m3_impl, args.bd_impl)
-        loss0 = loss if loss0 is None else loss0
-        if step % 50 == 0:
-            print(f"step {step:4d}  mean member loss "
-                  f"{float(loss) / lp.num_members:.4f}")
-        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            save_population(args.ckpt_dir, step, params, lp)
-    dt = time.time() - t0
-    steps_run = max(args.steps - start, 0)
-    if steps_run:
-        print(f"trained {lp.num_members} MLPs × {steps_run} steps in "
-              f"{dt:.1f}s ({lp.num_members * steps_run / max(dt, 1e-9):.0f} "
-              f"model-steps/s); loss {float(loss0) / lp.num_members:.4f} -> "
-              f"{float(loss) / lp.num_members:.4f}")
-        if args.ckpt_every:
-            save_population(args.ckpt_dir, max(args.steps - 1, 0), params, lp)
+        lr = arch.lr
+        if args.per_member_lr:
+            # drawn over REAL members only (shard-pad fillers get the base
+            # lr), so the sample is identical to a single-device run
+            lr = jnp.exp(jax.random.uniform(
+                jax.random.PRNGKey(args.seed + 1), (lp.num_real,),
+                minval=jnp.log(arch.lr * 0.3), maxval=jnp.log(arch.lr * 3.0)))
+            lr = jnp.concatenate([lr, jnp.full((lp.n_pad,), arch.lr)])
+            print(f"per-member learning rates in "
+                  f"[{arch.lr * 0.3:.4f}, {arch.lr * 3.0:.4f}]")
 
-    losses, accs = evaluate_population(params, lp, jnp.asarray(xte),
-                                       jnp.asarray(yte))
-    print("leaderboard:")
-    for row in leaderboard(lp, losses, accs, k=min(10, lp.num_members)):
-        print(f"  #{row['rank']:2d} member {row['member']:4d} "
-              f"hidden={row['hidden']} {row['activation']:11s} "
-              f"loss={row['loss']:.4f} acc={row['acc']:.3f}")
-    return params, lp
+        chunk_fn = deep.make_population_train_step(
+            lp, m3_impl=args.m3_impl, bd_impl=args.bd_impl,
+            act_impl=args.act_impl, scan_steps=scan)
+        total = args.steps
+        n_chunks = max((total - start + scan - 1) // scan, 0)
+        print_every = max(50 // scan, 1)
+        first_loss = {}
+
+        def step_fn(state, c):
+            g0 = start + c * scan
+            n = min(scan, total - g0)
+            bs = [task.batch(g0 + i, args.batch) for i in range(n)]
+            xs = jnp.asarray(np.stack([b[0] for b in bs]))
+            ys = jnp.asarray(np.stack([b[1] for b in bs]))
+            p, _losses, pers = chunk_fn(state["params"], xs, ys, lr)
+            # mean over REAL members only — shard-pad fillers train too but
+            # must not dilute the reported loss (a sharded run prints the
+            # same numbers as its single-device twin)
+            pers = np.asarray(pers[:, :lp.num_real])
+            first_loss.setdefault("loss", float(pers[0].mean()))
+            mean = float(pers[-1].mean())
+            if c % print_every == 0:
+                print(f"step {g0 + n - 1:4d}  mean member loss {mean:.4f}")
+            return {"params": p}, {"loss": mean, "step": g0 + n - 1}
+
+        def chunk_crosses_cadence(c):
+            # chunk c covers global steps [g0, g1): checkpoint iff one of
+            # them completes a --ckpt-every multiple (the per-step loop's
+            # "(step+1) % every == 0" cadence, quantized up to chunk end)
+            if not args.ckpt_every:
+                return False
+            g0 = start + c * scan
+            g1 = min(g0 + scan, total)
+            return g1 // args.ckpt_every > g0 // args.ckpt_every
+
+        runner = TrainRunner(
+            step_fn, {"params": params}, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+            straggler=StragglerPolicy(timeout_s=args.straggler_timeout),
+            ckpt_meta=population_meta(lp, params),
+            ckpt_step_map=lambda c: min(start + (c + 1) * scan, total) - 1,
+            ckpt_step_unmap=lambda g: (g + 1 - start) // scan - 1,
+            ckpt_save_pred=chunk_crosses_cadence,
+            restore_shardings={"params": p_sh})
+
+        t0 = time.time()
+        runner.run(n_chunks)
+        dt = time.time() - t0
+        params = runner.state["params"]
+
+        steps_run = max(total - start, 0)
+        if steps_run:
+            loss0 = first_loss.get("loss", 0.0)
+            loss = runner.metrics_log[-1][1]["loss"]
+            print(f"trained {lp.num_real} MLPs × {steps_run} steps in "
+                  f"{dt:.1f}s ({lp.num_real * steps_run / max(dt, 1e-9):.0f} "
+                  f"model-steps/s); loss {loss0:.4f} -> {loss:.4f}")
+            if args.ckpt_every:
+                # final checkpoint ONLY if the cadence didn't just write it
+                # (steps % ckpt_every == 0 used to save the last step twice)
+                saved = latest_steps(args.ckpt_dir)
+                if not saved or saved[-1] != total - 1:
+                    save_population(args.ckpt_dir, total - 1, params, lp)
+
+        losses, accs = evaluate_population(params, lp, jnp.asarray(xte),
+                                           jnp.asarray(yte))
+        print("leaderboard:")
+        for row in leaderboard(lp, losses, accs,
+                               k=min(10, lp.num_real)):
+            print(f"  #{row['rank']:2d} member {row['member']:4d} "
+                  f"hidden={row['hidden']} {row['activation']:11s} "
+                  f"loss={row['loss']:.4f} acc={row['acc']:.3f}")
+        return params, lp
 
 
 def main(argv=None):
@@ -254,14 +334,22 @@ def main(argv=None):
                     choices=["scatter", "onehot", "bucketed", "pallas"])
     ap.add_argument("--bd-impl", default="einsum",
                     choices=["einsum", "pallas"])
+    ap.add_argument("--act-impl", default="sliced",
+                    choices=["sliced", "masked", "pallas"],
+                    help="per-layer activation dispatch: contiguous XLA "
+                         "slices, branchless masking, or the seg_act "
+                         "Pallas kernel")
+    ap.add_argument("--scan-steps", type=int, default=8,
+                    help="population path: optimizer steps fused into one "
+                         "jitted lax.scan chunk (donated params, one "
+                         "dispatch per chunk)")
     ap.add_argument("--per-member-lr", action="store_true",
                     help="paper §7: every member gets its own step size")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, reduced=args.reduced)
     if arch.kind == "population":
-        run_population(arch, args)
-        return
+        return run_population(arch, args)
     mesh = make_host_mesh()
     print(f"arch={args.arch} mesh={dict(mesh.shape)} "
           f"devices={len(jax.devices())}")

@@ -42,6 +42,24 @@ def test_restart_reproduces_uninterrupted_run(tmp_path):
     assert int(r.state["n"]) == int(ref.state["n"])
 
 
+def test_restart_without_checkpoint_replays_from_initial(tmp_path):
+    """A failure BEFORE the first committed checkpoint replays from the
+    runner's initial-state snapshot — completed steps are not applied twice
+    (and a donation-deleted live state cannot poison the retry)."""
+    boom = {1: True}
+
+    def step_fn(state, step):
+        if boom.pop(step, False):
+            raise RuntimeError("transient failure, nothing on disk yet")
+        return {"w": state["w"] + 1.0}, {"loss": 0.0}
+
+    r = TrainRunner(step_fn, {"w": jnp.zeros(2)},
+                    ckpt_dir=str(tmp_path / "none"), ckpt_every=0)
+    r.run(3)
+    np.testing.assert_allclose(np.asarray(r.state["w"]), 3.0)
+    assert r.restarts == 1
+
+
 def test_too_many_restarts_raises(tmp_path):
     def always_fail(step):
         raise RuntimeError("dead host")

@@ -1,0 +1,97 @@
+"""launch.train population driver: depth-spec parsing errors, the
+TrainRunner-backed loop's checkpoint behaviour (no duplicate final save),
+and resume with a DIFFERENT requested layout (the checkpoint's layout
+wins)."""
+import jax
+import numpy as np
+import pytest
+
+import repro.checkpoint as ckpt_mod
+from repro.launch.train import main, parse_depth_spec
+
+
+def test_parse_depth_spec():
+    assert parse_depth_spec("64,32,16;13,5;7") == ((64, 32, 16), (13, 5),
+                                                   (7,))
+    # stray separators / whitespace are tolerated, not members
+    assert parse_depth_spec(" 8 ; ;4,2 ") == ((8,), (4, 2))
+
+
+@pytest.mark.parametrize("bad", ["", ";", " ; ; "])
+def test_parse_depth_spec_empty_groups(bad):
+    with pytest.raises(ValueError):
+        parse_depth_spec(bad)
+
+
+@pytest.mark.parametrize("bad", ["a", "8,b;4", "8;;4,2,x", "1.5"])
+def test_parse_depth_spec_bad_ints(bad):
+    with pytest.raises(ValueError):
+        parse_depth_spec(bad)
+
+
+def _run(tmp_path, steps, ckpt_every, extra=()):
+    return main(["--arch", "parallelmlp-10k", "--reduced",
+                 "--steps", str(steps), "--ckpt-every", str(ckpt_every),
+                 "--ckpt-dir", str(tmp_path / "ck"),
+                 "--population-depths", "8,4;8,4;6;5",
+                 "--population-acts", "relu,tanh",
+                 "--scan-steps", "2", "--samples", "256", *extra])
+
+
+def test_no_duplicate_final_checkpoint(tmp_path, monkeypatch):
+    """When the cadence already saved the final step, the after-loop save
+    must not write it a second time (the old loop saved twice whenever
+    steps %% ckpt_every == 0)."""
+    calls = []
+    orig = ckpt_mod.save_population
+
+    def counting(*a, **kw):
+        calls.append(a[1])
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ckpt_mod, "save_population", counting)
+    # scan=2, ckpt_every=2 → the runner cadence saves every chunk (steps
+    # 1,3,5,7); the final step 7 is already on disk, so the after-loop
+    # save_population must NOT fire (the old loop wrote it twice).
+    _run(tmp_path, steps=8, ckpt_every=2)
+    assert calls == [], calls
+    saved = ckpt_mod.latest_steps(str(tmp_path / "ck"))
+    assert saved and saved[-1] == 7
+
+    # cadence that does NOT land on the final step → exactly ONE final save
+    _run(tmp_path, steps=12, ckpt_every=8, extra=["--resume"])
+    assert calls == [11], calls
+    saved = ckpt_mod.latest_steps(str(tmp_path / "ck"))
+    assert saved[-1] == 11
+
+
+def test_resume_prefers_checkpoint_layout(tmp_path):
+    params, lp1 = _run(tmp_path, steps=4, ckpt_every=2)
+    assert ckpt_mod.latest_steps(str(tmp_path / "ck"))
+    # resume with a DIFFERENT --population-depths: the checkpoint's layout
+    # must win (params and layout travel together)
+    params2, lp2 = main([
+        "--arch", "parallelmlp-10k", "--reduced", "--steps", "6",
+        "--ckpt-every", "2", "--ckpt-dir", str(tmp_path / "ck"),
+        "--population-depths", "32,16,8;3", "--population-acts", "gelu",
+        "--scan-steps", "2", "--samples", "256", "--resume"])
+    assert lp2 == lp1
+    assert jax.tree_util.tree_structure(params2) == \
+        jax.tree_util.tree_structure(params)
+
+
+def test_resume_continues_training(tmp_path):
+    """4 + 4 resumed steps equal 8 uninterrupted steps (step-indexed data,
+    layout-carrying checkpoints)."""
+    _run(tmp_path, steps=4, ckpt_every=4)
+    p_resumed, lp = _run(tmp_path, steps=8, ckpt_every=4,
+                         extra=["--resume"])
+    p_straight, lp2 = main([
+        "--arch", "parallelmlp-10k", "--reduced", "--steps", "8",
+        "--ckpt-every", "0", "--ckpt-dir", str(tmp_path / "ck2"),
+        "--population-depths", "8,4;8,4;6;5", "--population-acts",
+        "relu,tanh", "--scan-steps", "2", "--samples", "256"])
+    assert lp == lp2
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        p_resumed, p_straight)
