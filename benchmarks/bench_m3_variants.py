@@ -19,6 +19,11 @@ per-bucket einsum loop vs the Pallas block_diag_gemm kernel (interpret mode
 on CPU — wall-clock is NOT indicative there, the HLO structural numbers
 are), and writes the rows to BENCH_deep.json so kernel perf is tracked
 per-PR.
+
+``--halving`` benches the successive-halving lifecycle (core.lifecycle):
+the same step ladder trained with and without rung pruning + compaction,
+wall-clock and final best-member loss to BENCH_halving.json — the tracked
+number is the lifecycle's speedup at matched selection quality.
 """
 from __future__ import annotations
 
@@ -193,6 +198,109 @@ def run_deep(args):
         print(f"# wrote {args.json_out}")
 
 
+def run_halving(args):
+    """Successive-halving lifecycle vs full-population training on the SAME
+    ladder of global steps (core.lifecycle; DESIGN.md §6): both runs train
+    to ``--halving-steps``, the halving run additionally prunes + compacts
+    at each rung, so later segments train a physically smaller fused
+    layout.  Reports train-execution wall-clock (chunks are AOT-compiled
+    first; compile time and the rung evals are EXCLUDED — the structural
+    ``member_steps`` ratio is reported alongside so the wall-clock speedup
+    can be sanity-checked), plus the final best-member validation loss of
+    each run, to BENCH_halving.json."""
+    from repro.core import lifecycle
+    from repro.core.selection import evaluate_population
+    from repro.data import TabularTask
+
+    base = [(48, 24), (64, 32), (40, 16), (56, 28)]
+    lp0 = LayeredPopulation.grid(
+        20, 2, base, ("relu", "tanh"),
+        repeats=max(args.members // (2 * len(base)), 1), block=args.block)
+    schedule = lifecycle.HalvingSchedule.parse(args.halving)
+    total = args.halving_steps
+    task = TabularTask(4096, 20, n_classes=2, seed=0)
+    _, (xte, yte) = task.split()
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte)
+
+    def batches(a, b):
+        bs = [task.batch(s, args.batch) for s in range(a, b)]
+        return (jnp.asarray(np.stack([x for x, _ in bs])),
+                jnp.asarray(np.stack([y for _, y in bs])))
+
+    def run(segments):
+        lp = lp0
+        params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+        wall = eval_s = 0.0
+        member_steps = 0
+        pos = 0
+        for (end, frac) in segments:
+            # one scan chunk per segment, AOT-compiled out of the timing
+            chunk = deep_mod.make_population_train_step(
+                lp, scan_steps=end - pos, donate=False)
+            xs, ys = batches(pos, end)
+            compiled = chunk.lower(params, xs, ys, 0.05).compile()
+            t0 = time.perf_counter()
+            out = compiled(params, xs, ys, 0.05)
+            jax.block_until_ready(out)
+            wall += time.perf_counter() - t0
+            params = out[0]
+            member_steps += lp.num_members * (end - pos)
+            pos = end
+            if frac is not None:
+                # warm the per-layout eval jit, then time steady state —
+                # the same compile-excluded convention as the train chunks
+                evaluate_population(params, lp, xte, yte)
+                t0 = time.perf_counter()
+                losses, _ = evaluate_population(params, lp, xte, yte)
+                keep = lifecycle.survivors(np.asarray(losses), frac)
+                lp, params, _ = lifecycle.compact(lp, params, None, keep)
+                # compact gathers on host: the re-upload belongs to the
+                # prune overhead, not the next segment's train wall-clock
+                params = jax.block_until_ready(
+                    jax.tree.map(jnp.asarray, params))
+                eval_s += time.perf_counter() - t0
+                print(f"# rung @ {end}: kept {len(keep)} members "
+                      f"(fused hidden "
+                      f"{[lp.layer_pop(l).total_hidden for l in range(lp.depth)]})",
+                      flush=True)
+        losses, _ = evaluate_population(params, lp, xte, yte)
+        return wall, eval_s, member_steps, float(np.min(np.asarray(losses)))
+
+    print(f"# population: {lp0.describe()}")
+    print(f"# ladder: {schedule.rungs} over {total} steps")
+    full_wall, _, full_ms, full_best = run(((total, None),))
+    halv_wall, halv_eval, halv_ms, halv_best = run(schedule.segments(total))
+    out = {
+        "bench": "halving_lifecycle", "population": lp0.describe(),
+        "batch": args.batch, "steps": total,
+        "ladder": [list(r) for r in schedule.rungs],
+        "full": {"wall_s": round(full_wall, 3), "member_steps": full_ms,
+                 "best_loss": round(full_best, 5)},
+        "halving": {"wall_s": round(halv_wall, 3), "member_steps": halv_ms,
+                    "best_loss": round(halv_best, 5),
+                    "prune_overhead_s": round(halv_eval, 3)},
+        "speedup": round(full_wall / max(halv_wall, 1e-12), 3),
+        "speedup_end_to_end": round(
+            full_wall / max(halv_wall + halv_eval, 1e-12), 3),
+        "member_step_ratio": round(full_ms / halv_ms, 3),
+        "best_loss_gap": round(halv_best - full_best, 5),
+        "note": "compile-excluded wall-clock throughout: wall_s is "
+                "AOT-compiled train-chunk execution, prune_overhead_s is "
+                "steady-state rung eval + host compaction and counts "
+                "against speedup_end_to_end",
+    }
+    print(f"# full: {full_wall:.2f}s ({full_ms} member-steps), "
+          f"best loss {full_best:.4f}")
+    print(f"# halving: {halv_wall:.2f}s train + {halv_eval:.2f}s prune "
+          f"({halv_ms} member-steps), best loss {halv_best:.4f} -> "
+          f"{out['speedup']}x train / {out['speedup_end_to_end']}x "
+          f"end-to-end, loss gap {out['best_loss_gap']:+.4f}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {args.json_out}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--members", type=int, default=300)
@@ -209,10 +317,22 @@ def main(argv=None):
     ap.add_argument("--scan-steps", type=int, default=8,
                     help="--deep: chunk size for the scan-vs-loop "
                          "train-step bench")
+    ap.add_argument("--halving", nargs="?", const="16:0.25,32:0.25",
+                    default=None, metavar="RUNGS",
+                    help="bench the successive-halving lifecycle vs "
+                         'full-population training (rungs "STEP:KEEP,...", '
+                         "default 16:0.25,32:0.25) -> BENCH_halving.json")
+    ap.add_argument("--halving-steps", type=int, default=96,
+                    help="--halving: total optimizer steps for both runs")
     ap.add_argument("--json-out", default=None,
                     help="write results as JSON (BENCH_*.json tracking)")
     args = ap.parse_args(argv)
 
+    if args.halving:
+        if args.json_out is None:
+            args.json_out = "BENCH_halving.json"
+        run_halving(args)
+        return
     if args.deep:
         if args.json_out is None:
             args.json_out = "BENCH_deep.json"

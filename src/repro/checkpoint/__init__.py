@@ -1,11 +1,11 @@
 """Atomic sharded checkpointing with async commit + elastic restore, plus
 layout-carrying fused-population checkpoints."""
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_steps,
-                                         layout_from_meta, load_meta,
-                                         population_meta, restore,
+                                         layout_from_meta, lifecycle_from_meta,
+                                         load_meta, population_meta, restore,
                                          restore_population, save,
                                          save_population)
 
 __all__ = ["AsyncCheckpointer", "latest_steps", "layout_from_meta",
-           "load_meta", "population_meta", "restore", "restore_population", "save",
-           "save_population"]
+           "lifecycle_from_meta", "load_meta", "population_meta", "restore",
+           "restore_population", "save", "save_population"]

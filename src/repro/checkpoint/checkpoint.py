@@ -153,7 +153,7 @@ def load_meta(directory: str, step: int | None = None) -> tuple:
 # fused-population checkpoints (layout travels WITH the parameters)     #
 # --------------------------------------------------------------------- #
 
-def _layout_meta(layout, params) -> dict:
+def _layout_meta(layout, params, lifecycle: dict | None = None) -> dict:
     from repro.core.population import LayeredPopulation, Population
     if isinstance(layout, Population):
         layout = layout.layered()
@@ -170,7 +170,7 @@ def _layout_meta(layout, params) -> dict:
     else:
         raise TypeError(f"unrecognised population params: {sorted(params)}")
     dtype = str(jax.tree.leaves(params)[0].dtype)
-    return {"population": {
+    meta = {"population": {
         "in_features": layout.in_features,
         "out_features": layout.out_features,
         "widths": [list(w) for w in layout.widths],
@@ -180,13 +180,40 @@ def _layout_meta(layout, params) -> dict:
         "schema": schema,
         "dtype": dtype,
     }}
+    if lifecycle is not None:
+        meta["lifecycle"] = dict(lifecycle)
+    return meta
 
 
-def population_meta(layout, params) -> dict:
+def population_meta(layout, params, lifecycle: dict | None = None) -> dict:
     """Public alias of the layout-meta builder — what a caller (e.g.
     ``TrainRunner``'s checkpointer) attaches so its generic saves stay
-    ``restore_population``-compatible."""
-    return _layout_meta(layout, params)
+    ``restore_population``-compatible.
+
+    ``lifecycle``: optional successive-halving state stored alongside the
+    layout (schema, DESIGN.md §6): ``rung`` (boundaries already applied),
+    ``member_ids`` (survivor→ORIGINAL member id, one per real member) and
+    ``n_members0`` (the run's original real member count) — what lets
+    ``--resume`` restore mid-ladder on the compacted layout and keep
+    reporting original ids."""
+    return _layout_meta(layout, params, lifecycle=lifecycle)
+
+
+def lifecycle_from_meta(meta: dict, layout) -> tuple:
+    """Lifecycle state from a checkpoint ``meta`` → ``(rung, member_ids,
+    n_members0)``.  Checkpoints written before (or without) the halving
+    lifecycle default to rung 0 with an identity member mapping over the
+    layout's real members."""
+    num_real = getattr(layout, "num_real", layout.num_members)
+    life = meta.get("lifecycle") or {}
+    rung = int(life.get("rung", 0))
+    member_ids = np.asarray(life.get("member_ids", range(num_real)),
+                            dtype=np.int64)
+    if member_ids.shape[0] != num_real:
+        raise ValueError(
+            f"lifecycle meta carries {member_ids.shape[0]} member ids for a "
+            f"layout with {num_real} real members")
+    return rung, member_ids, int(life.get("n_members0", num_real))
 
 
 def layout_from_meta(meta: dict):
@@ -200,16 +227,19 @@ def layout_from_meta(meta: dict):
 
 
 def save_population(directory: str, step: int, params, layout,
-                    keep_last: int = 3, extra_state=None) -> str:
+                    keep_last: int = 3, extra_state=None,
+                    lifecycle: dict | None = None) -> str:
     """Checkpoint fused population parameters WITH their static layout
     (widths, per-layer activations, block, param schema, dtype), so
     ``restore_population`` reconstructs both without the constructing code.
-    ``extra_state`` (e.g. optimizer state) is stored under its own subtree."""
+    ``extra_state`` (e.g. optimizer state) is stored under its own subtree;
+    ``lifecycle`` (see ``population_meta``) rides in the meta so halving
+    runs resume mid-ladder."""
     tree = {"params": params}
     if extra_state is not None:
         tree["extra"] = extra_state
     return save(directory, step, tree, keep_last=keep_last,
-                meta=_layout_meta(layout, params))
+                meta=_layout_meta(layout, params, lifecycle=lifecycle))
 
 
 def restore_population(directory: str, step: int | None = None,

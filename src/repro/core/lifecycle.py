@@ -1,0 +1,248 @@
+"""Successive-halving population lifecycle: train → eval → prune → compact.
+
+The paper trains its 10,000-member population to the full horizon and only
+THEN selects; every member that is out of contention after a few hundred
+steps still burns full FLOPs to the end.  A successive-halving schedule
+(Jamieson & Talwalkar's rungs, applied to the fused layout) turns that
+selection pressure into a direct speedup: at each rung boundary the
+population is evaluated, the worst members are dropped, and the survivors
+are COMPACTED into a freshly built, re-bucketed ``LayeredPopulation`` whose
+fused hidden axis is physically smaller — the next rung's train step is
+re-jitted against the shrunken layout, so member count and fused width
+shrink ON DEVICE across rungs (DESIGN.md §6).
+
+Two invariants make the lifecycle safe:
+
+  * Compaction is a pure GATHER.  Members are independent by construction,
+    so removing losers cannot change a survivor's computation: a survivor's
+    post-compaction trajectory equals its no-pruning trajectory to float
+    tolerance (tests/test_lifecycle.py).  ``compact`` copies each
+    survivor's padded parameter slices bit-exactly — including per-member
+    optimizer moments, which ride along through the same index maps.
+  * Identity is preserved by bookkeeping, not layout.  Compaction renumbers
+    members densely; the caller carries a survivor→original ``member_ids``
+    vector (checkpointed in the lifecycle meta) so leaderboards and resumes
+    always speak in ORIGINAL member ids.
+
+All gathers run on host (``device_get`` → numpy fancy indexing): rung
+boundaries sit outside the donated ``lax.scan`` chunk anyway, and the
+caller ``device_put``s the compacted tree born-sharded onto the new
+layout's specs (launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.population import LayeredPopulation
+
+
+def _host(x):
+    return np.asarray(jax.device_get(x))
+
+
+# ---------------------------------------------------------------------- #
+# schedule                                                               #
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class HalvingSchedule:
+    """Rungs of ``(end_step, keep_frac)``: after global step ``end_step``
+    completes, keep the best ``keep_frac`` of the surviving members.
+
+    ``"500:0.5,1000:0.5,2000:0.25"`` prunes to 50% at step 500, 50% of the
+    survivors at 1000, and 25% of those at 2000.  Rungs at or beyond the
+    run's total step count never fire (a short run is a prefix of the
+    ladder — that is what makes mid-ladder checkpoints resumable with the
+    SAME schedule string)."""
+
+    rungs: tuple  # ((end_step, keep_frac), ...)
+
+    def __post_init__(self):
+        rungs = tuple((int(s), float(f)) for s, f in self.rungs)
+        if not rungs:
+            raise ValueError("halving schedule needs at least one rung")
+        prev = 0
+        for s, f in rungs:
+            if s <= prev:
+                raise ValueError(
+                    f"rung steps must be strictly increasing and > 0, got "
+                    f"{[r[0] for r in rungs]}")
+            if not 0.0 < f <= 1.0:
+                raise ValueError(f"keep_frac must be in (0, 1], got {f}")
+            prev = s
+        object.__setattr__(self, "rungs", rungs)
+
+    @staticmethod
+    def parse(spec: str) -> "HalvingSchedule":
+        """``"500:0.5,1000:0.5,2000:0.25"`` → HalvingSchedule."""
+        rungs = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                s, f = part.split(":")
+                rungs.append((int(s), float(f)))
+            except ValueError as e:
+                raise ValueError(
+                    f"bad halving rung {part!r} (want STEP:KEEP_FRAC, e.g. "
+                    "'500:0.5,1000:0.25')") from e
+        return HalvingSchedule(tuple(rungs))
+
+    def segments(self, total_steps: int) -> tuple:
+        """The run [0, total_steps) as ``(end_step, keep_frac|None)``
+        training segments: one per rung boundary that falls INSIDE the run,
+        plus the final un-pruned stretch.  Segment i trains global steps
+        [prev_end, end) and then prunes iff keep_frac is not None."""
+        if total_steps < 1:
+            raise ValueError(f"total_steps must be >= 1, got {total_steps}")
+        segs = [(s, f) for s, f in self.rungs if s < total_steps]
+        segs.append((total_steps, None))
+        return tuple(segs)
+
+    @staticmethod
+    def n_keep(n: int, keep_frac: float) -> int:
+        """Survivor count for a rung: floor(n·frac), never below 1."""
+        return max(1, int(n * keep_frac))
+
+
+def survivors(losses, keep_frac: float) -> np.ndarray:
+    """Indices of the best ``n_keep`` members by eval loss, SORTED ascending
+    (compaction must preserve relative member order).  Ties break toward
+    the lower index (stable argsort), so the selection is deterministic."""
+    losses = np.asarray(losses)
+    k = HalvingSchedule.n_keep(losses.shape[0], keep_frac)
+    return np.sort(np.argsort(losses, kind="stable")[:k])
+
+
+# ---------------------------------------------------------------------- #
+# compaction                                                             #
+# ---------------------------------------------------------------------- #
+
+def _fused_keep_rows(pop_l, keep) -> np.ndarray:
+    """Fused-axis indices of the survivors' PADDED slices in layer ``l``'s
+    layout.  Padded (not just real) units are gathered so the compacted
+    arrays are bit-identical to what a fresh layout of the survivors would
+    address — block and per-member padded sizes are unchanged by subset."""
+    off, pad = pop_l.offsets, pop_l.padded_sizes
+    return np.concatenate(
+        [np.arange(off[m], off[m] + pad[m]) for m in keep])
+
+
+def _real_bucket_pos(lp: LayeredPopulation, l: int) -> dict:
+    """member → (real-bucket index, position inside the bucket) for
+    projection ``l`` — the inverse of the bucket packing that
+    ``init_params`` used to build ``params['mid'][l]['w']``."""
+    pos = {}
+    wi = 0
+    for (m0, n, hin, hout, off_in, off_out, real) in lp.proj_buckets(l):
+        if not real:
+            continue
+        for i in range(n):
+            pos[m0 + i] = (wi, i)
+        wi += 1
+    return pos
+
+
+def compact_params(lp: LayeredPopulation, new_lp: LayeredPopulation,
+                   params, keep) -> dict:
+    """Gather one ``deep.init_params``-shaped tree down to the survivors.
+
+    Works on parameters AND on any structurally identical tree (optimizer
+    moments, gradients): every leaf is indexed member-major, so the
+    survivor slices come out bit-exact.  Mid-layer bucket weights are
+    re-grouped into ``new_lp``'s buckets — runs that were split by a pruned
+    member merge, later layers that only pruned members reached are
+    dropped (survivors were identity pass-throughs there)."""
+    keep = [int(m) for m in keep]
+    rows0 = _fused_keep_rows(lp.layer_pop(0), keep)
+    out = {"w_in": _host(params["w_in"])[rows0],
+           "b_in": _host(params["b_in"])[rows0],
+           "mid": []}
+    for l in range(new_lp.depth - 1):
+        pos = _real_bucket_pos(lp, l)
+        old_w = params["mid"][l]["w"]
+        host_w = {}       # device_get each bucket stack at most once
+        wl = []
+        for (m0, n, hin, hout, off_in, off_out, real) in \
+                new_lp.proj_buckets(l):
+            if not real:
+                continue
+            where = [pos[keep[m]] for m in range(m0, m0 + n)]
+            parts, s = [], 0
+            while s < n:      # maximal contiguous runs from one old bucket
+                wi, i0 = where[s]
+                e = s + 1
+                while e < n and where[e] == (wi, i0 + (e - s)):
+                    e += 1
+                if wi not in host_w:
+                    host_w[wi] = _host(old_w[wi])
+                parts.append(host_w[wi][i0: i0 + (e - s)])
+                s = e
+            wl.append(parts[0] if len(parts) == 1
+                      else np.concatenate(parts, axis=0))
+        rows = _fused_keep_rows(lp.layer_pop(l + 1), keep)
+        out["mid"].append({"w": wl,
+                           "b": _host(params["mid"][l]["b"])[rows]})
+    rows_last = _fused_keep_rows(lp.layer_pop(lp.depth - 1), keep)
+    out["w_out"] = _host(params["w_out"])[:, rows_last]
+    out["b_out"] = _host(params["b_out"])[keep]
+    return out
+
+
+def compact(pop: LayeredPopulation, params, opt_state, keep):
+    """Prune the fused population down to ``keep`` (strictly increasing
+    REAL member indices) → ``(new_pop, new_params, new_opt_state)``.
+
+    ``new_pop`` is a freshly built, re-bucketed layout of the survivors
+    (``LayeredPopulation.subset``): offsets, size/pair buckets, and kernel
+    metadata are recomputed, so the fused hidden width physically shrinks.
+    ``params`` (a ``deep.init_params`` tree) is gathered bit-exactly;
+    ``opt_state`` may be ``None`` or any pytree whose params-shaped
+    subtrees (SGD momentum ``mu``, Adam ``m``/``v``) are compacted through
+    the same index maps — scalar leaves (step counts) pass through.
+    Factored states (adafactor ``v_row``/``v_col``) are rejected: their
+    leaves are not member-major along a gatherable axis.
+
+    The caller owns re-padding (``new_pop.shard_pad``), re-deriving
+    per-member learning rates (index the original vector by the survivor
+    mapping), and device_put-ing the result born-sharded."""
+    if not isinstance(pop, LayeredPopulation):
+        raise TypeError(
+            f"compact expects a LayeredPopulation, got {type(pop).__name__} "
+            "(lift single-layer layouts with Population.layered() first)")
+    new_pop = pop.subset(keep)
+    new_params = compact_params(pop, new_pop, params, keep)
+    if opt_state is None:
+        return new_pop, new_params, None
+
+    p_def = jax.tree_util.tree_structure(params)
+    p_shapes = [tuple(x.shape) for x in jax.tree.leaves(params)]
+
+    def params_like(node):
+        try:
+            return (jax.tree_util.tree_structure(node) == p_def
+                    and [tuple(x.shape)
+                         for x in jax.tree.leaves(node)] == p_shapes)
+        except Exception:
+            return False
+
+    def walk(node, path):
+        if params_like(node):
+            return compact_params(pop, new_pop, node, keep)
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path + (i,))
+                              for i, v in enumerate(node))
+        if getattr(node, "ndim", None) == 0 or np.isscalar(node):
+            return node
+        raise ValueError(
+            f"compact: optimizer-state leaf {'/'.join(map(str, path))} is "
+            "neither a scalar nor part of a params-shaped subtree (factored "
+            "moments, e.g. adafactor's v_row/v_col, are not compactable)")
+
+    return new_pop, new_params, walk(opt_state, ())

@@ -617,6 +617,38 @@ class LayeredPopulation:
         return dataclasses.replace(self, widths=widths, activations=acts,
                                    n_pad=self.n_pad + d)
 
+    def subset(self, keep) -> "LayeredPopulation":
+        """Fresh layout of the given REAL members only — the lifecycle's
+        compaction primitive (core/lifecycle.py; DESIGN.md §6).
+
+        ``keep`` must be strictly increasing indices into the real members
+        (shard-pad fillers cannot survive a rung; re-pad the result with
+        ``shard_pad``).  Relative member order is preserved, so a sorted
+        layout stays sorted and every derived quantity (offsets, buckets,
+        bd_layout) is simply re-derived for the survivors: equal-shape runs
+        that were split by a pruned member merge back into one bucket.  The
+        population depth shrinks automatically when the deepest members are
+        pruned (survivors were pass-through in the dropped layers, so the
+        truncation is exact)."""
+        keep = tuple(int(m) for m in keep)
+        if not keep:
+            raise ValueError("subset: empty keep set")
+        prev = -1
+        for m in keep:
+            if not 0 <= m < self.num_real:
+                raise ValueError(
+                    f"subset: member {m} out of range [0, {self.num_real}) "
+                    "(shard-pad fillers cannot survive)")
+            if m <= prev:
+                raise ValueError(
+                    "subset: keep indices must be strictly increasing, got "
+                    f"{keep}")
+            prev = m
+        return LayeredPopulation(
+            self.in_features, self.out_features,
+            tuple(self.widths[m] for m in keep),
+            tuple(self.activations[m] for m in keep), block=self.block)
+
     def param_specs(self):
         """PartitionSpec tree matching ``deep.init_params``: every
         member-major axis shards over the population axis —

@@ -109,17 +109,30 @@ def _member_arch(pop, m: int):
     return pop.hidden_sizes[m], pop.activations[m]
 
 
-def leaderboard(pop, losses, accs=None, k: int = 10):
+def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None):
     """Top-k members as (rank, member, hidden, activation, loss[, acc]).
 
     For layered populations ``hidden`` is the member's width tuple;
-    shard-pad filler members are excluded from the ranking."""
+    shard-pad filler members are excluded from the ranking.
+
+    ``member_ids``: optional survivor→ORIGINAL id mapping (one entry per
+    real member) from the successive-halving lifecycle — after compaction
+    the fused layout renumbers members densely, but selection must keep
+    speaking in the ids the run STARTED with, so ``member`` reports
+    ``member_ids[m]`` and the layout slot moves to ``slot``."""
     import numpy as np
+    if member_ids is not None and len(member_ids) != _num_real(pop):
+        raise ValueError(
+            f"member_ids has {len(member_ids)} entries for "
+            f"{_num_real(pop)} real members")
     order = np.argsort(np.asarray(losses)[:_num_real(pop)])[:k]
     rows = []
     for r, m in enumerate(order):
         hidden, act = _member_arch(pop, int(m))
-        row = dict(rank=r + 1, member=int(m), hidden=hidden,
+        row = dict(rank=r + 1,
+                   member=int(m) if member_ids is None
+                   else int(member_ids[int(m)]),
+                   slot=int(m), hidden=hidden,
                    activation=act, loss=float(losses[m]))
         if accs is not None:
             row["acc"] = float(accs[m])

@@ -10,8 +10,9 @@ from repro.distributed.sharding import (ACT_RESIDUAL, BATCH_AXES, POP_AXIS,
                                         POP_BUCKET, POP_HIDDEN, POP_LOGITS,
                                         POP_MEMBER, constrain, filter_spec,
                                         logical_to_sharding, mesh_axis_sizes,
-                                        pop_axis_size, population_shardings,
-                                        stack_spec)
+                                        pop_axis_size,
+                                        population_batch_shardings,
+                                        population_shardings, stack_spec)
 
 __all__ = [
     "compressed_psum", "compressed_psum_tree", "init_error_feedback",
@@ -19,5 +20,5 @@ __all__ = [
     "ACT_RESIDUAL", "BATCH_AXES", "POP_AXIS", "POP_BUCKET", "POP_HIDDEN",
     "POP_LOGITS", "POP_MEMBER", "constrain", "filter_spec",
     "logical_to_sharding", "mesh_axis_sizes", "pop_axis_size",
-    "population_shardings", "stack_spec",
+    "population_batch_shardings", "population_shardings", "stack_spec",
 ]

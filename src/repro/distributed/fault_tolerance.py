@@ -93,7 +93,7 @@ class TrainRunner:
                  ckpt_step_map: Optional[Callable[[int], int]] = None,
                  ckpt_step_unmap: Optional[Callable[[int], int]] = None,
                  ckpt_save_pred: Optional[Callable[[int], bool]] = None,
-                 restore_shardings=None):
+                 restore_shardings=None, mesh=None, state_specs=None):
         """``ckpt_meta``/``ckpt_step_map``: forwarded to the checkpointer
         (population runs attach the fused layout and record GLOBAL step
         numbers while the runner counts scan chunks); ``ckpt_step_unmap``
@@ -101,9 +101,19 @@ class TrainRunner:
         restored checkpoint's recorded step back into the runner's step
         domain.  ``restore_shardings``: optional sharding tree matching
         ``state`` — crash restores device_put straight back onto the mesh
-        instead of replicating."""
+        instead of replicating.  ``mesh`` + ``state_specs`` (a
+        PartitionSpec tree matching ``state``, e.g. ``{"params":
+        layout.param_specs()}``) derive ``restore_shardings`` here, so
+        callers wire their LOGICAL specs through and mid-run replay stays
+        sharded without hand-building NamedSharding trees."""
         self.step_fn = step_fn
         self.state = state
+        if restore_shardings is None and mesh is not None \
+                and state_specs is not None:
+            abstract = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            restore_shardings = logical_to_sharding(state_specs, mesh,
+                                                    abstract)
         self.ckpt = AsyncCheckpointer(ckpt_dir, every=ckpt_every,
                                       keep_last=keep_last, meta=ckpt_meta,
                                       step_map=ckpt_step_map,

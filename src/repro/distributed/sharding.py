@@ -143,6 +143,12 @@ POP_HIDDEN = P(POP_AXIS)                      # (H_tot,) fused hidden
 POP_BUCKET = P(POP_AXIS, None, None)          # (n, h_out, h_in) bucket stack
 POP_LOGITS = P(BATCH_AXES, POP_AXIS, None)    # (B, P, O) per-member logits
 POP_MEMBER = P(POP_AXIS)                      # (P,) per-member reductions
+# Population train batches are (scan, B, ...): the scan axis stays on every
+# device (each inner step consumes one slice), the BATCH axis shards over
+# the data axes — population runs stop replicating their batches to the
+# whole mesh.  GSPMD inserts the per-member loss-mean psum over 'data'.
+POP_BATCH_X = P(None, BATCH_AXES, None)       # (scan, B, F) features
+POP_BATCH_Y = P(None, BATCH_AXES)             # (scan, B) targets
 
 
 def pop_axis_size(mesh=None) -> int:
@@ -152,6 +158,19 @@ def pop_axis_size(mesh=None) -> int:
     if mesh is not None:
         return int(dict(mesh.shape).get(POP_AXIS, 1))
     return int(mesh_axis_sizes().get(POP_AXIS, 1))
+
+
+def population_batch_shardings(mesh, batch_size: int):
+    """NamedShardings for a population train chunk's ``(xs, ys)`` inputs
+    (leading scan axis, then batch): the batch axis shards over the mesh's
+    data axes, FALLING BACK to replication when ``batch_size`` doesn't
+    divide them (``filter_spec`` drops the non-dividing axes, the
+    documented degradation).  The specs are shape-agnostic in the leading
+    scan axis, so one sharding pair serves full and tail chunks."""
+    with set_mesh(mesh):
+        fx = filter_spec(POP_BATCH_X, (1, batch_size, 1))
+        fy = filter_spec(POP_BATCH_Y, (1, batch_size))
+    return NamedSharding(mesh, fx), NamedSharding(mesh, fy)
 
 
 def population_shardings(layout, mesh, dtype=None):

@@ -19,9 +19,11 @@ activations through the seg_act kernel, ``--per-member-lr`` samples one
 step size per member, and checkpoints carry the fused layout
 (checkpoint.save_population) so ``--resume`` needs no flags re-supplied.
 The population path is distribution-native: the layout shard-pads to the
-mesh's 'model' axis, params are born sharded, the step is a donated
-``lax.scan`` chunk (``--scan-steps``), and the loop runs through
-``TrainRunner`` exactly like the LM path.
+mesh's 'model' axis, params are born sharded, batches shard over 'data',
+the step is a donated ``lax.scan`` chunk (``--scan-steps``), and the loop
+runs through ``TrainRunner`` exactly like the LM path.  ``--halving
+"500:0.5,1000:0.25"`` adds the successive-halving lifecycle: prune at each
+rung, compact the survivors into a smaller fused layout, continue.
 """
 from __future__ import annotations
 
@@ -104,10 +106,16 @@ def run_lm(arch, args, mesh):
         runner = TrainRunner(
             step_fn, state, ckpt_dir=args.ckpt_dir,
             ckpt_every=args.ckpt_every,
-            straggler=StragglerPolicy(timeout_s=args.straggler_timeout))
+            straggler=StragglerPolicy(timeout_s=args.straggler_timeout),
+            mesh=mesh, state_specs={"params": mod.abstract_params(cfg)[1],
+                                    "opt": o_specs})
         start = 0
         if args.resume and latest_steps(args.ckpt_dir):
-            runner.state, last = restore(args.ckpt_dir, runner.state)
+            # restore through the runner's derived sharding tree so resume
+            # lands sharded (replicating params+opt first OOMs exactly the
+            # configs the mesh exists for)
+            runner.state, last = restore(args.ckpt_dir, runner.state,
+                                         shardings=runner.restore_shardings)
             start = last + 1
             print(f"resumed from step {last}")
         t0 = time.time()
@@ -138,20 +146,37 @@ def run_population(arch, args):
     DISTRIBUTION-NATIVE: the layout is shard-padded to the mesh's
     population ('model') axis, parameters are born sharded through
     ``LayeredPopulation.param_specs()``, the step is a jitted
-    argument-donating ``lax.scan`` chunk (``--scan-steps``), and the loop
-    runs through ``TrainRunner`` (checkpoint cadence, straggler watchdog,
-    crash replay) with layout-carrying sharded checkpoints."""
-    from repro.checkpoint import (latest_steps, population_meta,
+    argument-donating ``lax.scan`` chunk (``--scan-steps``), train batches
+    shard over the 'data' axis, and the loop runs through ``TrainRunner``
+    (checkpoint cadence, straggler watchdog, sharded crash replay) with
+    layout-carrying sharded checkpoints.
+
+    ``--halving`` drives the successive-halving lifecycle (core.lifecycle,
+    DESIGN.md §6): the run is split into rung segments; at each rung
+    boundary the loop exits the donated scan chunk, evaluates under the
+    training sharding, prunes to the best ``keep_frac`` of the survivors,
+    COMPACTS them into a freshly bucketed layout, re-pads it to the mesh,
+    device_puts the gathered state born-sharded, and re-jits the next
+    segment's chunk against the physically smaller population.  Checkpoints
+    carry the lifecycle (rung index + survivor→original member mapping), so
+    ``--resume`` restores mid-ladder on the compacted layout and the
+    leaderboard keeps reporting ORIGINAL member ids."""
+    from repro.checkpoint import (latest_steps, lifecycle_from_meta,
+                                  load_meta, population_meta,
                                   restore_population, save_population)
     from repro.core import deep
     from repro.core.activations import PAPER_TEN
+    from repro.core.lifecycle import HalvingSchedule, compact, survivors
     from repro.core.population import LayeredPopulation, Population
     from repro.core.selection import evaluate_population, leaderboard
     from repro.data import TabularTask
     from repro.distributed import StragglerPolicy, TrainRunner
     from repro.distributed.sharding import (pop_axis_size,
+                                            population_batch_shardings,
                                             population_shardings)
     from repro.launch.mesh import make_host_mesh
+
+    schedule = HalvingSchedule.parse(args.halving) if args.halving else None
 
     if args.population_depths:
         widths = parse_depth_spec(args.population_depths)
@@ -175,6 +200,7 @@ def run_population(arch, args):
 
     with set_mesh(mesh):
         start = 0
+        rung = 0
         if args.resume and latest_steps(args.ckpt_dir):
             # the checkpoint's layout wins (it matches the stored params and
             # is already shard-padded for the mesh that wrote it); restore
@@ -192,21 +218,29 @@ def run_population(arch, args):
                 print("note: resuming with the CHECKPOINT's layout "
                       f"({lp_ckpt.describe()})")
             lp = lp_ckpt
-            p_sh = population_shardings(lp, mesh)
+            # pin to the restored step: the lifecycle meta must describe
+            # exactly the checkpoint the params came from
+            meta, _ = load_meta(args.ckpt_dir, last)
+            rung, member_ids, n0 = lifecycle_from_meta(meta, lp)
             start = last + 1
-            print(f"resumed from step {last}")
+            print(f"resumed from step {last}"
+                  + (f" (rung {rung}, {lp.num_real} survivors)"
+                     if rung else ""))
         else:
             # shard-pad the layout to the population axis and initialise
             # born-sharded: the real members' params are BIT-IDENTICAL to a
             # single-device init (fillers draw from a folded key).
             lp_real, lp = lp, lp.shard_pad(pop_axis_size(mesh))
-            p_sh = population_shardings(lp, mesh)
+            n0 = lp_real.num_members
+            member_ids = np.arange(n0)
 
             def born_sharded(key):
                 p = deep.init_params(key, lp_real)
                 return deep.pad_params(p, lp_real, lp,
                                        jax.random.fold_in(key, 1))
-            params = jax.jit(born_sharded, out_shardings=p_sh)(
+            params = jax.jit(
+                born_sharded,
+                out_shardings=population_shardings(lp, mesh))(
                 jax.random.PRNGKey(args.seed))
         print(f"population: {lp.describe()}")
 
@@ -215,87 +249,160 @@ def run_population(arch, args):
         task = TabularTask(args.samples, lp.in_features,
                            n_classes=lp.out_features, seed=args.seed)
         (xtr, ytr), (xte, yte) = task.split()
+        xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
 
-        lr = arch.lr
+        lr0 = None
         if args.per_member_lr:
-            # drawn over REAL members only (shard-pad fillers get the base
-            # lr), so the sample is identical to a single-device run
-            lr = jnp.exp(jax.random.uniform(
-                jax.random.PRNGKey(args.seed + 1), (lp.num_real,),
+            # drawn ONCE over the run's ORIGINAL n0 members and indexed
+            # down by the survivor mapping (shard-pad fillers get the base
+            # lr): a member keeps its step size through every compaction
+            # and across resumes, identically to a single-device run
+            lr0 = jnp.exp(jax.random.uniform(
+                jax.random.PRNGKey(args.seed + 1), (n0,),
                 minval=jnp.log(arch.lr * 0.3), maxval=jnp.log(arch.lr * 3.0)))
-            lr = jnp.concatenate([lr, jnp.full((lp.n_pad,), arch.lr)])
             print(f"per-member learning rates in "
                   f"[{arch.lr * 0.3:.4f}, {arch.lr * 3.0:.4f}]")
 
-        chunk_fn = deep.make_population_train_step(
-            lp, m3_impl=args.m3_impl, bd_impl=args.bd_impl,
-            act_impl=args.act_impl, scan_steps=scan)
+        def member_lr(lp):
+            if lr0 is None:
+                return arch.lr
+            lr = jnp.asarray(lr0)[jnp.asarray(member_ids)]
+            return jnp.concatenate([lr, jnp.full((lp.n_pad,), arch.lr)])
+
+        def lifecycle_meta():
+            return {"rung": rung, "n_members0": int(n0),
+                    "member_ids": [int(i) for i in member_ids]}
+
         total = args.steps
-        n_chunks = max((total - start + scan - 1) // scan, 0)
         print_every = max(50 // scan, 1)
-        first_loss = {}
+        stats = {}
 
-        def step_fn(state, c):
-            g0 = start + c * scan
-            n = min(scan, total - g0)
-            bs = [task.batch(g0 + i, args.batch) for i in range(n)]
-            xs = jnp.asarray(np.stack([b[0] for b in bs]))
-            ys = jnp.asarray(np.stack([b[1] for b in bs]))
-            p, _losses, pers = chunk_fn(state["params"], xs, ys, lr)
-            # mean over REAL members only — shard-pad fillers train too but
-            # must not dilute the reported loss (a sharded run prints the
-            # same numbers as its single-device twin)
-            pers = np.asarray(pers[:, :lp.num_real])
-            first_loss.setdefault("loss", float(pers[0].mean()))
-            mean = float(pers[-1].mean())
-            if c % print_every == 0:
-                print(f"step {g0 + n - 1:4d}  mean member loss {mean:.4f}")
-            return {"params": p}, {"loss": mean, "step": g0 + n - 1}
+        def train_segment(params, lp, seg_start, seg_end):
+            """Global steps [seg_start, seg_end) under the CURRENT layout:
+            jitted donated scan chunks, batches device_put sharded over the
+            'data' axis, TrainRunner replay/checkpoints against the
+            layout's own spec tree."""
+            lr = member_lr(lp)
+            chunk_fn = deep.make_population_train_step(
+                lp, m3_impl=args.m3_impl, bd_impl=args.bd_impl,
+                act_impl=args.act_impl, scan_steps=scan)
+            sh_x, sh_y = population_batch_shardings(mesh, args.batch)
+            n_chunks = (seg_end - seg_start + scan - 1) // scan
 
-        def chunk_crosses_cadence(c):
-            # chunk c covers global steps [g0, g1): checkpoint iff one of
-            # them completes a --ckpt-every multiple (the per-step loop's
-            # "(step+1) % every == 0" cadence, quantized up to chunk end)
-            if not args.ckpt_every:
-                return False
-            g0 = start + c * scan
-            g1 = min(g0 + scan, total)
-            return g1 // args.ckpt_every > g0 // args.ckpt_every
+            def step_fn(state, c):
+                g0 = seg_start + c * scan
+                n = min(scan, seg_end - g0)
+                bs = [task.batch(g0 + i, args.batch) for i in range(n)]
+                xs = jax.device_put(np.stack([b[0] for b in bs]), sh_x)
+                ys = jax.device_put(np.stack([b[1] for b in bs]), sh_y)
+                p, _losses, pers = chunk_fn(state["params"], xs, ys, lr)
+                # mean over REAL members only — shard-pad fillers train too
+                # but must not dilute the reported loss (a sharded run
+                # prints the same numbers as its single-device twin)
+                pers = np.asarray(pers[:, :lp.num_real])
+                stats.setdefault("first_loss", float(pers[0].mean()))
+                mean = float(pers[-1].mean())
+                stats["last_loss"] = mean
+                if c % print_every == 0:
+                    print(f"step {g0 + n - 1:4d}  mean member loss "
+                          f"{mean:.4f}")
+                return {"params": p}, {"loss": mean, "step": g0 + n - 1}
 
-        runner = TrainRunner(
-            step_fn, {"params": params}, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every,
-            straggler=StragglerPolicy(timeout_s=args.straggler_timeout),
-            ckpt_meta=population_meta(lp, params),
-            ckpt_step_map=lambda c: min(start + (c + 1) * scan, total) - 1,
-            ckpt_step_unmap=lambda g: (g + 1 - start) // scan - 1,
-            ckpt_save_pred=chunk_crosses_cadence,
-            restore_shardings={"params": p_sh})
+            def chunk_crosses_cadence(c):
+                # chunk c covers global steps [g0, g1): checkpoint iff one
+                # of them completes a --ckpt-every multiple (the per-step
+                # loop's "(step+1) % every == 0" cadence, quantized up to
+                # chunk end)
+                if not args.ckpt_every:
+                    return False
+                g0 = seg_start + c * scan
+                g1 = min(g0 + scan, seg_end)
+                return g1 // args.ckpt_every > g0 // args.ckpt_every
 
+            runner = TrainRunner(
+                step_fn, {"params": params}, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every,
+                straggler=StragglerPolicy(timeout_s=args.straggler_timeout),
+                ckpt_meta=population_meta(lp, params,
+                                          lifecycle=lifecycle_meta()),
+                ckpt_step_map=lambda c: min(seg_start + (c + 1) * scan,
+                                            seg_end) - 1,
+                ckpt_step_unmap=lambda g: (g + 1 - seg_start) // scan - 1,
+                ckpt_save_pred=chunk_crosses_cadence,
+                mesh=mesh, state_specs={"params": lp.param_specs()})
+            runner.run(n_chunks)
+            # planned work, counted once per segment (a crash-replayed
+            # chunk must not inflate the reported throughput)
+            stats["member_steps"] = (stats.get("member_steps", 0)
+                                     + lp.num_real * (seg_end - seg_start))
+            return runner.state["params"]
+
+        # rung segments: [0, b0) prune [b0, b1) prune ... [b_last, total).
+        # A resumed run re-enters the ladder at its checkpointed rung (the
+        # boundaries before it are already applied to the layout).
+        segments = schedule.segments(total) if schedule else ((total, None),)
         t0 = time.time()
-        runner.run(n_chunks)
+        pos = start
+        for i in range(min(rung, len(segments) - 1) if schedule else 0,
+                       len(segments)):
+            seg_end, keep_frac = segments[i]
+            if pos < seg_end:
+                params = train_segment(params, lp, pos, seg_end)
+                pos = seg_end
+            if keep_frac is None:
+                continue
+            # ---- rung boundary: eval under the training sharding, prune,
+            # compact into a freshly bucketed layout, re-pad to the mesh,
+            # device_put born-sharded; the next segment re-jits against the
+            # physically smaller population.
+            losses, _ = evaluate_population(params, lp, xte_j, yte_j)
+            n_before = lp.num_real
+            keep = survivors(np.asarray(losses)[:n_before], keep_frac)
+            member_ids = member_ids[keep]
+            lp_real, params_host, _ = compact(lp, params, None, keep)
+            rung = i + 1
+            lp = lp_real.shard_pad(pop_axis_size(mesh))
+            fill = jax.random.fold_in(jax.random.PRNGKey(args.seed),
+                                      1000 + rung)
+            params = jax.device_put(
+                deep.pad_params(params_host, lp_real, lp, fill),
+                population_shardings(lp, mesh))
+            print(f"rung {i} @ step {pos - 1}: kept "
+                  f"{len(keep)}/{n_before} members -> {lp.describe()}")
+            if args.ckpt_every:
+                # force-save the COMPACTED state at the last COMPLETED step
+                # (pos-1 == the boundary step, except for catch-up prunes on
+                # a resume that was already past it), overwriting any
+                # cadence save of that step: the latest checkpoint always
+                # matches the live layout, so replay and --resume land on
+                # the new rung
+                save_population(args.ckpt_dir, pos - 1, params, lp,
+                                lifecycle=lifecycle_meta())
         dt = time.time() - t0
-        params = runner.state["params"]
 
         steps_run = max(total - start, 0)
         if steps_run:
-            loss0 = first_loss.get("loss", 0.0)
-            loss = runner.metrics_log[-1][1]["loss"]
-            print(f"trained {lp.num_real} MLPs × {steps_run} steps in "
-                  f"{dt:.1f}s ({lp.num_real * steps_run / max(dt, 1e-9):.0f} "
+            loss0 = stats.get("first_loss", 0.0)
+            loss = stats.get("last_loss", 0.0)
+            member_steps = stats.get("member_steps",
+                                     lp.num_real * steps_run)
+            pop_desc = (f"{n0}->{lp.num_real}" if lp.num_real != n0
+                        else f"{lp.num_real}")
+            print(f"trained {pop_desc} MLPs × {steps_run} steps in "
+                  f"{dt:.1f}s ({member_steps / max(dt, 1e-9):.0f} "
                   f"model-steps/s); loss {loss0:.4f} -> {loss:.4f}")
             if args.ckpt_every:
                 # final checkpoint ONLY if the cadence didn't just write it
                 # (steps % ckpt_every == 0 used to save the last step twice)
                 saved = latest_steps(args.ckpt_dir)
                 if not saved or saved[-1] != total - 1:
-                    save_population(args.ckpt_dir, total - 1, params, lp)
+                    save_population(args.ckpt_dir, total - 1, params, lp,
+                                    lifecycle=lifecycle_meta())
 
-        losses, accs = evaluate_population(params, lp, jnp.asarray(xte),
-                                           jnp.asarray(yte))
+        losses, accs = evaluate_population(params, lp, xte_j, yte_j)
         print("leaderboard:")
-        for row in leaderboard(lp, losses, accs,
-                               k=min(10, lp.num_real)):
+        for row in leaderboard(lp, losses, accs, k=min(10, lp.num_real),
+                               member_ids=member_ids):
             print(f"  #{row['rank']:2d} member {row['member']:4d} "
                   f"hidden={row['hidden']} {row['activation']:11s} "
                   f"loss={row['loss']:.4f} acc={row['acc']:.3f}")
@@ -345,6 +452,13 @@ def main(argv=None):
                          "dispatch per chunk)")
     ap.add_argument("--per-member-lr", action="store_true",
                     help="paper §7: every member gets its own step size")
+    ap.add_argument("--halving", default=None,
+                    help='successive-halving rungs "STEP:KEEP,..." (e.g. '
+                         '"500:0.5,1000:0.5,2000:0.25"): after each listed '
+                         "global step, keep the best fraction of surviving "
+                         "members and COMPACT the fused layout (rungs at or "
+                         "past --steps never fire; resume with the same "
+                         "spec to continue a ladder mid-run)")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, reduced=args.reduced)

@@ -1,0 +1,287 @@
+"""Successive-halving lifecycle (core.lifecycle + the --halving driver):
+compaction is a bit-exact gather (params AND optimizer moments), a
+survivor's post-compaction trajectory equals its no-pruning trajectory,
+leaderboards keep speaking in ORIGINAL member ids across rungs, and
+--resume restores mid-ladder onto the compacted layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import deep
+from repro.core.lifecycle import HalvingSchedule, compact, survivors
+from repro.core.population import LayeredPopulation
+
+LP = LayeredPopulation(
+    6, 3,
+    widths=((7,), (13, 5), (64, 32, 16), (13, 5), (9,), (16, 8)),
+    activations=("relu", ("tanh", "gelu"), ("mish", "sigmoid", "tanh"),
+                 ("tanh", "gelu"), "relu", ("relu", "tanh")),
+    block=8).sorted()
+
+
+# --------------------------------------------------------------------- #
+# schedule                                                              #
+# --------------------------------------------------------------------- #
+
+def test_schedule_parse_and_segments():
+    s = HalvingSchedule.parse("500:0.5, 1000:0.5,2000:0.25")
+    assert s.rungs == ((500, 0.5), (1000, 0.5), (2000, 0.25))
+    assert s.segments(3000) == ((500, 0.5), (1000, 0.5), (2000, 0.25),
+                                (3000, None))
+    # rungs at or past the total never fire: a short run is a ladder prefix
+    assert s.segments(1500) == ((500, 0.5), (1000, 0.5), (1500, None))
+    assert s.segments(300) == ((300, None),)
+
+
+@pytest.mark.parametrize("bad", ["", "500", "500:0.5:1", "a:0.5",
+                                 "500:0.5,400:0.5", "500:0", "500:1.5",
+                                 "0:0.5"])
+def test_schedule_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        HalvingSchedule.parse(bad)
+
+
+def test_n_keep_floor_never_below_one():
+    assert HalvingSchedule.n_keep(8, 0.5) == 4
+    assert HalvingSchedule.n_keep(5, 0.5) == 2
+    assert HalvingSchedule.n_keep(3, 0.25) == 1
+    assert HalvingSchedule.n_keep(1, 0.01) == 1
+
+
+def test_survivors_sorted_and_deterministic_on_ties():
+    losses = np.array([3.0, 1.0, 2.0, 5.0, 1.0, 9.0])
+    np.testing.assert_array_equal(survivors(losses, 0.5), [1, 2, 4])
+    # tie between members 1 and 4 → stable sort keeps the lower index first
+    np.testing.assert_array_equal(survivors(losses, 1 / 6), [1])
+
+
+# --------------------------------------------------------------------- #
+# subset / compact                                                      #
+# --------------------------------------------------------------------- #
+
+def test_subset_validation():
+    with pytest.raises(ValueError, match="empty"):
+        LP.subset(())
+    with pytest.raises(ValueError, match="increasing"):
+        LP.subset((2, 1))
+    with pytest.raises(ValueError, match="out of range"):
+        LP.subset((0, LP.num_members))
+    pad = LP.shard_pad(4)
+    with pytest.raises(ValueError, match="fillers"):
+        pad.subset((0, pad.num_real))  # a pad slot cannot survive
+
+
+def _tree_eq(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+def test_compact_params_and_opt_moments_bit_exact():
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    # fabricated SGD-momentum state: params-shaped 'mu' + scalar count
+    mu = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(7), x.shape), params)
+    state = {"count": jnp.asarray(3, jnp.int32), "mu": mu}
+
+    keep = [0, 2, 3, 5]
+    new_lp, new_p, new_st = compact(LP, params, state, keep)
+    assert new_lp == LP.subset(keep)
+    assert int(new_st["count"]) == 3
+    for i, m in enumerate(keep):
+        _tree_eq(deep.extract_member(new_p, new_lp, i),
+                 deep.extract_member(params, LP, m))
+        # optimizer moments ride through the SAME index maps, bit-exact
+        _tree_eq(deep.extract_member(new_st["mu"], new_lp, i),
+                 deep.extract_member(mu, LP, m))
+
+
+def test_compact_from_padded_pop_equals_unpadded():
+    """Gathering survivors out of a shard-padded layout gives the same
+    tree as gathering them from the unpadded one (pads are trailing and
+    never share a bucket with real members)."""
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    lpp = LP.shard_pad(4)
+    padded = deep.pad_params(params, LP, lpp,
+                             jax.random.fold_in(jax.random.PRNGKey(0), 1))
+    keep = [1, 2, 4]
+    lp_a, p_a, _ = compact(LP, params, None, keep)
+    lp_b, p_b, _ = compact(lpp, padded, None, keep)
+    assert lp_a == lp_b
+    _tree_eq(p_a, p_b)
+
+
+def test_compact_depth_shrinks_and_forward_matches():
+    """Pruning every depth-3 member truncates the layout (survivors were
+    identity pass-throughs in the dropped layers) and the compacted
+    forward equals the survivors' slices of the full forward."""
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    keep = [m for m in range(LP.num_members) if LP.member_depths[m] < 3]
+    new_lp, new_p, _ = compact(LP, params, None, keep)
+    assert new_lp.depth == 2 and len(new_p["mid"]) == 1
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, 6))
+    full = deep.forward(params, x, LP)
+    np.testing.assert_allclose(np.asarray(full[:, keep]),
+                               np.asarray(deep.forward(new_p, x, new_lp)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_compact_regroups_bucket_around_pruned_member():
+    """Pruning a member out of the middle of a bucket re-buckets the
+    non-contiguous survivors into one run, weights gathered in order.
+    In the sorted LP, members 2, 3 ((13,5)) and 4 ((16,8)) share one
+    padded-(16,8) projection-0 bucket; member 3 is dropped."""
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    old_real = [bk for bk in LP.proj_buckets(0) if bk[6]]
+    assert old_real[0][:2] == (2, 3)  # the shared (16,8)-padded run
+    keep = [2, 4]
+    new_lp, new_p, _ = compact(LP, params, None, keep)
+    real = [bk for bk in new_lp.proj_buckets(0) if bk[6]]
+    assert len(real) == 1 and real[0][1] == 2  # one bucket, both members
+    assert len(new_p["mid"][0]["w"]) == 1
+    old_w = np.asarray(params["mid"][0]["w"][0])
+    np.testing.assert_array_equal(np.asarray(new_p["mid"][0]["w"][0]),
+                                  old_w[[0, 2]])
+
+
+def test_compact_rejects_factored_state_and_wrong_layout():
+    from repro.optim import adafactor
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    state = adafactor().init(params)
+    with pytest.raises(ValueError, match="factored|compactable"):
+        compact(LP, params, state, [0, 1])
+    from repro.core.population import Population
+    pop = Population(4, 2, (8, 8), ("relu", "relu"))
+    with pytest.raises(TypeError, match="LayeredPopulation"):
+        compact(pop, params, None, [0])
+
+
+def test_trajectory_equals_no_pruning_run():
+    """THE lifecycle invariant: members are independent, so a survivor's
+    post-compaction trajectory (smaller fused layout, re-jitted step)
+    equals its trajectory in the never-pruned population to float
+    tolerance — per-member lr vector included."""
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    lr = jnp.linspace(0.02, 0.08, LP.num_members)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 6))
+    ys = jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0, 3)
+
+    full = params
+    for t in range(8):
+        full, _, _ = deep.sgd_step(full, xs[t], ys[t], lr, LP)
+
+    pruned = params
+    for t in range(4):
+        pruned, _, _ = deep.sgd_step(pruned, xs[t], ys[t], lr, LP)
+    keep = [0, 2, 3, 5]
+    new_lp, pruned, _ = compact(LP, pruned, None, keep)
+    lr2 = lr[np.asarray(keep)]
+    for t in range(4, 8):
+        pruned, _, _ = deep.sgd_step(pruned, xs[t], ys[t], lr2, new_lp)
+
+    for i, m in enumerate(keep):
+        a = deep.extract_member(pruned, new_lp, i)
+        b = deep.extract_member(full, LP, m)
+        jax.tree.map(   # skip the activation-name string leaves
+            lambda x, y: None if isinstance(x, str)
+            else np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                            rtol=1e-5, atol=1e-6), a, b)
+
+
+# --------------------------------------------------------------------- #
+# leaderboard identity                                                  #
+# --------------------------------------------------------------------- #
+
+def test_leaderboard_reports_original_ids_after_two_rungs():
+    from repro.core.selection import leaderboard
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    member_ids = np.arange(LP.num_members)
+
+    lp, p = LP, params
+    rng = np.random.default_rng(0)
+    for frac in (0.5, 0.5):                     # two rungs
+        losses = rng.normal(1.0, 0.3, lp.num_members)
+        keep = survivors(losses, frac)
+        member_ids = member_ids[keep]
+        lp, p, _ = compact(lp, p, None, keep)
+
+    assert lp.num_members == 1 and len(member_ids) == 1
+    losses = np.array([0.42])
+    rows = leaderboard(lp, losses, member_ids=member_ids)
+    assert rows[0]["member"] == int(member_ids[0])
+    assert rows[0]["slot"] == 0
+    # the reported architecture is the ORIGINAL member's architecture
+    assert rows[0]["hidden"] == LP.widths[int(member_ids[0])]
+    with pytest.raises(ValueError, match="member_ids"):
+        leaderboard(lp, losses, member_ids=np.arange(5))
+
+
+# --------------------------------------------------------------------- #
+# driver: --halving end to end                                          #
+# --------------------------------------------------------------------- #
+
+_BASE = ["--arch", "parallelmlp-10k", "--reduced", "--scan-steps", "2",
+         "--samples", "256", "--population-acts", "relu,tanh",
+         "--population-depths", "8,4;8,4;6;5;12,6;7;9;10",
+         "--per-member-lr", "--ckpt-every", "2"]
+_DRIVER = _BASE + ["--halving", "4:0.5,8:0.5"]
+
+
+def test_halving_driver_prunes_and_checkpoints_lifecycle(tmp_path):
+    from repro.checkpoint import lifecycle_from_meta, load_meta
+    from repro.launch.train import main
+    params, lp = main(_DRIVER + ["--steps", "12",
+                                 "--ckpt-dir", str(tmp_path / "ck")])
+    # 8 → 4 → 2 members; the returned layout is the compacted one
+    assert lp.num_real == 2
+    meta, step = load_meta(str(tmp_path / "ck"))
+    assert step == 11
+    rung, member_ids, n0 = lifecycle_from_meta(meta, lp)
+    assert rung == 2 and n0 == 8
+    assert len(member_ids) == 2
+    assert all(0 <= m < 8 for m in member_ids)
+
+
+def test_halving_resume_mid_ladder_matches_straight_run(tmp_path):
+    """Stop between rungs, --resume with the same ladder: the continued
+    run must equal the uninterrupted one — layout, params, and the
+    survivor→original mapping."""
+    from repro.checkpoint import load_meta
+    from repro.launch.train import main
+    # run A stops mid-ladder (rung 0 applied at step 4, rung 1 not reached)
+    main(_DRIVER + ["--steps", "6", "--ckpt-dir", str(tmp_path / "ck")])
+    meta_a, _ = load_meta(str(tmp_path / "ck"))
+    assert meta_a["lifecycle"]["rung"] == 1
+    p_res, lp_res = main(_DRIVER + ["--steps", "12", "--resume",
+                                    "--ckpt-dir", str(tmp_path / "ck")])
+    p_str, lp_str = main(_DRIVER + ["--steps", "12",
+                                    "--ckpt-dir", str(tmp_path / "ck2")])
+    assert lp_res == lp_str
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7), p_res, p_str)
+    meta_r, _ = load_meta(str(tmp_path / "ck"))
+    meta_s, _ = load_meta(str(tmp_path / "ck2"))
+    assert meta_r["lifecycle"] == meta_s["lifecycle"]
+
+
+def test_halving_catchup_prune_saves_compacted_latest(tmp_path):
+    """Resuming a pre-ladder checkpoint PAST a rung boundary applies the
+    missed prune immediately and force-saves the compacted state at the
+    last COMPLETED step — never at the long-gone boundary step — so the
+    directory's LATEST checkpoint always matches the live layout (a crash
+    in the next segment must replay onto the compacted state)."""
+    from repro.checkpoint import latest_steps, restore_population
+    from repro.launch.train import main
+    # plain run (no ladder) to step 6: checkpoints at 1, 3, 5
+    main(_BASE + ["--steps", "6", "--ckpt-dir", str(tmp_path / "ck")])
+    # resume with a rung boundary (step 2) that is already behind
+    params, lp = main(_BASE + ["--steps", "10", "--resume",
+                               "--halving", "2:0.5",
+                               "--ckpt-dir", str(tmp_path / "ck")])
+    assert lp.num_real == 4  # 8 members, one 0.5 rung, applied on resume
+    # the catch-up save landed at the last completed step (5), with the
+    # COMPACTED layout — not at the boundary step (1) under stale latest
+    steps = latest_steps(str(tmp_path / "ck"))
+    assert 5 in steps and 1 not in steps
+    _, lp5, _ = restore_population(str(tmp_path / "ck"), step=5)
+    assert lp5.num_real == 4

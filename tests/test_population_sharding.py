@@ -173,6 +173,48 @@ def test_population_shardings_single_device():
     assert leaves and all(hasattr(s, "spec") for s in leaves)
 
 
+_BATCH_SHARDING = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.distributed.sharding import population_batch_shardings
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(model=2)          # (data=2, model=2)
+assert dict(mesh.shape) == {"data": 2, "model": 2}
+
+# dividing batch: the batch axis actually shards over 'data'
+sh_x, sh_y = population_batch_shardings(mesh, 8)
+xs = jax.device_put(np.zeros((3, 8, 6), np.float32), sh_x)
+ys = jax.device_put(np.zeros((3, 8), np.int32), sh_y)
+assert not xs.sharding.is_fully_replicated, str(xs.sharding)
+assert "data" in str(xs.sharding.spec) and "data" in str(ys.sharding.spec)
+# ...and the leading scan axis stays whole on every device
+assert xs.addressable_shards[0].data.shape == (3, 4, 6)
+
+# non-dividing batch: documented fallback to replication
+sh_x7, _ = population_batch_shardings(mesh, 7)
+x7 = jax.device_put(np.zeros((3, 7, 6), np.float32), sh_x7)
+assert x7.sharding.is_fully_replicated, str(x7.sharding)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_population_batch_shardings_data_axis(tmp_path):
+    """Train batches shard over the mesh 'data' axis (scan axis whole,
+    batch axis split), degrading to replication when the batch size
+    doesn't divide the axis."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    r = subprocess.run([sys.executable, "-c", _BATCH_SHARDING],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
 _SHARDED_DRIVER = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
