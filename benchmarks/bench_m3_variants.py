@@ -67,7 +67,19 @@ def bench(pop, batch, impl, iters=5):
     return wall, stats
 
 
-def bench_deep(lp, batch, bd_impl, iters=3, shardings=None):
+def _require_impl(bd_impl: str):
+    """Fail LOUDLY when a requested mid-layer impl does not exist — a typo'd
+    or backend-unavailable impl must abort the bench, not silently fall
+    back and publish numbers for the wrong kernel."""
+    if bd_impl not in deep_mod.BD_IMPLS:
+        raise SystemExit(
+            f"bd_impl {bd_impl!r} is not available on this backend; "
+            f"registered impls: {sorted(deep_mod.BD_IMPLS)}")
+
+
+def bench_deep(lp, batch, bd_impl, iters=3, shardings=None,
+               act_impl="sliced", compute_dtype=None):
+    _require_impl(bd_impl)
     params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
     if shardings is not None:
         params = jax.device_put(params, shardings)
@@ -76,16 +88,26 @@ def bench_deep(lp, batch, bd_impl, iters=3, shardings=None):
                            lp.out_features)
 
     def loss(p):
-        return deep_mod.fused_loss(p, x, y, lp, "bucketed", bd_impl)[0]
+        return deep_mod.fused_loss(p, x, y, lp, "bucketed", bd_impl,
+                                   act_impl, compute_dtype)[0]
 
     step = jax.jit(jax.grad(loss))
-    out = step(params)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
+    try:
         out = step(params)
-    jax.block_until_ready(out)
-    wall = (time.perf_counter() - t0) / iters
+        jax.block_until_ready(out)
+    except Exception as e:
+        raise RuntimeError(
+            f"bd_impl {bd_impl!r} (act_impl={act_impl}, "
+            f"compute_dtype={compute_dtype}) failed to compile/run on this "
+            f"backend — refusing to fall back") from e
+    walls = []
+    for _ in range(5):          # best-of-5: robust on contended CI hosts
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = step(params)
+        jax.block_until_ready(out)
+        walls.append((time.perf_counter() - t0) / iters)
+    wall = min(walls)
     # profile the SAME fwd+bwd computation the wall-clock measures, so the
     # tracked structural numbers catch backward-pass regressions too
     stats = analyze(step.lower(params).compile().as_text())
@@ -138,19 +160,17 @@ def bench_scan_vs_loop(lp, batch, scan_steps, steps=None, bd_impl="einsum",
             "scan_speedup": round(loop_s / max(scan_s, 1e-12), 3)}
 
 
-def run_deep(args):
-    """Mixed-depth layered population: einsum bucket loop vs the Pallas
-    block-diagonal kernel (interpret on CPU), plus the scanned-chunk vs
-    per-step-loop train-step shoot-out.  ``--sharded`` runs everything
-    under the host mesh (population axis = 'model'; launch with
-    XLA_FLAGS=--xla_force_host_platform_device_count=N to fake devices)."""
+def _deep_bench_population(args):
+    """The shared --deep/--fused bench population (mixed depths, the PR-1
+    acceptance widths) and its optional host-mesh sharding — ONE builder so
+    both modes always measure the same layout.  Returns
+    (lp, mesh, shardings, mesh_ctx)."""
     import contextlib
 
     base = [(24,), (13, 5), (17, 9), (32, 16, 8)]
     lp = LayeredPopulation.grid(
         20, 2, base, ("relu", "tanh"),
         repeats=max(args.members // (2 * len(base)), 1), block=args.block)
-
     mesh = None
     shardings = None
     ctx = contextlib.nullcontext()
@@ -165,6 +185,16 @@ def run_deep(args):
         ctx = set_mesh(mesh)
         print(f"# mesh: {dict(mesh.shape)} ({len(jax.devices())} devices)")
     print(f"# population: {lp.describe()}")
+    return lp, mesh, shardings, ctx
+
+
+def run_deep(args):
+    """Mixed-depth layered population: einsum bucket loop vs the Pallas
+    block-diagonal kernel (interpret on CPU), plus the scanned-chunk vs
+    per-step-loop train-step shoot-out.  ``--sharded`` runs everything
+    under the host mesh (population axis = 'model'; launch with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N to fake devices)."""
+    lp, mesh, shardings, ctx = _deep_bench_population(args)
 
     with ctx:
         print("bd_impl,wall_ms,dot_gflops,hbm_mb")
@@ -196,6 +226,82 @@ def run_deep(args):
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=2)
         print(f"# wrote {args.json_out}")
+
+
+def run_fused(args):
+    """Fused-epilogue shoot-out (DESIGN.md §7): the full fwd+bwd step of
+    the layered engine, each mid-layer impl in its PRODUCTION config —
+
+      einsum — per-bucket einsums + sliced XLA activations
+      pallas — block-diag kernel + the seg_act round trip (GEMM writes
+               pre-activations to HBM, seg_act reads them back — the path
+               the fused kernel replaces)
+      fused  — projection + bias + activation in ONE kernel pass (seg_act
+               only for layer 0)
+
+    measured at f32 AND bf16 operands (the --compute-dtype policy), wall
+    and loop-aware HLO HBM side by side → BENCH_fused.json.  A requested
+    impl that is missing or fails on this backend ABORTS the bench
+    (no silent fallback)."""
+    lp, mesh, shardings, ctx = _deep_bench_population(args)
+
+    act_for = {"einsum": "sliced", "pallas": "pallas", "fused": "pallas"}
+    impls = args.bd_impls or ["einsum", "pallas", "fused"]
+    for impl in impls:
+        _require_impl(impl)
+    rows = {}
+    with ctx:
+        print("bd_impl,dtype,act_impl,wall_ms,hbm_mb")
+        for impl in impls:
+            act = act_for.get(impl, "sliced")
+            rows[impl] = {"act_impl": act}
+            for dt in ("float32", "bfloat16"):
+                wall, stats = bench_deep(
+                    lp, args.batch, impl, shardings=shardings,
+                    act_impl=act, compute_dtype=dt)
+                rows[impl][dt] = {
+                    "wall_ms": round(wall * 1e3, 2),
+                    "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2)}
+                print(f"{impl},{dt},{act},{wall*1e3:.2f},"
+                      f"{stats['hbm_bytes']/1e6:.1f}", flush=True)
+
+    out = {"bench": "fused_layer", "population": lp.describe(),
+           "batch": args.batch, "results": rows,
+           "sharded": bool(args.sharded),
+           "mesh": dict(mesh.shape) if mesh else None}
+    if "fused" in rows and "pallas" in rows:
+        pw, fw = (rows[i]["float32"] for i in ("pallas", "fused"))
+        out["headline"] = {
+            "fused_vs_pallas_speedup": round(
+                pw["wall_ms"] / max(fw["wall_ms"], 1e-9), 3),
+            "fused_vs_pallas_hbm_delta_mb": round(
+                fw["hbm_mb"] - pw["hbm_mb"], 2)}
+        bf = rows["fused"].get("bfloat16")
+        if bf:
+            out["headline"]["fused_bf16_hbm_mb"] = bf["hbm_mb"]
+        if args.sharded and args.members == 8 and args.batch == 32:
+            # the tracked regression anchor: bd_impl=pallas on these exact
+            # shapes as committed by PR 3 (BENCH_deep_sharded.json, dense
+            # (out_tiles × k_max) grid, act sliced) — what the fused kernel
+            # + ragged-grid fix set out to beat
+            out["baseline_pr3_pallas"] = {
+                "wall_ms": 188.2, "hbm_mb": 65.79,
+                "source": "BENCH_deep_sharded.json @ PR 3",
+                "fused_speedup": round(188.2 / max(fw["wall_ms"], 1e-9), 3),
+                "fused_hbm_delta_mb": round(fw["hbm_mb"] - 65.79, 2)}
+            print(f"# fused vs PR-3 pallas baseline: "
+                  f"{out['baseline_pr3_pallas']['fused_speedup']}x wall, "
+                  f"{out['baseline_pr3_pallas']['fused_hbm_delta_mb']:+.1f}"
+                  " MB HBM", flush=True)
+        print(f"# fused vs pallas (this run): "
+              f"{out['headline']['fused_vs_pallas_speedup']}x wall, "
+              f"{out['headline']['fused_vs_pallas_hbm_delta_mb']:+.1f} MB "
+              "HBM", flush=True)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {args.json_out}")
+    return out
 
 
 def run_halving(args):
@@ -233,6 +339,12 @@ def run_halving(args):
         wall = eval_s = 0.0
         member_steps = 0
         pos = 0
+        rung_evals = []
+        n_rung = xte.shape[0]
+        if args.rung_eval_batches:
+            # cheap rungs: rank fidelity at the cut line only needs a
+            # subsample; the FINAL selection eval below stays full-split
+            n_rung = min(n_rung, args.rung_eval_batches * args.batch)
         for (end, frac) in segments:
             # one scan chunk per segment, AOT-compiled out of the timing
             chunk = deep_mod.make_population_train_step(
@@ -249,36 +361,52 @@ def run_halving(args):
             if frac is not None:
                 # warm the per-layout eval jit, then time steady state —
                 # the same compile-excluded convention as the train chunks
-                evaluate_population(params, lp, xte, yte)
+                evaluate_population(params, lp, xte[:n_rung], yte[:n_rung])
                 t0 = time.perf_counter()
-                losses, _ = evaluate_population(params, lp, xte, yte)
+                losses, _ = evaluate_population(params, lp, xte[:n_rung],
+                                                yte[:n_rung])
                 keep = lifecycle.survivors(np.asarray(losses), frac)
+                dt_eval = time.perf_counter() - t0
+                # warm the (lru-cached) device-gather jit out of the
+                # timing — the same compile-excluded convention as the
+                # train chunks and the rung evals
+                lifecycle.compact(lp, params, None, keep)
+                t1 = time.perf_counter()
                 lp, params, _ = lifecycle.compact(lp, params, None, keep)
-                # compact gathers on host: the re-upload belongs to the
+                # the device-gathered tree re-materialises as part of the
                 # prune overhead, not the next segment's train wall-clock
                 params = jax.block_until_ready(
                     jax.tree.map(jnp.asarray, params))
-                eval_s += time.perf_counter() - t0
+                dt_rung = dt_eval + (time.perf_counter() - t1)
+                eval_s += dt_rung
+                rung_evals.append({"step": end, "eval_s": round(dt_eval, 4),
+                                   "prune_s": round(dt_rung - dt_eval, 4),
+                                   "samples": int(n_rung)})
                 print(f"# rung @ {end}: kept {len(keep)} members "
-                      f"(fused hidden "
+                      f"(eval {dt_eval*1e3:.0f} ms on {n_rung} samples; "
+                      f"fused hidden "
                       f"{[lp.layer_pop(l).total_hidden for l in range(lp.depth)]})",
                       flush=True)
         losses, _ = evaluate_population(params, lp, xte, yte)
-        return wall, eval_s, member_steps, float(np.min(np.asarray(losses)))
+        return (wall, eval_s, member_steps,
+                float(np.min(np.asarray(losses))), rung_evals)
 
     print(f"# population: {lp0.describe()}")
     print(f"# ladder: {schedule.rungs} over {total} steps")
-    full_wall, _, full_ms, full_best = run(((total, None),))
-    halv_wall, halv_eval, halv_ms, halv_best = run(schedule.segments(total))
+    full_wall, _, full_ms, full_best, _ = run(((total, None),))
+    halv_wall, halv_eval, halv_ms, halv_best, rung_evals = run(
+        schedule.segments(total))
     out = {
         "bench": "halving_lifecycle", "population": lp0.describe(),
         "batch": args.batch, "steps": total,
         "ladder": [list(r) for r in schedule.rungs],
+        "rung_eval_batches": args.rung_eval_batches,
         "full": {"wall_s": round(full_wall, 3), "member_steps": full_ms,
                  "best_loss": round(full_best, 5)},
         "halving": {"wall_s": round(halv_wall, 3), "member_steps": halv_ms,
                     "best_loss": round(halv_best, 5),
-                    "prune_overhead_s": round(halv_eval, 3)},
+                    "prune_overhead_s": round(halv_eval, 3),
+                    "rung_evals": rung_evals},
         "speedup": round(full_wall / max(halv_wall, 1e-12), 3),
         "speedup_end_to_end": round(
             full_wall / max(halv_wall + halv_eval, 1e-12), 3),
@@ -310,7 +438,14 @@ def main(argv=None):
     ap.add_argument("--deep", action="store_true",
                     help="bench the layered engine (BD_IMPLS shoot-out) "
                          "instead of the single-layer M3 variants")
-    ap.add_argument("--bd-impls", nargs="+", default=["einsum", "pallas"])
+    ap.add_argument("--fused", action="store_true",
+                    help="bench the fused mid-layer kernel against pallas "
+                         "(+seg_act round trip) and einsum, f32 AND bf16 "
+                         "-> BENCH_fused.json")
+    ap.add_argument("--bd-impls", nargs="+", default=None,
+                    help="mid-layer impls to bench (unknown impls ABORT; "
+                         "default: einsum+pallas for --deep, all three "
+                         "for --fused)")
     ap.add_argument("--sharded", action="store_true",
                     help="--deep: run under the host mesh (shard-padded "
                          "population axis; fake devices via XLA_FLAGS)")
@@ -324,6 +459,10 @@ def main(argv=None):
                          "default 16:0.25,32:0.25) -> BENCH_halving.json")
     ap.add_argument("--halving-steps", type=int, default=96,
                     help="--halving: total optimizer steps for both runs")
+    ap.add_argument("--rung-eval-batches", type=int, default=0,
+                    help="--halving: evaluate only this many --batch-sized "
+                         "eval batches at each rung boundary (0 = full "
+                         "split; the final selection eval is always full)")
     ap.add_argument("--json-out", default=None,
                     help="write results as JSON (BENCH_*.json tracking)")
     args = ap.parse_args(argv)
@@ -333,9 +472,15 @@ def main(argv=None):
             args.json_out = "BENCH_halving.json"
         run_halving(args)
         return
+    if args.fused:
+        if args.json_out is None:
+            args.json_out = "BENCH_fused.json"
+        run_fused(args)
+        return
     if args.deep:
         if args.json_out is None:
             args.json_out = "BENCH_deep.json"
+        args.bd_impls = args.bd_impls or ["einsum", "pallas"]
         run_deep(args)
         return
 

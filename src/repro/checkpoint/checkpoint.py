@@ -153,7 +153,8 @@ def load_meta(directory: str, step: int | None = None) -> tuple:
 # fused-population checkpoints (layout travels WITH the parameters)     #
 # --------------------------------------------------------------------- #
 
-def _layout_meta(layout, params, lifecycle: dict | None = None) -> dict:
+def _layout_meta(layout, params, lifecycle: dict | None = None,
+                 train_meta: dict | None = None) -> dict:
     from repro.core.population import LayeredPopulation, Population
     if isinstance(layout, Population):
         layout = layout.layered()
@@ -182,10 +183,13 @@ def _layout_meta(layout, params, lifecycle: dict | None = None) -> dict:
     }}
     if lifecycle is not None:
         meta["lifecycle"] = dict(lifecycle)
+    if train_meta is not None:
+        meta["train"] = dict(train_meta)
     return meta
 
 
-def population_meta(layout, params, lifecycle: dict | None = None) -> dict:
+def population_meta(layout, params, lifecycle: dict | None = None,
+                    train_meta: dict | None = None) -> dict:
     """Public alias of the layout-meta builder — what a caller (e.g.
     ``TrainRunner``'s checkpointer) attaches so its generic saves stay
     ``restore_population``-compatible.
@@ -195,8 +199,14 @@ def population_meta(layout, params, lifecycle: dict | None = None) -> dict:
     ``member_ids`` (survivor→ORIGINAL member id, one per real member) and
     ``n_members0`` (the run's original real member count) — what lets
     ``--resume`` restore mid-ladder on the compacted layout and keep
-    reporting original ids."""
-    return _layout_meta(layout, params, lifecycle=lifecycle)
+    reporting original ids.
+
+    ``train_meta``: optional run policy (e.g. the ``--compute-dtype``
+    mixed-precision setting) recorded under ``meta["train"]`` — parameters
+    are always saved as their f32 masters, so the policy is informational
+    for resumes, not a restore-time requirement."""
+    return _layout_meta(layout, params, lifecycle=lifecycle,
+                        train_meta=train_meta)
 
 
 def lifecycle_from_meta(meta: dict, layout) -> tuple:
@@ -228,7 +238,8 @@ def layout_from_meta(meta: dict):
 
 def save_population(directory: str, step: int, params, layout,
                     keep_last: int = 3, extra_state=None,
-                    lifecycle: dict | None = None) -> str:
+                    lifecycle: dict | None = None,
+                    train_meta: dict | None = None) -> str:
     """Checkpoint fused population parameters WITH their static layout
     (widths, per-layer activations, block, param schema, dtype), so
     ``restore_population`` reconstructs both without the constructing code.
@@ -239,7 +250,8 @@ def save_population(directory: str, step: int, params, layout,
     if extra_state is not None:
         tree["extra"] = extra_state
     return save(directory, step, tree, keep_last=keep_last,
-                meta=_layout_meta(layout, params, lifecycle=lifecycle))
+                meta=_layout_meta(layout, params, lifecycle=lifecycle,
+                                  train_meta=train_meta))
 
 
 def restore_population(directory: str, step: int | None = None,

@@ -50,15 +50,18 @@ DeepPopulation = LayeredPopulation
 def block_diag_einsum(h: jax.Array, w_buckets, lp: LayeredPopulation,
                       l: int) -> jax.Array:
     """h (B, H_l_tot) → (B, H_{l+1}_tot) as a loop of per-bucket batched
-    einsums; pass-through buckets are slice copies."""
+    einsums; pass-through buckets are slice copies.  Accumulates in f32
+    whatever the operand dtype (the bf16 mixed-precision policy) and
+    returns the operand dtype."""
     b = h.shape[0]
     outs = []
     wi = 0
     for (m0, n, hin, hout, off_in, off_out, real) in lp.proj_buckets(l):
         if real:
             hh = h[:, off_in: off_in + n * hin].reshape(b, n, hin)
-            outs.append(jnp.einsum("bnh,noh->bno", hh, w_buckets[wi])
-                        .reshape(b, n * hout))
+            outs.append(jnp.einsum("bnh,noh->bno", hh, w_buckets[wi],
+                                   preferred_element_type=jnp.float32)
+                        .astype(h.dtype).reshape(b, n * hout))
             wi += 1
         else:
             outs.append(h[:, off_in: off_in + n * hin])
@@ -90,19 +93,44 @@ def block_diag_pallas(h: jax.Array, w_buckets, lp: LayeredPopulation, l: int,
                       block_b: int = 128) -> jax.Array:
     from repro.kernels.ops import block_diag_gemm  # lazy: kernels import pallas
     wb = pack_weight_tiles(w_buckets, lp, l)
-    return block_diag_gemm(h, wb, lp.bd_layout(l), block_b=block_b,
-                           interpret=interpret)
+    return block_diag_gemm(h, wb.astype(h.dtype), lp.bd_layout(l),
+                           block_b=block_b, interpret=interpret)
+
+
+def block_diag_fused(h: jax.Array, w_buckets, lp: LayeredPopulation, l: int,
+                     *, bias: jax.Array, interpret: bool | None = None,
+                     block_b: int = 128) -> jax.Array:
+    """FUSED mid layer: projection + pass-through-gated bias + per-segment
+    activation + padding mask in one Pallas pass (kernels/fused_layer.py,
+    DESIGN.md §7) — returns layer l+1's ACTIVATIONS, so callers skip the
+    separate bias add and ``_act``.  The bias stays f32 (added to the f32
+    accumulator in the epilogue); operand tiles follow ``h``'s dtype."""
+    from repro.kernels.ops import fused_layer  # lazy: kernels import pallas
+    wb = pack_weight_tiles(w_buckets, lp, l)
+    pout = lp.layer_pop(l + 1)
+    b_eff = (bias.astype(jnp.float32)
+             * jnp.asarray(lp.active_unit_mask(l + 1), jnp.float32))
+    return fused_layer(h, wb.astype(h.dtype), b_eff, lp.bd_layout(l),
+                       pout.block_act_ids, pout.hidden_mask,
+                       block_b=block_b, interpret=interpret)
 
 
 BD_IMPLS = {
     "einsum": block_diag_einsum,
     "pallas": block_diag_pallas,
+    "fused": block_diag_fused,
 }
+
+# impls whose kernel epilogue already applies bias + activation + mask —
+# ``forward`` must hand them the bias and skip its own ``_act``
+FUSED_BD_IMPLS = frozenset(["fused"])
 
 
 def block_diag_matmul(h: jax.Array, w_buckets, lp: LayeredPopulation, l: int,
                       impl: str = "einsum", **kw) -> jax.Array:
-    """Member-block-diagonal projection of layer l → l+1."""
+    """Member-block-diagonal projection of layer l → l+1.  ``impl="fused"``
+    additionally needs ``bias=`` and returns the ACTIVATED layer (epilogue
+    fusion), not the raw projection."""
     return BD_IMPLS[impl](h, w_buckets, lp, l, **kw)
 
 
@@ -223,27 +251,63 @@ def _act(lp: LayeredPopulation, l: int, h: jax.Array,
     return h * jnp.asarray(pop.hidden_mask, h.dtype)
 
 
+def _resolve_compute_dtype(compute_dtype):
+    """``None``/``"float32"`` → None (the pure-f32 fast path); anything else
+    (``"bfloat16"``) → the numpy dtype operands are cast to.  Parameters,
+    accumulators, loss and eval stay f32 regardless (DESIGN.md §7)."""
+    if compute_dtype is None:
+        return None
+    cd = jnp.dtype(compute_dtype)
+    return None if cd == jnp.dtype(jnp.float32) else cd
+
+
 def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
             bd_impl: str = "einsum", act_impl: str = "sliced",
-            bd_kwargs: dict | None = None, m3_kwargs: dict | None = None):
-    """x (B, F) → logits (B, P, O) — every member an independent deep MLP."""
-    h = _act(lp, 0, x @ params["w_in"].T + params["b_in"], act_impl)
+            bd_kwargs: dict | None = None, m3_kwargs: dict | None = None,
+            compute_dtype=None):
+    """x (B, F) → logits (B, P, O) — every member an independent deep MLP.
+
+    ``compute_dtype="bfloat16"`` applies the mixed-precision policy: matmul
+    OPERANDS (activations and weights) are cast to bf16 at every projection
+    boundary while accumulators run f32 (``preferred_element_type`` / f32
+    VMEM scratch in the kernels), biases and the logits stay f32, and the
+    f32 master parameters are untouched — gradients arrive f32.
+
+    ``bd_impl="fused"`` routes every mid layer through the fused Pallas
+    kernel (projection + bias + activation + mask in one pass, DESIGN.md
+    §7); the per-layer ``_act`` then applies only to layer 0."""
+    cd = _resolve_compute_dtype(compute_dtype)
+    cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
+    z0 = jax.lax.dot_general(cast(x), cast(params["w_in"]),
+                             dimension_numbers=(((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    h = _act(lp, 0, z0 + params["b_in"], act_impl)
     for l in range(lp.depth - 1):
-        h = block_diag_matmul(h, params["mid"][l]["w"], lp, l, impl=bd_impl,
+        hb = cast(h)
+        wl = [cast(w) for w in params["mid"][l]["w"]]
+        if bd_impl in FUSED_BD_IMPLS:
+            # bias + activation + mask live in the kernel epilogue; the
+            # output is layer l+1's (operand-dtype) activations
+            h = block_diag_matmul(hb, wl, lp, l, impl=bd_impl,
+                                  bias=params["mid"][l]["b"],
+                                  **(bd_kwargs or {}))
+            continue
+        z = block_diag_matmul(hb, wl, lp, l, impl=bd_impl,
                               **(bd_kwargs or {}))
-        h = h + params["mid"][l]["b"] * jnp.asarray(
-            lp.active_unit_mask(l + 1), h.dtype)
+        h = z + params["mid"][l]["b"] * jnp.asarray(
+            lp.active_unit_mask(l + 1), jnp.float32)
         h = _act(lp, l + 1, h, act_impl)
-    y = _m3_apply(h, params["w_out"], lp.layer_pop(lp.depth - 1),
-                  impl=m3_impl, **(m3_kwargs or {}))
-    return y + params["b_out"][None]
+    y = _m3_apply(cast(h), cast(params["w_out"]),
+                  lp.layer_pop(lp.depth - 1), impl=m3_impl,
+                  **(m3_kwargs or {}))
+    return y.astype(jnp.float32) + params["b_out"][None]
 
 
 def fused_loss(params, x, targets, lp: LayeredPopulation,
                m3_impl: str = "bucketed", bd_impl: str = "einsum",
-               act_impl: str = "sliced"):
+               act_impl: str = "sliced", compute_dtype=None):
     logits = forward(params, x, lp, m3_impl=m3_impl, bd_impl=bd_impl,
-                     act_impl=act_impl)
+                     act_impl=act_impl, compute_dtype=compute_dtype)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(
         logp, targets[:, None, None].astype(jnp.int32), axis=-1)[..., 0]
@@ -273,12 +337,15 @@ def member_lr_tree(lp: LayeredPopulation, lr) -> dict:
 
 def _sgd_update(params, x, targets, lr, lp: LayeredPopulation,
                 m3_impl: str = "bucketed", bd_impl: str = "einsum",
-                act_impl: str = "sliced"):
+                act_impl: str = "sliced", compute_dtype=None):
     """The un-jitted SGD step body (shared by ``sgd_step`` and the scanned
     ``make_population_train_step``).  ``lr`` may be a scalar or a
-    per-member (P,) vector."""
+    per-member (P,) vector.  Under ``compute_dtype="bfloat16"`` the forward
+    operands run bf16 but the loss is f32, so against f32 master params the
+    gradients (and the update) stay f32 — mixed precision never touches the
+    optimizer math."""
     (loss, per), grads = jax.value_and_grad(fused_loss, has_aux=True)(
-        params, x, targets, lp, m3_impl, bd_impl, act_impl)
+        params, x, targets, lp, m3_impl, bd_impl, act_impl, compute_dtype)
     lr = jnp.asarray(lr)
     if lr.ndim == 0:
         new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
@@ -288,14 +355,15 @@ def _sgd_update(params, x, targets, lr, lp: LayeredPopulation,
     return new, loss, per
 
 
-@partial(jax.jit, static_argnames=("lp", "m3_impl", "bd_impl", "act_impl"))
+@partial(jax.jit, static_argnames=("lp", "m3_impl", "bd_impl", "act_impl",
+                                   "compute_dtype"))
 def sgd_step(params, x, targets, lr, lp: LayeredPopulation,
              m3_impl: str = "bucketed", bd_impl: str = "einsum",
-             act_impl: str = "sliced"):
+             act_impl: str = "sliced", compute_dtype=None):
     """One fused SGD step.  ``lr`` may be a scalar or a per-member (P,)
     vector."""
     return _sgd_update(params, x, targets, lr, lp, m3_impl, bd_impl,
-                       act_impl)
+                       act_impl, compute_dtype)
 
 
 def make_population_train_step(lp: LayeredPopulation, *,
@@ -303,7 +371,8 @@ def make_population_train_step(lp: LayeredPopulation, *,
                                bd_impl: str = "einsum",
                                act_impl: str = "sliced",
                                scan_steps: int = 1,
-                               donate: bool = True):
+                               donate: bool = True,
+                               compute_dtype=None):
     """Build the jitted multi-step population train chunk.
 
     Returns ``chunk(params, xs, ys, lr) -> (params, losses, pers)`` where
@@ -324,7 +393,7 @@ def make_population_train_step(lp: LayeredPopulation, *,
         def body(p, batch):
             x, y = batch
             p, loss, per = _sgd_update(p, x, y, lr, lp, m3_impl, bd_impl,
-                                       act_impl)
+                                       act_impl, compute_dtype)
             return p, (loss, per)
         params, (losses, pers) = jax.lax.scan(body, params, (xs, ys))
         return params, losses, pers

@@ -24,14 +24,17 @@ Two invariants make the lifecycle safe:
     vector (checkpointed in the lifecycle meta) so leaderboards and resumes
     always speak in ORIGINAL member ids.
 
-All gathers run on host (``device_get`` → numpy fancy indexing): rung
-boundaries sit outside the donated ``lax.scan`` chunk anyway, and the
-caller ``device_put``s the compacted tree born-sharded onto the new
-layout's specs (launch/train.py).
+Gathers run ON DEVICE by default (one jitted program of static-index
+gathers — a 10k-member prune never round-trips the parameter tree through
+host memory); ``gather="host"`` keeps the original ``device_get`` → numpy
+fallback, bit-identical by construction.  Rung boundaries sit outside the
+donated ``lax.scan`` chunk either way, and the caller ``device_put``s the
+compacted tree born-sharded onto the new layout's specs (launch/train.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import numpy as np
@@ -147,25 +150,19 @@ def _real_bucket_pos(lp: LayeredPopulation, l: int) -> dict:
     return pos
 
 
-def compact_params(lp: LayeredPopulation, new_lp: LayeredPopulation,
-                   params, keep) -> dict:
-    """Gather one ``deep.init_params``-shaped tree down to the survivors.
-
-    Works on parameters AND on any structurally identical tree (optimizer
-    moments, gradients): every leaf is indexed member-major, so the
-    survivor slices come out bit-exact.  Mid-layer bucket weights are
-    re-grouped into ``new_lp``'s buckets — runs that were split by a pruned
-    member merge, later layers that only pruned members reached are
-    dropped (survivors were identity pass-throughs there)."""
-    keep = [int(m) for m in keep]
+def _compact_tree(lp: LayeredPopulation, new_lp: LayeredPopulation,
+                  params, keep, xp, fetch) -> dict:
+    """The gather itself, over ``xp`` ∈ {numpy, jax.numpy}: every leaf is
+    indexed member-major with STATIC index arrays, so the survivor slices
+    come out bit-exact on either backend.  ``fetch`` materialises a leaf
+    (cached ``device_get`` on the host path, identity under jit)."""
     rows0 = _fused_keep_rows(lp.layer_pop(0), keep)
-    out = {"w_in": _host(params["w_in"])[rows0],
-           "b_in": _host(params["b_in"])[rows0],
+    out = {"w_in": fetch(params["w_in"])[rows0],
+           "b_in": fetch(params["b_in"])[rows0],
            "mid": []}
     for l in range(new_lp.depth - 1):
         pos = _real_bucket_pos(lp, l)
         old_w = params["mid"][l]["w"]
-        host_w = {}       # device_get each bucket stack at most once
         wl = []
         for (m0, n, hin, hout, off_in, off_out, real) in \
                 new_lp.proj_buckets(l):
@@ -178,24 +175,71 @@ def compact_params(lp: LayeredPopulation, new_lp: LayeredPopulation,
                 e = s + 1
                 while e < n and where[e] == (wi, i0 + (e - s)):
                     e += 1
-                if wi not in host_w:
-                    host_w[wi] = _host(old_w[wi])
-                parts.append(host_w[wi][i0: i0 + (e - s)])
+                parts.append(fetch(old_w[wi])[i0: i0 + (e - s)])
                 s = e
             wl.append(parts[0] if len(parts) == 1
-                      else np.concatenate(parts, axis=0))
+                      else xp.concatenate(parts, axis=0))
         rows = _fused_keep_rows(lp.layer_pop(l + 1), keep)
         out["mid"].append({"w": wl,
-                           "b": _host(params["mid"][l]["b"])[rows]})
+                           "b": fetch(params["mid"][l]["b"])[rows]})
     rows_last = _fused_keep_rows(lp.layer_pop(lp.depth - 1), keep)
-    out["w_out"] = _host(params["w_out"])[:, rows_last]
-    out["b_out"] = _host(params["b_out"])[keep]
+    out["w_out"] = fetch(params["w_out"])[:, rows_last]
+    out["b_out"] = fetch(params["b_out"])[np.asarray(keep)]
     return out
 
 
-def compact(pop: LayeredPopulation, params, opt_state, keep):
+@functools.lru_cache(maxsize=32)
+def _device_gather_fn(lp, new_lp, keep):
+    """Cached jitted gather per (layouts, keep): repeated compactions of
+    the same prune (params, then each optimizer-moment subtree, and
+    warm-then-time bench loops) reuse one compiled program."""
+    import jax.numpy as jnp
+    return jax.jit(lambda p: _compact_tree(lp, new_lp, p, list(keep), jnp,
+                                           lambda a: a))
+
+
+def compact_params(lp: LayeredPopulation, new_lp: LayeredPopulation,
+                   params, keep, gather: str = "host") -> dict:
+    """Gather one ``deep.init_params``-shaped tree down to the survivors.
+
+    Works on parameters AND on any structurally identical tree (optimizer
+    moments, gradients): every leaf is indexed member-major, so the
+    survivor slices come out bit-exact.  Mid-layer bucket weights are
+    re-grouped into ``new_lp``'s buckets — runs that were split by a pruned
+    member merge, later layers that only pruned members reached are
+    dropped (survivors were identity pass-throughs there).
+
+    ``gather="device"`` runs the whole gather as ONE jitted program of
+    static-index ``jnp.take``-style gathers — at 10k members the prune
+    never round-trips the parameter tree through host memory (the ROADMAP
+    PR-3 follow-up); ``gather="host"`` is the ``device_get`` → numpy
+    fallback.  Both produce bit-identical trees (tests/test_lifecycle.py).
+    """
+    keep = [int(m) for m in keep]
+    if gather == "device":
+        return _device_gather_fn(lp, new_lp, tuple(keep))(params)
+    if gather != "host":
+        raise ValueError(f"gather must be 'device' or 'host', got {gather!r}")
+    cache = {}
+
+    def fetch(a):
+        if id(a) not in cache:
+            cache[id(a)] = _host(a)
+        return cache[id(a)]
+
+    return _compact_tree(lp, new_lp, params, keep, np, fetch)
+
+
+def compact(pop: LayeredPopulation, params, opt_state, keep,
+            gather: str = "device"):
     """Prune the fused population down to ``keep`` (strictly increasing
     REAL member indices) → ``(new_pop, new_params, new_opt_state)``.
+
+    ``gather`` selects where the index maps run: ``"device"`` (default) is
+    one jitted static-index gather program — no host round-trip, the
+    compacted tree stays on device for the caller's born-sharded
+    ``device_put``; ``"host"`` is the original ``device_get`` → numpy
+    fallback (bit-identical results).
 
     ``new_pop`` is a freshly built, re-bucketed layout of the survivors
     (``LayeredPopulation.subset``): offsets, size/pair buckets, and kernel
@@ -215,7 +259,7 @@ def compact(pop: LayeredPopulation, params, opt_state, keep):
             f"compact expects a LayeredPopulation, got {type(pop).__name__} "
             "(lift single-layer layouts with Population.layered() first)")
     new_pop = pop.subset(keep)
-    new_params = compact_params(pop, new_pop, params, keep)
+    new_params = compact_params(pop, new_pop, params, keep, gather=gather)
     if opt_state is None:
         return new_pop, new_params, None
 
@@ -232,7 +276,7 @@ def compact(pop: LayeredPopulation, params, opt_state, keep):
 
     def walk(node, path):
         if params_like(node):
-            return compact_params(pop, new_pop, node, keep)
+            return compact_params(pop, new_pop, node, keep, gather=gather)
         if isinstance(node, dict):
             return {k: walk(v, path + (k,)) for k, v in node.items()}
         if isinstance(node, (list, tuple)):

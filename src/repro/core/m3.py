@@ -48,6 +48,8 @@ def m3_scatter(h: jax.Array, w2: jax.Array, pop: Population) -> jax.Array:
     broadcast product to (H, B, O).  num_segments is static → jit-safe.
     """
     s = h[:, None, :] * w2[None, :, :]            # (B, O, H)  — the paper's S
+    if s.dtype != jnp.float32:                    # bf16 operands: f32 reduce
+        s = s.astype(jnp.float32)
     s = jnp.moveaxis(s, -1, 0)                     # (H, B, O)
     y = jax.ops.segment_sum(
         s, jnp.asarray(pop.segment_ids),
@@ -65,7 +67,8 @@ def m3_onehot(h: jax.Array, w2: jax.Array, pop: Population) -> jax.Array:
                          dtype=h.dtype)            # (H, P)
     # y[b,m,o] = sum_j h[b,j] w2[o,j] sel[j,m]
     return jnp.einsum("bj,oj,jm->bmo", h, w2, sel,
-                      optimize="greedy")
+                      optimize="greedy",
+                      preferred_element_type=jnp.float32)
 
 
 # ---------------------------------------------------------------------- #
@@ -88,7 +91,8 @@ def m3_bucketed(h: jax.Array, w2: jax.Array, pop: Population) -> jax.Array:
     for (m0, n, hs, col0) in _buckets(pop):
         hh = h[:, col0: col0 + n * hs].reshape(b, n, hs)
         ww = w2[:, col0: col0 + n * hs].reshape(o, n, hs)
-        pieces.append(jnp.einsum("bnh,onh->bno", hh, ww))
+        pieces.append(jnp.einsum("bnh,onh->bno", hh, ww,
+                                 preferred_element_type=jnp.float32))
     return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=1)
 
 

@@ -307,29 +307,44 @@ class Population:
 class BlockDiagLayout:
     """Static scalar-prefetch metadata for one block-diagonal l→l+1
     projection run as a single Pallas segment-blocked matmul
-    (kernels/block_diag.py; DESIGN.md §3).
+    (kernels/block_diag.py; DESIGN.md §3/§7).
 
     The fused weight is a flat array of (block × block) tiles, member-major,
     row-major over each member's (out_tile, in_tile) grid, with ONE shared
     identity tile appended at index ``n_param_blocks`` (used by pass-through
-    members; it is not a parameter).  For output tile t the kernel reduces
-    over k = 0..n_k[t]-1, reading input tile ``in_start[t]+k`` against weight
-    tile ``w_row[t]+k``.  The ``*_t`` fields describe the TRANSPOSED
-    projection (used for dh in the custom VJP), and ``wb_out_tile/wb_in_tile``
-    map each parameter tile to its (dy, h) tile pair for the dw kernel.
+    members; it is not a parameter).
+
+    The reduction is RAGGED (members have different fan-ins), so instead of
+    a dense (out_tiles × k_max) grid — which wastes a clamped re-read on
+    every tile whose fan-in is below the maximum — the kernel runs one grid
+    step per REAL (output tile, reduction k) pair: step ``s`` reads input
+    tile ``s_in[s]`` against weight tile ``s_w[s]`` and accumulates into
+    output tile ``s_out[s]``; ``s_first/s_last`` flag the accumulator
+    init/flush edges of each output tile's (consecutive) run.  ``n_steps``
+    is exactly the number of MXU tiles of work — no dead grid points.
+    The ``*_t`` fields describe the TRANSPOSED projection (used for dh in
+    the custom VJP), and ``wb_out_tile/wb_in_tile`` map each parameter tile
+    to its (dy, h) tile pair for the dw kernel.
     """
     block: int
     n_in_tiles: int
     n_out_tiles: int
     n_param_blocks: int
-    k_max: int
-    in_start: tuple
-    w_row: tuple
-    n_k: tuple
-    k_max_t: int
-    in_start_t: tuple
-    w_row_t: tuple
-    n_k_t: tuple
+    n_steps: int
+    s_in: tuple
+    s_w: tuple
+    s_out: tuple
+    s_first: tuple
+    s_last: tuple
+    n_steps_t: int
+    s_in_t: tuple
+    s_w_t: tuple
+    s_out_t: tuple
+    s_first_t: tuple
+    s_last_t: tuple
+    s_q_t: tuple         # param tile touched at each transposed step (the
+                         # dw target of the one-pass fused backward;
+                         # n_param_blocks = the discarded dummy slot)
     perm_t: tuple        # WB_aug permutation building the transposed tiles
     wb_out_tile: tuple   # per parameter tile
     wb_in_tile: tuple
@@ -528,22 +543,44 @@ class LayeredPopulation:
 
         n_out_tiles = int(out_t0[P])
         n_in_tiles = int(in_t0[P])
-        in_start = np.zeros(n_out_tiles, int)
-        w_row = np.zeros(n_out_tiles, int)
-        n_k = np.zeros(n_out_tiles, int)
-        for m in range(P):
-            for r in range(ob[m]):
-                t = out_t0[m] + r
-                if real[m]:
-                    in_start[t], w_row[t], n_k[t] = \
-                        in_t0[m], base[m] + r * ib[m], ib[m]
-                else:
-                    in_start[t], w_row[t], n_k[t] = in_t0[m] + r, ident, 1
 
-        # transposed projection (dh): member-major, (in_tile, out_tile)-major
-        in_start_t = np.zeros(n_in_tiles, int)
-        w_row_t = np.zeros(n_in_tiles, int)
-        n_k_t = np.zeros(n_in_tiles, int)
+        def ragged_steps(transposed: bool):
+            """Flattened (output tile, reduction k) step arrays: one grid
+            step per REAL MXU tile of work (the ragged-grid fix — no dead
+            k steps for narrow members or pass-through tiles).  ``qs`` maps
+            each step to the PARAM tile whose (du, x) pair is live at that
+            step (ident = the discarded dummy slot for pass-through) — the
+            transposed orientation's qs is what lets the fused backward
+            emit dw in the same pass as dx."""
+            s_in, s_w, s_out, first, last, qs = [], [], [], [], [], []
+            for m in range(P):
+                n_o, n_i = (ib[m], ob[m]) if transposed else (ob[m], ib[m])
+                rd0 = (out_t0 if transposed else in_t0)[m]
+                wr0 = (in_t0 if transposed else out_t0)[m]
+                for r in range(n_o):
+                    t = wr0 + r
+                    if real[m]:
+                        for k in range(n_i):
+                            s_in.append(rd0 + k)
+                            s_w.append(base[m] + r * n_i + k)
+                            s_out.append(t)
+                            first.append(1 if k == 0 else 0)
+                            last.append(1 if k == n_i - 1 else 0)
+                            qs.append(base[m] + (k * n_o + r if transposed
+                                                 else r * n_i + k))
+                    else:
+                        s_in.append(rd0 + r)
+                        s_w.append(ident)
+                        s_out.append(t)
+                        first.append(1)
+                        last.append(1)
+                        qs.append(ident)
+            return s_in, s_w, s_out, first, last, qs
+
+        s_in, s_w, s_out, s_first, s_last, _ = ragged_steps(False)
+        (s_in_t, s_w_t, s_out_t, s_first_t, s_last_t,
+         s_q_t) = ragged_steps(True)
+
         perm = np.zeros(n_param + 1, int)
         perm[n_param] = n_param
         wb_out_tile = np.zeros(n_param, int)
@@ -556,22 +593,16 @@ class LayeredPopulation:
                         perm[base[m] + c * ob[m] + r] = q
                         wb_out_tile[q] = out_t0[m] + r
                         wb_in_tile[q] = in_t0[m] + c
-            for c in range(ib[m]):
-                t = in_t0[m] + c
-                if real[m]:
-                    in_start_t[t], w_row_t[t], n_k_t[t] = \
-                        out_t0[m], base[m] + c * ob[m], ob[m]
-                else:
-                    in_start_t[t], w_row_t[t], n_k_t[t] = out_t0[m] + c, ident, 1
 
         ints = lambda a: tuple(int(v) for v in a)
         return BlockDiagLayout(
             block=blk, n_in_tiles=n_in_tiles, n_out_tiles=n_out_tiles,
             n_param_blocks=n_param,
-            k_max=int(n_k.max()), in_start=ints(in_start),
-            w_row=ints(w_row), n_k=ints(n_k),
-            k_max_t=int(n_k_t.max()), in_start_t=ints(in_start_t),
-            w_row_t=ints(w_row_t), n_k_t=ints(n_k_t),
+            n_steps=len(s_out), s_in=ints(s_in), s_w=ints(s_w),
+            s_out=ints(s_out), s_first=ints(s_first), s_last=ints(s_last),
+            n_steps_t=len(s_out_t), s_in_t=ints(s_in_t), s_w_t=ints(s_w_t),
+            s_out_t=ints(s_out_t), s_first_t=ints(s_first_t),
+            s_last_t=ints(s_last_t), s_q_t=ints(s_q_t),
             perm_t=ints(perm),
             wb_out_tile=ints(wb_out_tile), wb_in_tile=ints(wb_in_tile))
 

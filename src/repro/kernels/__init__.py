@@ -4,13 +4,16 @@ mode on CPU):
   m3_matmul       — segment-blocked matmul (the TPU-native M3), fwd + custom bwd
   block_diag_gemm — block-diagonal member projection (layered-population mid
                     layers), fwd + custom bwd via the same kernel transposed
+  fused_layer     — block-diag projection + bias + per-segment activation in
+                    ONE pass (act'(z) emitted in-register for the fused
+                    backward; pre-activations never reach HBM — DESIGN.md §7)
   seg_act         — one-pass per-block activation dispatch + padding mask
   moe_gemm        — grouped GEMM (M3's row-segment dual; MoE expert compute)
   flash_attention — fused online-softmax attention (causal/SWA/GQA), the
                     §Perf-identified lever for memory-bound attention cells
 """
-from repro.kernels.ops import (block_diag_gemm, flash_attention, m3_matmul,
-                               moe_gemm, seg_act)
+from repro.kernels.ops import (block_diag_gemm, flash_attention, fused_layer,
+                               m3_matmul, moe_gemm, seg_act)
 
-__all__ = ["block_diag_gemm", "flash_attention", "m3_matmul", "moe_gemm",
-           "seg_act"]
+__all__ = ["block_diag_gemm", "flash_attention", "fused_layer", "m3_matmul",
+           "moe_gemm", "seg_act"]

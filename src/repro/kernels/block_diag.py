@@ -6,24 +6,25 @@ the fused l→l+1 weight is block-diagonal with one (O_m × I_m) block per
 member.  Instead of a Python loop of per-bucket einsums this runs as ONE
 dense segment-blocked matmul: the weight is stored as a flat array of
 (block × block) tiles (member-major, row-major over each member's tile grid,
-plus one shared identity tile for pass-through members), and three
-scalar-prefetched arrays select, for output tile t at reduction step k,
+plus one shared identity tile for pass-through members).
 
-    input tile   in_start[t] + k
-    weight tile  w_row[t] + k          (the moe_gemm weight-block-selection
-                                        trick, per *column* segment)
-    steps        k < n_k[t]            (members have different fan-ins, so
-                                        the reduction is masked per tile)
+Members have DIFFERENT fan-ins, so the reduction is RAGGED.  The grid is
+therefore flattened to one step per REAL (output tile, reduction k) pair —
+``BlockDiagLayout.s_in/s_w/s_out`` select, for grid step s,
 
-Grid (b_tiles, out_tiles, k_max); revisits of an output tile are consecutive
-grid steps (k innermost) — the standard Pallas reduction pattern, f32 VMEM
-accumulation, no scatter.  Tiles past a member's fan-in are clamped to its
-last valid tile by the index map and masked out of the accumulation.
+    input tile   s_in[s]
+    weight tile  s_w[s]       (the moe_gemm weight-block-selection trick)
+    output tile  s_out[s]     (revisits are consecutive grid steps)
+
+with ``s_first/s_last`` flagging the accumulator init/flush edges.  This
+replaces the earlier dense (out_tiles × k_max) grid whose clamped re-reads
+burned a dead step for every tile below the maximum fan-in — the
+BENCH_deep hbm_gap regression.  f32 VMEM accumulation, no scatter.
 
 The backward pass reuses the SAME forward kernel for dh (block-diagonal with
 each member block transposed — a static tile permutation + per-tile
-transpose), and ``block_diag_dw`` accumulates each parameter tile's
-dy^T·x over batch tiles (grid (param_tiles, b_tiles)).
+transpose, metadata ``s_*_t``), and ``block_diag_dw`` accumulates each
+parameter tile's dy^T·x over batch tiles (grid (param_tiles, b_tiles)).
 """
 from __future__ import annotations
 
@@ -33,58 +34,82 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def tpu_compiler_params(dimension_semantics, *block_shapes, dtype_bytes=4):
+    """Mosaic compiler params: dimension semantics (reduction dims are
+    'arbitrary', independent dims 'parallel') and a VMEM budget derived from
+    the kernel's live blocks (double-buffered pipeline + accumulator slack),
+    floored so tiny-tile populations don't over-constrain the compiler.
+    Returns None when this jax build lacks the params class (the interpret
+    path ignores compiler params anyway)."""
+    cls = (getattr(pltpu, "CompilerParams", None)
+           or getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        return None
+    import math
+    need = sum(math.prod(s) * dtype_bytes for s in block_shapes)
+    budget = max(4 * need, 2 * 1024 * 1024)
+    try:
+        return cls(dimension_semantics=tuple(dimension_semantics),
+                   vmem_limit_bytes=int(budget))
+    except TypeError:          # older signature without one of the fields
+        return cls(dimension_semantics=tuple(dimension_semantics))
+
+
 # --------------------------------------------------------------------- #
 # forward (also computes dh when fed transposed metadata)               #
 # --------------------------------------------------------------------- #
 
-def _fwd_kernel(ins_ref, row_ref, nk_ref, x_ref, w_ref, y_ref, acc_ref):
-    t = pl.program_id(1)
-    k = pl.program_id(2)
-    nk = pl.num_programs(2)
+def _fwd_kernel(ins_ref, w_ref_ids, outs_ref, first_ref, last_ref,
+                x_ref, wb_ref, y_ref, acc_ref):
+    s = pl.program_id(1)
 
-    @pl.when(k == 0)
+    @pl.when(first_ref[s] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(k < nk_ref[t])
-    def _accum():
-        # (block_b, blk) @ (blk, blk)^T on the MXU, f32 accumulate; weight
-        # tiles are (out_rows, in_cols) so the contraction is over dim 1/1.
-        acc_ref[...] += jax.lax.dot_general(
-            x_ref[...], w_ref[...][0],
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
+    # (block_b, blk) @ (blk, blk)^T on the MXU, f32 accumulate; weight
+    # tiles are (out_rows, in_cols) so the contraction is over dim 1/1.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], wb_ref[...][0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
-    @pl.when(k == nk - 1)
+    @pl.when(last_ref[s] == 1)
     def _flush():
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
-def block_diag_fwd(x: jax.Array, wb: jax.Array, in_start: jax.Array,
-                   w_row: jax.Array, n_k: jax.Array, *,
-                   n_out_tiles: int, k_max: int, block: int, block_b: int,
+def block_diag_fwd(x: jax.Array, wb: jax.Array, s_in: jax.Array,
+                   s_w: jax.Array, s_out: jax.Array, s_first: jax.Array,
+                   s_last: jax.Array, *, n_out_tiles: int, n_steps: int,
+                   block: int, block_b: int,
                    interpret: bool = False) -> jax.Array:
     """x (B, in_tiles·blk), wb (n_tiles, blk, blk) → y (B, out_tiles·blk)."""
     b = x.shape[0]
-    grid = (b // block_b, n_out_tiles, k_max)
+    grid = (b // block_b, n_steps)
     return pl.pallas_call(
         _fwd_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=5,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((block_b, block),
-                             lambda i, t, k, ins, row, nk: (i, ins[t] + jnp.minimum(k, nk[t] - 1))),
+                             lambda i, s, ins, w, outs, fr, la: (i, ins[s])),
                 pl.BlockSpec((1, block, block),
-                             lambda i, t, k, ins, row, nk: (row[t] + jnp.minimum(k, nk[t] - 1), 0, 0)),
+                             lambda i, s, ins, w, outs, fr, la: (w[s], 0, 0)),
             ],
-            out_specs=pl.BlockSpec((block_b, block),
-                                   lambda i, t, k, ins, row, nk: (i, t)),
+            out_specs=pl.BlockSpec(
+                (block_b, block),
+                lambda i, s, ins, w, outs, fr, la: (i, outs[s])),
             scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_out_tiles * block), x.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary"),
+            (block_b, block), (block, block), (block_b, block),
+            (block_b, block)),
         interpret=interpret,
-    )(in_start, w_row, n_k, x, wb)
+    )(s_in, s_w, s_out, s_first, s_last, x, wb)
 
 
 # --------------------------------------------------------------------- #
@@ -136,5 +161,9 @@ def block_diag_dw(dy: jax.Array, x: jax.Array, wb_out_tile: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((n_param_blocks, block, block),
                                        dy.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary"),
+            (block_b, block), (block_b, block), (block, block),
+            (block, block)),
         interpret=interpret,
     )(wb_out_tile, wb_in_tile, dy, x)

@@ -1,0 +1,337 @@
+"""Fused population-layer kernel: block-diagonal GEMM + per-member bias +
+per-segment activation in ONE Pallas pass (DESIGN.md §7).
+
+The unfused ``bd_impl=pallas`` path runs every mid layer as three HBM round
+trips — block-diag GEMM writes the pre-activations z, an XLA pass adds the
+bias, seg_act reads z+b back and writes act(z+b)·mask — and the backward
+mirrors them (seg_act_bwd materialises dz, then the transposed GEMM and dw
+kernels read it).  Here the epilogue runs while the accumulator tile is
+still in VMEM:
+
+  forward   y  = act(z + b) · mask            (one kernel, z never in HBM)
+            g' = act'(z + b) · mask           (the activation derivative,
+                                               computed IN-REGISTER while z
+                                               is live, emitted instead of z)
+  backward  du = dy ⊙ g'  fused INTO the transposed-GEMM (dx) and dw
+            kernels — each reads the (dy, g') tile pair and forms du on the
+            VPU right before the MXU contraction, so neither z nor dz ever
+            materialises in HBM in either direction.  db = Σ_b dy·g' is one
+            XLA fused reduce over arrays that exist anyway.
+
+Grid/tile metadata is the ragged flattened step layout shared with
+``kernels/block_diag.py`` (``BlockDiagLayout``); the per-step activation id
+(the OUTPUT tile's segment activation) is scalar-prefetched and dispatched
+through ``lax.switch`` over the ten paper activations, exactly like
+kernels/seg_act.py — but only on the flush step of each output tile.
+
+Mixed precision: operand tiles may be bf16 (``--compute-dtype bfloat16``);
+the accumulator and the bias add are always f32 (``preferred_element_type``
++ f32 VMEM scratch), and outputs are cast back to the operand dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.activations import ACTIVATION_FNS
+from repro.kernels.block_diag import tpu_compiler_params
+
+
+def _deriv(fn):
+    """Elementwise derivative of an activation, via vjp at ones — traced
+    into the kernel body, so it runs on the VPU in the epilogue."""
+    def d(x):
+        return jax.vjp(fn, x)[1](jnp.ones_like(x))[0]
+    return d
+
+
+# (value, derivative) branch per activation — one lax.switch in the epilogue
+_VAL_DERIV_BRANCHES = tuple(
+    (lambda fn: (lambda x: (fn(x), _deriv(fn)(x))))(fn)
+    for fn in ACTIVATION_FNS)
+_VAL_BRANCHES = tuple(ACTIVATION_FNS)
+
+
+# --------------------------------------------------------------------- #
+# forward: GEMM + bias + activation epilogue                            #
+# --------------------------------------------------------------------- #
+
+def _make_fwd_kernel(with_deriv: bool):
+    def kernel(ins_ref, w_ids, outs_ref, first_ref, last_ref, act_ref,
+               x_ref, wb_ref, b_ref, m_ref, *out_and_scratch):
+        if with_deriv:
+            y_ref, g_ref, acc_ref = out_and_scratch
+        else:
+            y_ref, acc_ref = out_and_scratch
+        s = pl.program_id(1)
+
+        @pl.when(first_ref[s] == 1)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], wb_ref[...][0],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(last_ref[s] == 1)
+        def _epilogue():
+            u = acc_ref[...] + b_ref[...].astype(jnp.float32)
+            m = m_ref[...].astype(jnp.float32)
+            if with_deriv:
+                y, g = jax.lax.switch(act_ref[s], _VAL_DERIV_BRANCHES, u)
+                y_ref[...] = (y * m).astype(y_ref.dtype)
+                g_ref[...] = (g * m).astype(g_ref.dtype)
+            else:
+                y = jax.lax.switch(act_ref[s], _VAL_BRANCHES, u)
+                y_ref[...] = (y * m).astype(y_ref.dtype)
+    return kernel
+
+
+def fused_layer_fwd(x: jax.Array, wb: jax.Array, bias: jax.Array,
+                    mask: jax.Array, s_in, s_w, s_out, s_first, s_last,
+                    s_act, *, n_out_tiles: int, n_steps: int, block: int,
+                    block_b: int, with_deriv: bool,
+                    interpret: bool = False):
+    """x (B, in_tiles·blk), wb (n_tiles, blk, blk), bias/mask (1, out·blk)
+    → y (B, out_tiles·blk) [, g' (B, out_tiles·blk) when ``with_deriv``]."""
+    b = x.shape[0]
+    grid = (b // block_b, n_steps)
+    h_out = n_out_tiles * block
+    out_shape = [jax.ShapeDtypeStruct((b, h_out), x.dtype)]
+    out_specs = [pl.BlockSpec(
+        (block_b, block),
+        lambda i, s, ins, w, outs, fr, la, act: (i, outs[s]))]
+    if with_deriv:
+        out_shape.append(jax.ShapeDtypeStruct((b, h_out), x.dtype))
+        out_specs.append(pl.BlockSpec(
+            (block_b, block),
+            lambda i, s, ins, w, outs, fr, la, act: (i, outs[s])))
+    y = pl.pallas_call(
+        _make_fwd_kernel(with_deriv),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (block_b, block),
+                    lambda i, s, ins, w, outs, fr, la, act: (i, ins[s])),
+                pl.BlockSpec(
+                    (1, block, block),
+                    lambda i, s, ins, w, outs, fr, la, act: (w[s], 0, 0)),
+                pl.BlockSpec(
+                    (1, block),
+                    lambda i, s, ins, w, outs, fr, la, act: (0, outs[s])),
+                pl.BlockSpec(
+                    (1, block),
+                    lambda i, s, ins, w, outs, fr, la, act: (0, outs[s])),
+            ],
+            out_specs=out_specs if with_deriv else out_specs[0],
+            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+        ),
+        out_shape=out_shape if with_deriv else out_shape[0],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary"),
+            (block_b, block), (block, block), (1, block), (1, block),
+            (block_b, block), (block_b, block), (block_b, block)),
+        interpret=interpret,
+    )(s_in, s_w, s_out, s_first, s_last, s_act, x, wb, bias, mask)
+    return y
+
+
+# --------------------------------------------------------------------- #
+# backward: dx (transposed GEMM) and dw, with du = dy·g' in-register    #
+# --------------------------------------------------------------------- #
+
+def _dx_kernel(ins_ref, w_ids, outs_ref, first_ref, last_ref,
+               dy_ref, g_ref, wb_ref, dx_ref, acc_ref):
+    s = pl.program_id(1)
+
+    @pl.when(first_ref[s] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    du = dy_ref[...] * g_ref[...]          # the VPU fusion: dz tile never
+    acc_ref[...] += jax.lax.dot_general(   # exists outside this register
+        du, wb_ref[...][0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last_ref[s] == 1)
+    def _flush():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def fused_layer_dx(dy: jax.Array, gp: jax.Array, wb_t: jax.Array,
+                   s_in_t, s_w_t, s_out_t, s_first_t, s_last_t, *,
+                   n_in_tiles: int, n_steps_t: int, block: int, block_b: int,
+                   interpret: bool = False) -> jax.Array:
+    """dy, g' (B, out_tiles·blk), wb_t transposed tiles → dx (B, in·blk)."""
+    b = dy.shape[0]
+    grid = (b // block_b, n_steps_t)
+    return pl.pallas_call(
+        _dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block),
+                             lambda i, s, ins, w, outs, fr, la: (i, ins[s])),
+                pl.BlockSpec((block_b, block),
+                             lambda i, s, ins, w, outs, fr, la: (i, ins[s])),
+                pl.BlockSpec((1, block, block),
+                             lambda i, s, ins, w, outs, fr, la: (w[s], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (block_b, block),
+                lambda i, s, ins, w, outs, fr, la: (i, outs[s])),
+            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_in_tiles * block), dy.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary"),
+            (block_b, block), (block_b, block), (block, block),
+            (block_b, block), (block_b, block)),
+        interpret=interpret,
+    )(s_in_t, s_w_t, s_out_t, s_first_t, s_last_t, dy, gp, wb_t)
+
+
+def _dx_dw_kernel(ins_ref, w_ids, outs_ref, first_ref, last_ref, q_ref,
+                  dy_ref, g_ref, x_ref, wb_ref, dx_ref, dw_ref, acc_ref):
+    """ONE backward pass (single-batch-tile case): at transposed step s the
+    du tile (dy·g', out-tile space) and the x tile (= this step's dx output
+    tile) are both live in VMEM, so the step emits its dw parameter tile
+    (du^T·x) alongside the dx accumulation — the dw sweep costs zero extra
+    grid steps and zero extra du reads.  Pass-through steps write the
+    appended dummy dw slot (sliced off by the wrapper)."""
+    s = pl.program_id(1)
+
+    @pl.when(first_ref[s] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    du = dy_ref[...] * g_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        du, wb_ref[...][0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dw_ref[...] = jax.lax.dot_general(
+        du, x_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(dw_ref.dtype)[None]
+
+    @pl.when(last_ref[s] == 1)
+    def _flush():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def fused_layer_dx_dw(dy: jax.Array, gp: jax.Array, x: jax.Array,
+                      wb_t: jax.Array, s_in_t, s_w_t, s_out_t, s_first_t,
+                      s_last_t, s_q_t, *, n_in_tiles: int, n_steps_t: int,
+                      n_param_blocks: int, block: int, block_b: int,
+                      interpret: bool = False):
+    """Single-pass backward for B ≤ block_b: → (dx, dWB) where dWB has the
+    trailing dummy tile already sliced off."""
+    b = dy.shape[0]
+    if b != block_b:
+        raise ValueError(
+            f"fused one-pass backward needs exactly one batch tile, got "
+            f"batch {b} with block_b {block_b}")
+    grid = (1, n_steps_t)
+    dx, dwb = pl.pallas_call(
+        _dx_dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (block_b, block),
+                    lambda i, s, ins, w, outs, fr, la, q: (i, ins[s])),
+                pl.BlockSpec(
+                    (block_b, block),
+                    lambda i, s, ins, w, outs, fr, la, q: (i, ins[s])),
+                pl.BlockSpec(
+                    (block_b, block),
+                    lambda i, s, ins, w, outs, fr, la, q: (i, outs[s])),
+                pl.BlockSpec(
+                    (1, block, block),
+                    lambda i, s, ins, w, outs, fr, la, q: (w[s], 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec(
+                    (block_b, block),
+                    lambda i, s, ins, w, outs, fr, la, q: (i, outs[s])),
+                pl.BlockSpec(
+                    (1, block, block),
+                    lambda i, s, ins, w, outs, fr, la, q: (q[s], 0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_in_tiles * block), dy.dtype),
+            jax.ShapeDtypeStruct((n_param_blocks + 1, block, block),
+                                 dy.dtype),
+        ],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary"),
+            (block_b, block), (block_b, block), (block_b, block),
+            (block, block), (block_b, block), (block, block),
+            (block_b, block)),
+        interpret=interpret,
+    )(s_in_t, s_w_t, s_out_t, s_first_t, s_last_t, s_q_t, dy, gp, x, wb_t)
+    return dx, dwb[:n_param_blocks]
+
+
+def _dw_kernel(ot_ref, it_ref, dy_ref, g_ref, x_ref, dw_ref, acc_ref):
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    du = dy_ref[...] * g_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        du, x_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == nb - 1)
+    def _flush():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)[None]
+
+
+def fused_layer_dw(dy: jax.Array, gp: jax.Array, x: jax.Array,
+                   wb_out_tile, wb_in_tile, *, n_param_blocks: int,
+                   block: int, block_b: int,
+                   interpret: bool = False) -> jax.Array:
+    """(dy·g')^T · x per parameter tile → dWB (n_param, blk, blk)."""
+    b = x.shape[0]
+    grid = (n_param_blocks, b // block_b)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block),
+                             lambda q, i, ot, it: (i, ot[q])),
+                pl.BlockSpec((block_b, block),
+                             lambda q, i, ot, it: (i, ot[q])),
+                pl.BlockSpec((block_b, block),
+                             lambda q, i, ot, it: (i, it[q])),
+            ],
+            out_specs=pl.BlockSpec((1, block, block),
+                                   lambda q, i, ot, it: (q, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_param_blocks, block, block),
+                                       dy.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary"),
+            (block_b, block), (block_b, block), (block_b, block),
+            (block, block), (block, block)),
+        interpret=interpret,
+    )(wb_out_tile, wb_in_tile, dy, gp, x)

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.kernels import block_diag as _bdk
 from repro.kernels import flash_attn as _flashk
+from repro.kernels import fused_layer as _flk
 from repro.kernels import m3_matmul as _m3k
 from repro.kernels import moe_gemm as _moek
 from repro.kernels import seg_act as _segk
@@ -96,12 +97,12 @@ def m3_matmul(h: jax.Array, w2: jax.Array, block_seg_ids: np.ndarray,
 def _bd_ids(layout, transposed: bool):
     import numpy as _np
     if transposed:
-        return (jnp.asarray(_np.asarray(layout.in_start_t, _np.int32)),
-                jnp.asarray(_np.asarray(layout.w_row_t, _np.int32)),
-                jnp.asarray(_np.asarray(layout.n_k_t, _np.int32)))
-    return (jnp.asarray(_np.asarray(layout.in_start, _np.int32)),
-            jnp.asarray(_np.asarray(layout.w_row, _np.int32)),
-            jnp.asarray(_np.asarray(layout.n_k, _np.int32)))
+        fields = (layout.s_in_t, layout.s_w_t, layout.s_out_t,
+                  layout.s_first_t, layout.s_last_t)
+    else:
+        fields = (layout.s_in, layout.s_w, layout.s_out,
+                  layout.s_first, layout.s_last)
+    return tuple(jnp.asarray(_np.asarray(f, _np.int32)) for f in fields)
 
 
 def _bd_augment(wb: jax.Array, layout) -> jax.Array:
@@ -111,12 +112,21 @@ def _bd_augment(wb: jax.Array, layout) -> jax.Array:
     return jnp.concatenate([wb, eye], axis=0)
 
 
+def _bd_transposed_tiles(wb, layout):
+    """Per-member-transposed augmented tile array (static permutation +
+    per-tile transpose) — the dh weight of both custom VJPs."""
+    import numpy as _np
+    return jnp.transpose(
+        _bd_augment(wb, layout)[_np.asarray(layout.perm_t, _np.int32)],
+        (0, 2, 1))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def _bd_core(h, wb, layout, block_b, interpret):
-    ins, row, nk = _bd_ids(layout, transposed=False)
+    ids = _bd_ids(layout, transposed=False)
     return _bdk.block_diag_fwd(
-        h, _bd_augment(wb, layout), ins, row, nk,
-        n_out_tiles=layout.n_out_tiles, k_max=layout.k_max,
+        h, _bd_augment(wb, layout), *ids,
+        n_out_tiles=layout.n_out_tiles, n_steps=layout.n_steps,
         block=layout.block, block_b=block_b, interpret=interpret)
 
 
@@ -127,15 +137,12 @@ def _bd_fwd(h, wb, layout, block_b, interpret):
 def _bd_bwd(layout, block_b, interpret, res, dy):
     import numpy as _np
     h, wb = res
-    # dh: the transposed block-diagonal — same kernel, per-member-transposed
-    # tiles (static permutation + per-tile transpose) and swapped metadata.
-    wb_t = jnp.transpose(
-        _bd_augment(wb, layout)[_np.asarray(layout.perm_t, _np.int32)],
-        (0, 2, 1))
-    ins_t, row_t, nk_t = _bd_ids(layout, transposed=True)
+    # dh: the transposed block-diagonal — same kernel, transposed tiles and
+    # swapped (ragged-step) metadata.
+    ids_t = _bd_ids(layout, transposed=True)
     dh = _bdk.block_diag_fwd(
-        dy, wb_t, ins_t, row_t, nk_t,
-        n_out_tiles=layout.n_in_tiles, k_max=layout.k_max_t,
+        dy, _bd_transposed_tiles(wb, layout), *ids_t,
+        n_out_tiles=layout.n_in_tiles, n_steps=layout.n_steps_t,
         block=layout.block, block_b=block_b, interpret=interpret)
     dwb = _bdk.block_diag_dw(
         dy, h,
@@ -170,6 +177,105 @@ def block_diag_gemm(h: jax.Array, wb: jax.Array, layout, *,
     block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
     hp, b0 = _pad_axis(h, 0, block_b)
     y = _bd_core(hp, wb, layout, block_b, interpret)
+    return y[:b0]
+
+
+# --------------------------------------------------------------------- #
+# fused layer: block-diag GEMM + bias + activation epilogue             #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fused_core(h, wb, b_eff, layout, acts_s, mask_s, block_b, interpret):
+    """Primal (no-grad contexts, e.g. eval): single-output kernel — the
+    activation derivative is only computed when a VJP will consume it."""
+    ids = _bd_ids(layout, transposed=False)
+    return _flk.fused_layer_fwd(
+        h, _bd_augment(wb, layout), jnp.reshape(b_eff, (1, -1)),
+        jnp.asarray(mask_s.arr).reshape(1, -1), *ids,
+        jnp.asarray(acts_s.arr),
+        n_out_tiles=layout.n_out_tiles, n_steps=layout.n_steps,
+        block=layout.block, block_b=block_b, with_deriv=False,
+        interpret=interpret)
+
+
+def _fused_fwd(h, wb, b_eff, layout, acts_s, mask_s, block_b, interpret):
+    ids = _bd_ids(layout, transposed=False)
+    y, gp = _flk.fused_layer_fwd(
+        h, _bd_augment(wb, layout), jnp.reshape(b_eff, (1, -1)),
+        jnp.asarray(mask_s.arr).reshape(1, -1), *ids,
+        jnp.asarray(acts_s.arr),
+        n_out_tiles=layout.n_out_tiles, n_steps=layout.n_steps,
+        block=layout.block, block_b=block_b, with_deriv=True,
+        interpret=interpret)
+    return y, (h, wb, gp)
+
+
+def _fused_bwd(layout, acts_s, mask_s, block_b, interpret, res, dy):
+    import numpy as _np
+    h, wb, gp = res
+    ids_t = _bd_ids(layout, transposed=True)
+    if dy.shape[0] == block_b:
+        # one batch tile → ONE backward pass: dw tiles are emitted at the
+        # dx steps where their (du, x) pair is already in VMEM
+        dh, dwb = _flk.fused_layer_dx_dw(
+            dy, gp, h, _bd_transposed_tiles(wb, layout), *ids_t,
+            jnp.asarray(_np.asarray(layout.s_q_t, _np.int32)),
+            n_in_tiles=layout.n_in_tiles, n_steps_t=layout.n_steps_t,
+            n_param_blocks=layout.n_param_blocks, block=layout.block,
+            block_b=block_b, interpret=interpret)
+    else:
+        dh = _flk.fused_layer_dx(
+            dy, gp, _bd_transposed_tiles(wb, layout), *ids_t,
+            n_in_tiles=layout.n_in_tiles, n_steps_t=layout.n_steps_t,
+            block=layout.block, block_b=block_b, interpret=interpret)
+        dwb = _flk.fused_layer_dw(
+            dy, gp, h,
+            jnp.asarray(_np.asarray(layout.wb_out_tile, _np.int32)),
+            jnp.asarray(_np.asarray(layout.wb_in_tile, _np.int32)),
+            n_param_blocks=layout.n_param_blocks, block=layout.block,
+            block_b=block_b, interpret=interpret)
+    # bias cotangent: one fused XLA reduce over tiles that exist anyway
+    db = (dy.astype(jnp.float32) * gp.astype(jnp.float32)).sum(axis=0)
+    return dh, dwb, db.astype(jnp.float32)
+
+
+_fused_core.defvjp(_fused_fwd, _fused_bwd)
+
+
+def fused_layer(h: jax.Array, wb: jax.Array, b_eff: jax.Array, layout,
+                block_act_ids: np.ndarray, mask: np.ndarray, *,
+                block_b: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """Block-diagonal projection + bias + per-segment activation + padding
+    mask in one Pallas pass (kernels/fused_layer.py; DESIGN.md §7);
+    differentiable (fused custom VJP — ``dy·act'(z)`` forms in-register
+    inside the transposed-GEMM and dw kernels); pads B.
+
+    h (B, n_in_tiles·blk), wb (n_param_blocks, blk, blk) tile array,
+    ``b_eff`` (n_out_tiles·blk,) the pass-through-gated bias, ``layout`` a
+    static ``BlockDiagLayout``, ``block_act_ids`` the OUTPUT layer's
+    per-block activation ids, ``mask`` its hidden mask →
+    (B, n_out_tiles·blk) of ``act(h·W + b)·mask``.
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    interpret = _resolve_interpret(interpret)
+    if h.shape[1] != layout.n_in_tiles * layout.block:
+        raise ValueError(f"input axis {h.shape[1]} != "
+                         f"{layout.n_in_tiles}×{layout.block}")
+    if wb.shape != (layout.n_param_blocks, layout.block, layout.block):
+        raise ValueError(f"weight tiles {wb.shape} != "
+                         f"({layout.n_param_blocks}, {layout.block}, "
+                         f"{layout.block})")
+    h_out = layout.n_out_tiles * layout.block
+    if b_eff.shape != (h_out,):
+        raise ValueError(f"bias shape {b_eff.shape} != ({h_out},)")
+    import numpy as _np
+    s_act = _np.asarray(block_act_ids, _np.int32)[
+        _np.asarray(layout.s_out, _np.int32)]
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    y = _fused_core(hp, wb, b_eff, layout, _StaticArray(s_act, np.int32),
+                    _StaticArray(mask, np.float32), block_b, interpret)
     return y[:b0]
 
 

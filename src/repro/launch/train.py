@@ -273,6 +273,9 @@ def run_population(arch, args):
             return {"rung": rung, "n_members0": int(n0),
                     "member_ids": [int(i) for i in member_ids]}
 
+        train_meta = {"compute_dtype": args.compute_dtype,
+                      "bd_impl": args.bd_impl, "act_impl": args.act_impl}
+
         total = args.steps
         print_every = max(50 // scan, 1)
         stats = {}
@@ -285,7 +288,8 @@ def run_population(arch, args):
             lr = member_lr(lp)
             chunk_fn = deep.make_population_train_step(
                 lp, m3_impl=args.m3_impl, bd_impl=args.bd_impl,
-                act_impl=args.act_impl, scan_steps=scan)
+                act_impl=args.act_impl, scan_steps=scan,
+                compute_dtype=args.compute_dtype)
             sh_x, sh_y = population_batch_shardings(mesh, args.batch)
             n_chunks = (seg_end - seg_start + scan - 1) // scan
 
@@ -324,7 +328,8 @@ def run_population(arch, args):
                 ckpt_every=args.ckpt_every,
                 straggler=StragglerPolicy(timeout_s=args.straggler_timeout),
                 ckpt_meta=population_meta(lp, params,
-                                          lifecycle=lifecycle_meta()),
+                                          lifecycle=lifecycle_meta(),
+                                          train_meta=train_meta),
                 ckpt_step_map=lambda c: min(seg_start + (c + 1) * scan,
                                             seg_end) - 1,
                 ckpt_step_unmap=lambda g: (g + 1 - seg_start) // scan - 1,
@@ -351,21 +356,28 @@ def run_population(arch, args):
                 pos = seg_end
             if keep_frac is None:
                 continue
-            # ---- rung boundary: eval under the training sharding, prune,
-            # compact into a freshly bucketed layout, re-pad to the mesh,
-            # device_put born-sharded; the next segment re-jits against the
-            # physically smaller population.
-            losses, _ = evaluate_population(params, lp, xte_j, yte_j)
+            # ---- rung boundary: eval under the training sharding (on a
+            # subsampled split when --rung-eval-batches asks for cheap
+            # rungs — halving only needs rank fidelity at the cut line),
+            # prune, compact into a freshly bucketed layout ON DEVICE
+            # (jitted static-index gather, no host round-trip), re-pad to
+            # the mesh, device_put born-sharded; the next segment re-jits
+            # against the physically smaller population.
+            n_eval = xte_j.shape[0]
+            if args.rung_eval_batches:
+                n_eval = min(n_eval, args.rung_eval_batches * args.batch)
+            losses, _ = evaluate_population(params, lp, xte_j[:n_eval],
+                                            yte_j[:n_eval])
             n_before = lp.num_real
             keep = survivors(np.asarray(losses)[:n_before], keep_frac)
             member_ids = member_ids[keep]
-            lp_real, params_host, _ = compact(lp, params, None, keep)
+            lp_real, params_keep, _ = compact(lp, params, None, keep)
             rung = i + 1
             lp = lp_real.shard_pad(pop_axis_size(mesh))
             fill = jax.random.fold_in(jax.random.PRNGKey(args.seed),
                                       1000 + rung)
             params = jax.device_put(
-                deep.pad_params(params_host, lp_real, lp, fill),
+                deep.pad_params(params_keep, lp_real, lp, fill),
                 population_shardings(lp, mesh))
             print(f"rung {i} @ step {pos - 1}: kept "
                   f"{len(keep)}/{n_before} members -> {lp.describe()}")
@@ -377,7 +389,8 @@ def run_population(arch, args):
                 # matches the live layout, so replay and --resume land on
                 # the new rung
                 save_population(args.ckpt_dir, pos - 1, params, lp,
-                                lifecycle=lifecycle_meta())
+                                lifecycle=lifecycle_meta(),
+                                train_meta=train_meta)
         dt = time.time() - t0
 
         steps_run = max(total - start, 0)
@@ -397,7 +410,8 @@ def run_population(arch, args):
                 saved = latest_steps(args.ckpt_dir)
                 if not saved or saved[-1] != total - 1:
                     save_population(args.ckpt_dir, total - 1, params, lp,
-                                    lifecycle=lifecycle_meta())
+                                    lifecycle=lifecycle_meta(),
+                                    train_meta=train_meta)
 
         losses, accs = evaluate_population(params, lp, xte_j, yte_j)
         print("leaderboard:")
@@ -440,7 +454,22 @@ def main(argv=None):
     ap.add_argument("--m3-impl", default="bucketed",
                     choices=["scatter", "onehot", "bucketed", "pallas"])
     ap.add_argument("--bd-impl", default="einsum",
-                    choices=["einsum", "pallas"])
+                    choices=["einsum", "pallas", "fused"],
+                    help="mid-layer projection: per-bucket einsum, the "
+                         "block-diag Pallas kernel, or the FUSED kernel "
+                         "(projection + bias + activation in one pass, "
+                         "DESIGN.md §7)")
+    ap.add_argument("--compute-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="mixed-precision policy: matmul operands in this "
+                         "dtype, f32 accumulators/params/loss/eval "
+                         "(DESIGN.md §7)")
+    ap.add_argument("--rung-eval-batches", type=int, default=0,
+                    help="halving rungs: evaluate only this many --batch-"
+                         "sized eval batches at each rung boundary (0 = "
+                         "full split; the FINAL leaderboard eval always "
+                         "runs the full split) — successive halving only "
+                         "needs rank fidelity at the cut line")
     ap.add_argument("--act-impl", default="sliced",
                     choices=["sliced", "masked", "pallas"],
                     help="per-layer activation dispatch: contiguous XLA "

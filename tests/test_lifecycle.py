@@ -96,6 +96,25 @@ def test_compact_params_and_opt_moments_bit_exact():
                  deep.extract_member(mu, LP, m))
 
 
+def test_compact_device_gather_bit_exact_vs_host():
+    """The jitted static-index device gather (the default — no host
+    round-trip at rung boundaries) produces trees BIT-identical to the
+    device_get → numpy fallback, params and optimizer moments alike."""
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    mu = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(7), x.shape), params)
+    state = {"count": jnp.asarray(3, jnp.int32), "mu": mu}
+    keep = [0, 2, 3, 5]
+    lp_d, p_d, st_d = compact(LP, params, state, keep, gather="device")
+    lp_h, p_h, st_h = compact(LP, params, state, keep, gather="host")
+    assert lp_d == lp_h
+    for a, b in zip(jax.tree.leaves((p_d, st_d)),
+                    jax.tree.leaves((p_h, st_h))):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "gather drift"
+    with pytest.raises(ValueError, match="gather"):
+        compact(LP, params, None, keep, gather="tpu")
+
+
 def test_compact_from_padded_pop_equals_unpadded():
     """Gathering survivors out of a shard-padded layout gives the same
     tree as gathering them from the unpadded one (pads are trailing and

@@ -80,6 +80,23 @@ def test_resume_prefers_checkpoint_layout(tmp_path):
         jax.tree_util.tree_structure(params)
 
 
+def test_driver_fused_bf16_halving_with_cheap_rungs(tmp_path):
+    """The fused kernel + bf16 policy + subsampled rung evals compose with
+    the halving lifecycle end to end: the driver prunes on schedule, the
+    final leaderboard eval runs the full split, and the checkpoint meta
+    records the training policy."""
+    params, lp = _run(
+        tmp_path, steps=6, ckpt_every=2,
+        extra=["--bd-impl", "fused", "--compute-dtype", "bfloat16",
+               "--halving", "2:0.5,4:0.5", "--rung-eval-batches", "1"])
+    assert lp.num_real == 1                      # 4 → 2 → 1 members
+    assert all(p.dtype == np.float32             # f32 masters checkpointed
+               for p in jax.tree.leaves(params))
+    meta, _ = ckpt_mod.load_meta(str(tmp_path / "ck"))
+    assert meta["train"] == {"compute_dtype": "bfloat16",
+                             "bd_impl": "fused", "act_impl": "sliced"}
+
+
 def test_resume_continues_training(tmp_path):
     """4 + 4 resumed steps equal 8 uninterrupted steps (step-indexed data,
     layout-carrying checkpoints)."""
