@@ -24,6 +24,11 @@ per-PR.
 the same step ladder trained with and without rung pruning + compaction,
 wall-clock and final best-member loss to BENCH_halving.json — the tracked
 number is the lifecycle's speedup at matched selection quality.
+
+``--optim`` benches the stateful-optimizer engine (core.deep.opt_step /
+make_population_train_step(optimizer=...)): the same scanned chunk under
+sgd / momentum / adamw with f32 and bf16 moments, per-step wall-clock and
+optimizer-state HBM overhead to BENCH_optim.json.
 """
 from __future__ import annotations
 
@@ -304,6 +309,113 @@ def run_fused(args):
     return out
 
 
+def _tree_mb(abs_tree) -> float:
+    """Static HBM residency of an abstract tree (ShapeDtypeStructs), MB."""
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(abs_tree)) / 1e6
+
+
+def run_optim(args):
+    """Stateful-optimizer shoot-out (DESIGN.md §8): the SAME scanned
+    population train chunk driven by sgd / momentum / adamw (f32 and bf16
+    moments side by side), reporting AOT-compiled per-step wall-clock, the
+    loop-aware HLO HBM profile, and the optimizer-state HBM overhead
+    (state bytes vs param bytes — the number that decides whether a 10k-
+    member population's moments fit next to its params) →
+    BENCH_optim.json.  The stateless legacy chunk rides along as the
+    engine-overhead baseline: plain sgd through the engine must cost the
+    same wall-clock (and is bit-exact, tests/test_population_optim.py)."""
+    from repro.optim import adamw, sgd
+
+    lp, mesh, shardings, ctx = _deep_bench_population(args)
+    configs = [
+        ("sgd", sgd()),
+        ("momentum", sgd(momentum=0.9)),
+        ("adamw", adamw(weight_decay=0.0)),
+        ("adamw_bf16m", adamw(weight_decay=0.0,
+                              state_dtype=jnp.bfloat16)),
+    ]
+    steps = args.scan_steps
+    abs_p = deep_mod.abstract_params(lp)
+    params_mb = _tree_mb(abs_p)
+    params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+    if shardings is not None:
+        params = jax.device_put(params, shardings)
+    xs = jax.random.normal(jax.random.PRNGKey(1),
+                           (steps, args.batch, lp.in_features))
+    ys = jax.random.randint(jax.random.PRNGKey(2), (steps, args.batch), 0,
+                            lp.out_features)
+
+    def best_of(fn, *a, iters=3):
+        # best-of-5 × iters chunk calls per sample: the bench_deep
+        # convention, robust on contended CI hosts
+        jax.block_until_ready(fn(*a))
+        walls = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*a)
+            jax.block_until_ready(out)
+            walls.append((time.perf_counter() - t0) / iters)
+        return min(walls) / steps * 1e3        # ms per optimizer step
+
+    rows = {}
+    with ctx:
+        legacy = deep_mod.make_population_train_step(
+            lp, scan_steps=steps, donate=False)
+        legacy_c = legacy.lower(params, xs, ys, 0.05).compile()
+        legacy_ms = best_of(legacy_c, params, xs, ys, 0.05)
+        print(f"# stateless legacy chunk: {legacy_ms:.2f} ms/step")
+        print("optimizer,step_ms,opt_state_mb,opt_overhead,hbm_mb")
+        for name, opt in configs:
+            chunk = deep_mod.make_population_train_step(
+                lp, optimizer=opt, scan_steps=steps, donate=False)
+            st = opt.init(params)
+            compiled = chunk.lower(params, st, xs, ys, 0.05).compile()
+            step_ms = best_of(compiled, params, st, xs, ys, 0.05)
+            opt_mb = _tree_mb(jax.eval_shape(opt.init, abs_p))
+            stats = analyze(compiled.as_text())
+            rows[name] = {
+                "step_ms": round(step_ms, 3),
+                "opt_state_mb": round(opt_mb, 3),
+                "opt_overhead": round(opt_mb / params_mb, 3),
+                "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2),
+            }
+            print(f"{name},{step_ms:.2f},{opt_mb:.3f},"
+                  f"{opt_mb / params_mb:.3f},"
+                  f"{stats['hbm_bytes']/1e6:.1f}", flush=True)
+
+    out = {"bench": "population_optimizers", "population": lp.describe(),
+           "batch": args.batch, "scan_steps": steps,
+           "params_mb": round(params_mb, 3),
+           "legacy_sgd_step_ms": round(legacy_ms, 3),
+           "results": rows,
+           "sharded": bool(args.sharded),
+           "mesh": dict(mesh.shape) if mesh else None,
+           "note": "CPU wall-clock is noise-bound at these shapes (same "
+                   "caveat as the --deep bench); the TRACKED numbers are "
+                   "the structural ones — opt_state_mb, opt_overhead "
+                   "(state/params bytes) and the HLO hbm_mb profile"}
+    out["headline"] = {
+        # engine overhead of plain sgd vs the stateless chunk (≈1.0: the
+        # engine is free where it changes nothing)
+        "engine_vs_legacy": round(
+            rows["sgd"]["step_ms"] / max(legacy_ms, 1e-9), 3),
+        # what bf16 moments buy back (the §8 state-dtype policy)
+        "adamw_bf16_state_saving_mb": round(
+            rows["adamw"]["opt_state_mb"]
+            - rows["adamw_bf16m"]["opt_state_mb"], 3)}
+    print(f"# engine vs legacy: {out['headline']['engine_vs_legacy']}x; "
+          f"adamw bf16 moments save "
+          f"{out['headline']['adamw_bf16_state_saving_mb']} MB "
+          f"(params {params_mb:.2f} MB)", flush=True)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {args.json_out}")
+    return out
+
+
 def run_halving(args):
     """Successive-halving lifecycle vs full-population training on the SAME
     ladder of global steps (core.lifecycle; DESIGN.md §6): both runs train
@@ -452,6 +564,11 @@ def main(argv=None):
     ap.add_argument("--scan-steps", type=int, default=8,
                     help="--deep: chunk size for the scan-vs-loop "
                          "train-step bench")
+    ap.add_argument("--optim", action="store_true",
+                    help="bench the stateful-optimizer engine: the scanned "
+                         "chunk under sgd/momentum/adamw (f32 + bf16 "
+                         "moments), per-step wall + opt-state HBM overhead "
+                         "-> BENCH_optim.json")
     ap.add_argument("--halving", nargs="?", const="16:0.25,32:0.25",
                     default=None, metavar="RUNGS",
                     help="bench the successive-halving lifecycle vs "
@@ -467,6 +584,11 @@ def main(argv=None):
                     help="write results as JSON (BENCH_*.json tracking)")
     args = ap.parse_args(argv)
 
+    if args.optim:
+        if args.json_out is None:
+            args.json_out = "BENCH_optim.json"
+        run_optim(args)
+        return
     if args.halving:
         if args.json_out is None:
             args.json_out = "BENCH_halving.json"

@@ -2,10 +2,13 @@
 layout-carrying fused-population checkpoints."""
 from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_steps,
                                          layout_from_meta, lifecycle_from_meta,
-                                         load_meta, population_meta, restore,
+                                         load_meta, optimizer_from_meta,
+                                         population_meta,
+                                         require_optimizer_match, restore,
                                          restore_population, save,
                                          save_population)
 
 __all__ = ["AsyncCheckpointer", "latest_steps", "layout_from_meta",
-           "lifecycle_from_meta", "load_meta", "population_meta", "restore",
+           "lifecycle_from_meta", "load_meta", "optimizer_from_meta",
+           "population_meta", "require_optimizer_match", "restore",
            "restore_population", "save", "save_population"]

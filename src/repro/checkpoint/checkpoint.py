@@ -226,6 +226,35 @@ def lifecycle_from_meta(meta: dict, layout) -> tuple:
     return rung, member_ids, int(life.get("n_members0", num_real))
 
 
+def optimizer_from_meta(meta: dict):
+    """The optimizer record stored under ``meta["train"]["optimizer"]``
+    (None for checkpoints written before the stateful-optimizer engine —
+    those carry no optimizer state and may only resume stateless)."""
+    return (meta.get("train") or {}).get("optimizer")
+
+
+def require_optimizer_match(meta: dict, record: dict):
+    """Fail LOUDLY when a resume would reinterpret a stored optimizer state
+    tree under a different training recipe: the checkpoint's optimizer
+    record (name + hyperparameters + state dtype + per-member flags) must
+    EQUAL the requested one — AdamW moments restored as momentum buffers,
+    or bf16 moments reinterpreted as f32, silently corrupt the run.
+
+    Returns the stored record; ``None`` means a legacy checkpoint with no
+    optimizer meta (the caller decides whether a stateless resume is
+    acceptable)."""
+    stored = optimizer_from_meta(meta)
+    if stored is None or stored == record:
+        return stored
+    diff = {k: {"checkpoint": stored.get(k), "requested": record.get(k)}
+            for k in sorted(set(stored) | set(record))
+            if stored.get(k) != record.get(k)}
+    raise ValueError(
+        "resume: optimizer config mismatch — the checkpoint's state tree "
+        f"was written by optimizer {stored.get('name')!r} and cannot be "
+        f"reinterpreted under the requested config; differing fields: {diff}")
+
+
 def layout_from_meta(meta: dict):
     from repro.core.population import LayeredPopulation
     p = meta["population"]
@@ -255,7 +284,7 @@ def save_population(directory: str, step: int, params, layout,
 
 
 def restore_population(directory: str, step: int | None = None,
-                       extra_like=None, mesh=None):
+                       extra_like=None, mesh=None, extra_specs=None):
     """→ (params, layout, step[, extra_state]).
 
     The parameter tree is rebuilt from the stored layout, schema, and dtype —
@@ -263,11 +292,16 @@ def restore_population(directory: str, step: int | None = None,
     ``LayeredPopulation`` for layered-engine checkpoints, a ``Population``
     for single-layer (parallel_mlp) ones, so (params, layout) always works
     together in forward/selection.  Pass ``extra_like`` (matching the
-    ``extra_state`` given to ``save_population``) to restore it too.
+    ``extra_state`` given to ``save_population`` — abstract
+    ShapeDtypeStructs are fine, e.g. ``jax.eval_shape(opt.init, ...)``) to
+    restore it too.
 
     ``mesh``: restore SHARDED — parameters are device_put straight onto the
     mesh through the layout's ``param_specs()`` (elastic: any device count;
-    non-dividing axes replicate).  Extra state restores replicated."""
+    non-dividing axes replicate).  Extra state restores replicated unless
+    ``extra_specs`` (a PartitionSpec tree matching ``extra_like``, e.g.
+    ``layout.opt_specs(opt)``) is given — then optimizer moments land
+    sharded alongside their parameters."""
     import jax.numpy as jnp
     meta, step = load_meta(directory, step)
     if "population" not in meta:
@@ -299,6 +333,9 @@ def restore_population(directory: str, step: int | None = None,
         from repro.distributed.sharding import logical_to_sharding
         shardings = {"params": logical_to_sharding(
             layout.param_specs(), mesh, abstract)}
+        if extra_like is not None and extra_specs is not None:
+            shardings["extra"] = logical_to_sharding(extra_specs, mesh,
+                                                     extra_like)
     tree, step = restore(directory, like, shardings=shardings, step=step)
     if extra_like is not None:
         return tree["params"], layout, step, tree["extra"]

@@ -23,8 +23,11 @@ through later layers as exact identity pass-throughs (no weight, no bias, no
 activation), so mixed-depth fused training still equals standalone training —
 verified in tests/test_layered.py.  Per-member learning rates are free under
 this layout (every parameter belongs to exactly one member): pass a (P,)
-vector to ``sgd_step`` or build an optimizer scale tree with
-``member_lr_tree``.
+vector to ``sgd_step``/``opt_step`` or build an optimizer scale tree with
+``member_lr_tree`` — and the same expansion carries ANY per-member
+hyperparameter (momentum, weight decay) into the stateful optimizers, so a
+population races heterogeneous training recipes, not just architectures
+(``opt_step`` / ``make_population_train_step(optimizer=...)``, DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -194,6 +197,36 @@ def abstract_params(lp: LayeredPopulation, dtype=jnp.float32):
                           jax.random.PRNGKey(0))
 
 
+def _fill_layout(lp: LayeredPopulation,
+                 lp_pad: LayeredPopulation) -> LayeredPopulation:
+    """The filler-members-only layout of a ``lp.shard_pad(n)`` extension
+    (validated: pads are trailing and the real prefix is untouched)."""
+    if (lp_pad.num_real != lp.num_members
+            or lp_pad.widths[:lp.num_members] != lp.widths
+            or lp_pad.depth != lp.depth):
+        raise ValueError("lp_pad is not a shard-padded extension of lp")
+    return LayeredPopulation(
+        lp.in_features, lp.out_features,
+        lp_pad.widths[lp_pad.num_real:],
+        lp_pad.activations[lp_pad.num_real:], block=lp.block)
+
+
+def _concat_pad(params: dict, fp: dict, depth: int) -> dict:
+    """Append a filler-members tree ``fp`` behind ``params`` on every
+    member-major axis (the trailing-pad embedding shared by ``pad_params``
+    and ``pad_state``)."""
+    return {
+        "w_in": jnp.concatenate([params["w_in"], fp["w_in"]], axis=0),
+        "b_in": jnp.concatenate([params["b_in"], fp["b_in"]], axis=0),
+        "mid": [{"w": list(params["mid"][l]["w"]) + list(fp["mid"][l]["w"]),
+                 "b": jnp.concatenate([params["mid"][l]["b"],
+                                       fp["mid"][l]["b"]], axis=0)}
+                for l in range(depth - 1)],
+        "w_out": jnp.concatenate([params["w_out"], fp["w_out"]], axis=1),
+        "b_out": jnp.concatenate([params["b_out"], fp["b_out"]], axis=0),
+    }
+
+
 def pad_params(params, lp: LayeredPopulation, lp_pad: LayeredPopulation,
                key, dtype=jnp.float32) -> dict:
     """Embed ``params`` (initialised for ``lp``) into the shard-padded
@@ -204,26 +237,69 @@ def pad_params(params, lp: LayeredPopulation, lp_pad: LayeredPopulation,
     sharded run initialises exactly like the single-device run."""
     if lp_pad == lp:
         return params
-    if (lp_pad.num_real != lp.num_members
-            or lp_pad.widths[:lp.num_members] != lp.widths
-            or lp_pad.depth != lp.depth):
-        raise ValueError("lp_pad is not a shard-padded extension of lp")
-    fill = LayeredPopulation(
-        lp.in_features, lp.out_features,
-        lp_pad.widths[lp_pad.num_real:],
-        lp_pad.activations[lp_pad.num_real:], block=lp.block)
-    fp = init_params(key, fill, dtype)
-    out = {
-        "w_in": jnp.concatenate([params["w_in"], fp["w_in"]], axis=0),
-        "b_in": jnp.concatenate([params["b_in"], fp["b_in"]], axis=0),
-        "mid": [{"w": list(params["mid"][l]["w"]) + list(fp["mid"][l]["w"]),
-                 "b": jnp.concatenate([params["mid"][l]["b"],
-                                       fp["mid"][l]["b"]], axis=0)}
-                for l in range(lp.depth - 1)],
-        "w_out": jnp.concatenate([params["w_out"], fp["w_out"]], axis=1),
-        "b_out": jnp.concatenate([params["b_out"], fp["b_out"]], axis=0),
-    }
-    return out
+    fill = _fill_layout(lp, lp_pad)
+    return _concat_pad(params, init_params(key, fill, dtype), lp.depth)
+
+
+def map_params_subtrees(tree, ref, fn, op: str = "map"):
+    """Apply ``fn`` to every params-shaped subtree of an optimizer-state
+    pytree — structure AND leaf shapes matching ``ref`` (a live or abstract
+    ``init_params`` tree) — passing scalar leaves (step counts) through
+    untouched.  This is THE structural rule for moving optimizer state
+    through layout changes (``lifecycle.compact`` gathers survivors with
+    it, ``pad_state`` re-embeds them), kept in one place so the two sides
+    cannot drift.  Anything else fails loudly: factored moments (adafactor
+    ``v_row``/``v_col``) are not member-major along a gatherable axis."""
+    p_def = jax.tree_util.tree_structure(ref)
+    p_shapes = [tuple(x.shape) for x in jax.tree.leaves(ref)]
+
+    def params_like(node):
+        try:
+            return (jax.tree_util.tree_structure(node) == p_def
+                    and [tuple(x.shape)
+                         for x in jax.tree.leaves(node)] == p_shapes)
+        except Exception:
+            return False
+
+    def walk(node, path):
+        if params_like(node):
+            return fn(node)
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path + (i,))
+                              for i, v in enumerate(node))
+        if getattr(node, "ndim", None) == 0 or np.isscalar(node):
+            return node
+        raise ValueError(
+            f"{op}: optimizer-state leaf {'/'.join(map(str, path))} is "
+            "neither a scalar nor part of a params-shaped subtree (factored "
+            "moments, e.g. adafactor's v_row/v_col, are not compactable "
+            "member-major)")
+
+    return walk(tree, ())
+
+
+def pad_state(opt_state, lp: LayeredPopulation,
+              lp_pad: LayeredPopulation):
+    """Embed a (typically just-compacted) optimizer state into the
+    shard-padded layout: every params-shaped subtree (SGD ``mu``, AdamW
+    ``m``/``v``) gains ZERO moments for the filler members — exactly what a
+    fresh ``opt.init`` of the padded params would give them, so the real
+    members' trajectory is unchanged by padding — and scalar leaves (step
+    counts) pass through.  Moment dtype (e.g. the bf16 state policy) is
+    preserved per subtree."""
+    if lp_pad == lp:
+        return opt_state
+    fill_abs = abstract_params(_fill_layout(lp, lp_pad))
+
+    def pad_sub(node):
+        dtype = jax.tree.leaves(node)[0].dtype
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, dtype), fill_abs)
+        return _concat_pad(node, zeros, lp.depth)
+
+    return map_params_subtrees(opt_state, abstract_params(lp), pad_sub,
+                               op="pad_state")
 
 
 # ---------------------------------------------------------------------- #
@@ -318,7 +394,10 @@ def fused_loss(params, x, targets, lp: LayeredPopulation,
 def member_lr_tree(lp: LayeredPopulation, lr) -> dict:
     """Per-member learning rates (P,) → a scale tree matching ``init_params``
     (every parameter belongs to exactly one member, so per-member LRs are a
-    broadcast, not a loop — the paper's §7 'parallelise the learning rate')."""
+    broadcast, not a loop — the paper's §7 'parallelise the learning rate').
+    The same expansion serves any per-member optimizer hyperparameter: the
+    result is what ``sgd(momentum=...)`` / ``adamw(weight_decay=...)``
+    accept as scale trees."""
     lr = jnp.asarray(lr, jnp.float32)
     p0 = lp.layer_pop(0)
     u0 = lr[jnp.asarray(p0.segment_ids)]
@@ -366,7 +445,52 @@ def sgd_step(params, x, targets, lr, lp: LayeredPopulation,
                        act_impl, compute_dtype)
 
 
+def _opt_update(params, opt_state, x, targets, lr, opt,
+                lp: LayeredPopulation, m3_impl: str = "bucketed",
+                bd_impl: str = "einsum", act_impl: str = "sliced",
+                compute_dtype=None, grad_clip=None):
+    """The optimizer-generic step body (``_sgd_update``'s successor):
+    fused loss + grads → optional global-norm clip → ``opt.update`` →
+    ``apply_updates``, carrying the optimizer state through.
+
+    ``opt`` is a ``repro.optim.Optimizer``; ``lr`` may be a scalar, a
+    per-member (P,) vector (expanded through ``member_lr_tree`` here), or
+    an already-expanded per-leaf scale tree.  With ``opt=sgd()`` (scalar
+    momentum 0) the parameter update is BIT-IDENTICAL to ``_sgd_update``'s
+    ``p - lr·g``: the optimizer path computes ``p + (-lr)·g``, and IEEE
+    negate/multiply/subtract make the two exactly equal — regression-tested
+    in tests/test_population_optim.py, which is what lets the driver run
+    every optimizer through ONE engine without perturbing the plain-SGD
+    baselines (BENCH_*.json, halving invariants)."""
+    from repro.optim.optimizers import apply_updates, clip_by_global_norm
+    (loss, per), grads = jax.value_and_grad(fused_loss, has_aux=True)(
+        params, x, targets, lp, m3_impl, bd_impl, act_impl, compute_dtype)
+    gnorm = None
+    if grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    if not isinstance(lr, (dict, list, tuple)):
+        lr = jnp.asarray(lr)
+        if lr.ndim == 1:
+            lr = member_lr_tree(lp, lr)
+    upd, opt_state = opt.update(grads, opt_state, params, lr)
+    return apply_updates(params, upd), opt_state, loss, per, gnorm
+
+
+@partial(jax.jit, static_argnames=("opt", "lp", "m3_impl", "bd_impl",
+                                   "act_impl", "compute_dtype", "grad_clip"))
+def opt_step(params, opt_state, x, targets, lr, opt, lp: LayeredPopulation,
+             m3_impl: str = "bucketed", bd_impl: str = "einsum",
+             act_impl: str = "sliced", compute_dtype=None, grad_clip=None):
+    """One fused optimizer step with state (``sgd_step``'s successor) →
+    ``(params, opt_state, loss, per_member_losses, grad_norm)``;
+    ``grad_norm`` is None unless ``grad_clip`` is set."""
+    return _opt_update(params, opt_state, x, targets, lr, opt, lp, m3_impl,
+                       bd_impl, act_impl, compute_dtype, grad_clip)
+
+
 def make_population_train_step(lp: LayeredPopulation, *,
+                               optimizer=None,
+                               grad_clip=None,
                                m3_impl: str = "bucketed",
                                bd_impl: str = "einsum",
                                act_impl: str = "sliced",
@@ -375,30 +499,61 @@ def make_population_train_step(lp: LayeredPopulation, *,
                                compute_dtype=None):
     """Build the jitted multi-step population train chunk.
 
-    Returns ``chunk(params, xs, ys, lr) -> (params, losses, pers)`` where
+    Without ``optimizer`` this is the stateless plain-SGD chunk:
+    ``chunk(params, xs, ys, lr) -> (params, losses, pers)``.  With an
+    ``optimizer`` (a ``repro.optim.Optimizer``) the chunk carries the
+    optimizer state through the scan —
+
+      ``chunk(params, opt_state, xs, ys, lr)
+          -> (params, opt_state, losses, pers, gnorms)``
+
+    where ``gnorms`` (scan_steps,) holds each inner step's pre-clip global
+    gradient norm when ``grad_clip`` is set (None otherwise).  Both params
+    AND opt state are donated: at 10k members the moment trees double the
+    dominant HBM resident, so reusing their buffers in place matters twice
+    as much as it did for params alone.
+
     ``xs``/``ys`` carry a leading ``scan_steps`` axis and ``losses``
     (scan_steps,) / ``pers`` (scan_steps, P) hold every inner step's
     metrics.  The inner steps run under ONE ``lax.scan``, so the chunk
     dispatches to the device once per ``scan_steps`` optimizer steps and
-    parameters never round-trip to host between them; ``params`` is donated
-    (the previous step's buffers are reused in place — at 10k members the
-    fused tree is the dominant HBM resident, so the alternative is 2×
-    parameter memory).  Under a mesh, sharded inputs keep their sharding
-    through the scan: member-major layouts are collective-free, so XLA
-    propagates the population axis end to end."""
+    state never round-trips to host between them.  Under a mesh, sharded
+    inputs keep their sharding through the scan: member-major layouts are
+    collective-free, so XLA propagates the population axis end to end —
+    optimizer moments included (``LayeredPopulation.opt_specs``)."""
     if scan_steps < 1:
         raise ValueError(f"scan_steps must be >= 1, got {scan_steps}")
 
-    def chunk(params, xs, ys, lr):
-        def body(p, batch):
-            x, y = batch
-            p, loss, per = _sgd_update(p, x, y, lr, lp, m3_impl, bd_impl,
-                                       act_impl, compute_dtype)
-            return p, (loss, per)
-        params, (losses, pers) = jax.lax.scan(body, params, (xs, ys))
-        return params, losses, pers
+    if optimizer is None:
+        if grad_clip:
+            raise ValueError(
+                "grad_clip runs through the optimizer engine — pass "
+                "optimizer= (e.g. repro.optim.sgd()) alongside it")
 
-    return jax.jit(chunk, donate_argnums=(0,) if donate else ())
+        def chunk(params, xs, ys, lr):
+            def body(p, batch):
+                x, y = batch
+                p, loss, per = _sgd_update(p, x, y, lr, lp, m3_impl,
+                                           bd_impl, act_impl, compute_dtype)
+                return p, (loss, per)
+            params, (losses, pers) = jax.lax.scan(body, params, (xs, ys))
+            return params, losses, pers
+
+        return jax.jit(chunk, donate_argnums=(0,) if donate else ())
+
+    def chunk(params, opt_state, xs, ys, lr):
+        def body(carry, batch):
+            p, st = carry
+            x, y = batch
+            p, st, loss, per, gnorm = _opt_update(
+                p, st, x, y, lr, optimizer, lp, m3_impl, bd_impl, act_impl,
+                compute_dtype, grad_clip)
+            return (p, st), (loss, per, gnorm)
+        (params, opt_state), (losses, pers, gnorms) = jax.lax.scan(
+            body, (params, opt_state), (xs, ys))
+        return params, opt_state, losses, pers, gnorms
+
+    return jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
 
 
 # ---------------------------------------------------------------------- #

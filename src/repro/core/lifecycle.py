@@ -18,7 +18,11 @@ Two invariants make the lifecycle safe:
     post-compaction trajectory equals its no-pruning trajectory to float
     tolerance (tests/test_lifecycle.py).  ``compact`` copies each
     survivor's padded parameter slices bit-exactly — including per-member
-    optimizer moments, which ride along through the same index maps.
+    optimizer moments (SGD ``mu``, AdamW ``m``/``v``, bf16 or f32), which
+    ride along through the same index maps; since the driver grew the
+    stateful-optimizer engine (``run_population --optimizer``, DESIGN.md
+    §8) this moment path runs in production at every rung, with
+    ``deep.pad_state`` as its repack counterpart (zero filler moments).
   * Identity is preserved by bookkeeping, not layout.  Compaction renumbers
     members densely; the caller carries a survivor→original ``member_ids``
     vector (checkpointed in the lifecycle meta) so leaderboards and resumes
@@ -262,31 +266,10 @@ def compact(pop: LayeredPopulation, params, opt_state, keep,
     new_params = compact_params(pop, new_pop, params, keep, gather=gather)
     if opt_state is None:
         return new_pop, new_params, None
-
-    p_def = jax.tree_util.tree_structure(params)
-    p_shapes = [tuple(x.shape) for x in jax.tree.leaves(params)]
-
-    def params_like(node):
-        try:
-            return (jax.tree_util.tree_structure(node) == p_def
-                    and [tuple(x.shape)
-                         for x in jax.tree.leaves(node)] == p_shapes)
-        except Exception:
-            return False
-
-    def walk(node, path):
-        if params_like(node):
-            return compact_params(pop, new_pop, node, keep, gather=gather)
-        if isinstance(node, dict):
-            return {k: walk(v, path + (k,)) for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            return type(node)(walk(v, path + (i,))
-                              for i, v in enumerate(node))
-        if getattr(node, "ndim", None) == 0 or np.isscalar(node):
-            return node
-        raise ValueError(
-            f"compact: optimizer-state leaf {'/'.join(map(str, path))} is "
-            "neither a scalar nor part of a params-shaped subtree (factored "
-            "moments, e.g. adafactor's v_row/v_col, are not compactable)")
-
-    return new_pop, new_params, walk(opt_state, ())
+    # the params-shaped-subtree rule lives in ONE place (deep.py) so the
+    # gather side here and the pad_state repack side cannot drift
+    from repro.core.deep import map_params_subtrees
+    return new_pop, new_params, map_params_subtrees(
+        opt_state, params,
+        lambda node: compact_params(pop, new_pop, node, keep, gather=gather),
+        op="compact")

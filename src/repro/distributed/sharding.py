@@ -182,3 +182,19 @@ def population_shardings(layout, mesh, dtype=None):
     from repro.core.deep import abstract_params
     abs_p = abstract_params(layout, dtype or jnp.float32)
     return logical_to_sharding(layout.param_specs(), mesh, abs_p)
+
+
+def population_opt_shardings(layout, opt, mesh, dtype=None):
+    """``layout.opt_specs(opt)`` + mesh → NamedSharding tree for the
+    optimizer STATE of training this layout with ``opt`` (a
+    ``repro.optim.Optimizer``).  Every state leaf inherits the sharding of
+    the parameter it tracks, so this is what born-sharded ``opt.init``
+    out_shardings, rung-boundary ``device_put``s of compacted moments, and
+    sharded opt-state restores all run through."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.deep import abstract_params
+    abs_st = jax.eval_shape(opt.init,
+                            abstract_params(layout, dtype or jnp.float32))
+    return logical_to_sharding(layout.opt_specs(opt, dtype), mesh, abs_st)

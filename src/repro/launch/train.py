@@ -24,6 +24,12 @@ the step is a donated ``lax.scan`` chunk (``--scan-steps``), and the loop
 runs through ``TrainRunner`` exactly like the LM path.  ``--halving
 "500:0.5,1000:0.25"`` adds the successive-halving lifecycle: prune at each
 rung, compact the survivors into a smaller fused layout, continue.
+``--optimizer {sgd,momentum,adamw,adafactor}`` selects the stateful
+optimizer engine (DESIGN.md §8): opt state is born sharded, compacted
+through rungs, checkpointed, and validated on resume; ``--per-member-lr``
+/ ``--per-member-momentum`` / ``--per-member-weight-decay`` race
+heterogeneous training recipes across the population; ``--grad-clip``
+clips by global norm and logs the pre-clip norm per step.
 """
 from __future__ import annotations
 
@@ -72,9 +78,11 @@ def run_lm(arch, args, mesh):
         opt_state = jax.jit(opt.init, out_shardings=o_sh)(params)
 
         lr_fn = warmup_cosine(arch.lr, args.warmup, args.steps)
+        # LM default stays 1.0 when the flag is unset (populations default
+        # to clipping OFF — plain SGD baselines must stay bit-exact)
         step_fn_raw = mod.make_train_step(
             cfg, opt, lr_fn, num_micro=args.num_micro, mesh=mesh,
-            grad_clip=args.grad_clip)
+            grad_clip=1.0 if args.grad_clip is None else args.grad_clip)
         jit_step = jax.jit(step_fn_raw, donate_argnums=(0, 1))
 
         task = TokenTask(vocab=cfg.vocab, seed=args.seed)
@@ -160,9 +168,22 @@ def run_population(arch, args):
     segment's chunk against the physically smaller population.  Checkpoints
     carry the lifecycle (rung index + survivor→original member mapping), so
     ``--resume`` restores mid-ladder on the compacted layout and the
-    leaderboard keeps reporting ORIGINAL member ids."""
-    from repro.checkpoint import (latest_steps, lifecycle_from_meta,
-                                  load_meta, population_meta,
+    leaderboard keeps reporting ORIGINAL member ids.
+
+    The step itself is OPTIMIZER-GENERIC (core.deep.opt_step engine,
+    DESIGN.md §8): ``--optimizer {sgd,momentum,adamw,adafactor}`` carries
+    ``(params, opt_state)`` through the donated scan chunk, with the state
+    born sharded through ``LayeredPopulation.opt_specs()``, compacted
+    through halving rung boundaries (real moments, not just params), saved
+    with every checkpoint (+ the optimizer config in ``meta["train"]``,
+    validated on resume), and per-member hyperparameter vectors
+    (``--per-member-lr``/``--per-member-momentum``/
+    ``--per-member-weight-decay``) so members race heterogeneous training
+    RECIPES, not just architectures.  Plain ``sgd`` reproduces the
+    historical stateless trajectory bit-for-bit."""
+    from repro.checkpoint import (latest_steps, layout_from_meta,
+                                  lifecycle_from_meta, load_meta,
+                                  population_meta, require_optimizer_match,
                                   restore_population, save_population)
     from repro.core import deep
     from repro.core.activations import PAPER_TEN
@@ -173,10 +194,63 @@ def run_population(arch, args):
     from repro.distributed import StragglerPolicy, TrainRunner
     from repro.distributed.sharding import (pop_axis_size,
                                             population_batch_shardings,
+                                            population_opt_shardings,
                                             population_shardings)
     from repro.launch.mesh import make_host_mesh
+    from repro.optim import adafactor, adamw, sgd
 
     schedule = HalvingSchedule.parse(args.halving) if args.halving else None
+
+    # ---- optimizer config (resolved before any state is materialised so
+    # the resume path can validate it against the checkpoint's record)
+    opt_name = args.optimizer or arch.optimizer
+    grad_clip = args.grad_clip if args.grad_clip else None
+    if opt_name not in ("sgd", "momentum", "adamw", "adafactor"):
+        raise SystemExit(f"unknown optimizer {opt_name!r}")
+    if args.per_member_momentum and opt_name != "momentum":
+        raise SystemExit("--per-member-momentum needs --optimizer momentum")
+    if args.per_member_weight_decay and opt_name not in ("adamw",
+                                                         "adafactor"):
+        raise SystemExit(
+            "--per-member-weight-decay needs --optimizer adamw/adafactor")
+    if args.per_member_weight_decay and args.weight_decay <= 0:
+        raise SystemExit("--per-member-weight-decay scales --weight-decay; "
+                         "set it > 0")
+    if args.opt_state_dtype != "float32" and opt_name != "adamw":
+        raise SystemExit(
+            "--opt-state-dtype applies to --optimizer adamw only "
+            "(sgd/momentum moments are f32; adafactor manages its own "
+            "state dtypes) — it would be silently ignored here")
+    if opt_name == "adafactor" and schedule:
+        raise SystemExit(
+            "adafactor state is factored (v_row/v_col) and cannot be "
+            "compacted at halving rungs — use sgd/momentum/adamw with "
+            "--halving")
+
+    # the record checkpoints carry under meta["train"]["optimizer"]: resume
+    # must match it EXACTLY or fail loudly (require_optimizer_match) — a
+    # state tree reinterpreted under different hyperparameters is silent
+    # corruption
+    opt_record = {
+        "name": opt_name, "lr": float(arch.lr),
+        "grad_clip": float(grad_clip or 0.0),
+        "per_member_lr": bool(args.per_member_lr),
+        "per_member_momentum": bool(args.per_member_momentum),
+        "per_member_weight_decay": bool(args.per_member_weight_decay),
+    }
+    if opt_name == "momentum":
+        opt_record["momentum"] = float(args.momentum)
+    if opt_name in ("adamw", "adafactor"):
+        opt_record["weight_decay"] = float(args.weight_decay)
+    if opt_name == "adamw":
+        opt_record["state_dtype"] = args.opt_state_dtype
+    if (args.per_member_lr or args.per_member_momentum
+            or args.per_member_weight_decay):
+        # per-member vectors are pure functions of (seed, n0): resuming
+        # under a different seed would silently redraw every member's
+        # recipe beneath the restored moments, so the seed is part of the
+        # optimizer config whenever a vector is in play
+        opt_record["seed"] = int(args.seed)
 
     if args.population_depths:
         widths = parse_depth_spec(args.population_depths)
@@ -201,39 +275,128 @@ def run_population(arch, args):
     with set_mesh(mesh):
         start = 0
         rung = 0
-        if args.resume and latest_steps(args.ckpt_dir):
-            # the checkpoint's layout wins (it matches the stored params and
-            # is already shard-padded for the mesh that wrote it); restore
-            # straight onto THIS mesh through its param specs.
-            params, lp_ckpt, last = restore_population(args.ckpt_dir,
-                                                       mesh=mesh)
-            if isinstance(lp_ckpt, Population):
-                # single-layer (parallel_mlp) checkpoint → depth-1 layered
-                # params map one-to-one onto the unified engine
-                lp_ckpt = lp_ckpt.layered()
-                params = {"w_in": params["w1"], "b_in": params["b1"],
-                          "mid": [],
-                          "w_out": params["w2"], "b_out": params["b2"]}
+        resuming = bool(args.resume and latest_steps(args.ckpt_dir))
+        legacy_ckpt = False
+        if resuming:
+            # resolve the checkpoint's layout + lifecycle + optimizer
+            # record from the META first: the per-member hyperparameter
+            # vectors (drawn over n0) and the abstract optimizer state are
+            # needed BEFORE the arrays can restore sharded
+            meta, last = load_meta(args.ckpt_dir)
+            stored = require_optimizer_match(meta, opt_record)
+            legacy_ckpt = (stored is None
+                           or meta["population"].get("schema",
+                                                     "layered") == "single")
+            if legacy_ckpt and opt_name != "sgd":
+                raise SystemExit(
+                    f"--resume: the checkpoint at step {last} predates the "
+                    "stateful-optimizer engine (no optimizer state saved); "
+                    "it can only resume with the stateless "
+                    "'--optimizer sgd'")
+            lp_meta = layout_from_meta(meta)
+            rung, member_ids, n0 = lifecycle_from_meta(meta, lp_meta)
+            start = last + 1
+        else:
+            lp_real, lp = lp, lp.shard_pad(pop_axis_size(mesh))
+            n0 = lp_real.num_members
+            member_ids = np.arange(n0)
+
+        # ---- per-member hyperparameter vectors: each drawn ONCE over the
+        # run's ORIGINAL n0 members and indexed down by the survivor
+        # mapping (shard-pad fillers get the base value): a member keeps
+        # its training recipe through every compaction and across resumes,
+        # identically to a single-device run
+        lr0 = mom0 = wd0 = None
+        if args.per_member_lr:
+            lr0 = jnp.exp(jax.random.uniform(
+                jax.random.PRNGKey(args.seed + 1), (n0,),
+                minval=jnp.log(arch.lr * 0.3), maxval=jnp.log(arch.lr * 3.0)))
+            print(f"per-member learning rates in "
+                  f"[{arch.lr * 0.3:.4f}, {arch.lr * 3.0:.4f}]")
+        if args.per_member_momentum:
+            mom0 = jax.random.uniform(jax.random.PRNGKey(args.seed + 2),
+                                      (n0,), minval=0.5, maxval=0.99)
+            print("per-member momentum in [0.50, 0.99]")
+        if args.per_member_weight_decay:
+            wd0 = jnp.exp(jax.random.uniform(
+                jax.random.PRNGKey(args.seed + 3), (n0,),
+                minval=jnp.log(args.weight_decay * 0.3),
+                maxval=jnp.log(args.weight_decay * 3.0)))
+            print(f"per-member weight decay in "
+                  f"[{args.weight_decay * 0.3:.5f}, "
+                  f"{args.weight_decay * 3.0:.5f}]")
+
+        def member_vec(vec0, base, lp):
+            v = jnp.asarray(vec0)[jnp.asarray(member_ids)]
+            return jnp.concatenate(
+                [v, jnp.full((lp.n_pad,), base, v.dtype)])
+
+        def member_lr(lp):
+            return arch.lr if lr0 is None else member_vec(lr0, arch.lr, lp)
+
+        def build_opt(lp):
+            """The segment's optimizer: per-member hyper vectors indexed
+            down through the survivor mapping and expanded to scale trees
+            for THIS layout — rebuilt at every rung boundary, exactly like
+            the re-jitted chunk."""
+            mom = (args.momentum if mom0 is None else
+                   deep.member_lr_tree(lp, member_vec(mom0, args.momentum,
+                                                      lp)))
+            wd = (args.weight_decay if wd0 is None else
+                  deep.member_lr_tree(lp, member_vec(wd0, args.weight_decay,
+                                                     lp)))
+            if opt_name == "sgd":
+                return sgd()
+            if opt_name == "momentum":
+                return sgd(momentum=mom)
+            if opt_name == "adamw":
+                return adamw(weight_decay=wd,
+                             state_dtype=jnp.dtype(args.opt_state_dtype))
+            return adafactor(weight_decay=wd)
+
+        # ---- materialise (params, opt_state), born sharded either way
+        if resuming:
+            # the checkpoint's layout wins (it matches the stored params
+            # and is already shard-padded for the mesh that wrote it);
+            # restore straight onto THIS mesh through its param/opt specs.
+            opt = build_opt(lp_meta)
+            opt_state = None
+            if legacy_ckpt:
+                params, lp_ckpt, _ = restore_population(args.ckpt_dir,
+                                                        mesh=mesh)
+                if isinstance(lp_ckpt, Population):
+                    # single-layer (parallel_mlp) checkpoint → depth-1
+                    # layered params map one-to-one onto the unified engine
+                    lp_ckpt = lp_ckpt.layered()
+                    params = {"w_in": params["w1"], "b_in": params["b1"],
+                              "mid": [],
+                              "w_out": params["w2"], "b_out": params["b2"]}
+            else:
+                extra_like = jax.eval_shape(opt.init,
+                                            deep.abstract_params(lp_meta))
+                params, lp_ckpt, _, opt_state = restore_population(
+                    args.ckpt_dir, extra_like=extra_like, mesh=mesh,
+                    extra_specs=lp_meta.opt_specs(opt))
             if lp_ckpt != lp and lp_ckpt != lp.shard_pad(pop_axis_size(mesh)):
                 print("note: resuming with the CHECKPOINT's layout "
                       f"({lp_ckpt.describe()})")
             lp = lp_ckpt
-            # pin to the restored step: the lifecycle meta must describe
-            # exactly the checkpoint the params came from
-            meta, _ = load_meta(args.ckpt_dir, last)
-            rung, member_ids, n0 = lifecycle_from_meta(meta, lp)
-            start = last + 1
+            if opt_state is None:
+                # legacy checkpoint: no stored state; plain sgd's state is
+                # just the step count, so a fresh init resumes exactly
+                opt_state = jax.jit(
+                    opt.init,
+                    out_shardings=population_opt_shardings(lp, opt, mesh))(
+                    params)
             print(f"resumed from step {last}"
                   + (f" (rung {rung}, {lp.num_real} survivors)"
                      if rung else ""))
         else:
             # shard-pad the layout to the population axis and initialise
             # born-sharded: the real members' params are BIT-IDENTICAL to a
-            # single-device init (fillers draw from a folded key).
-            lp_real, lp = lp, lp.shard_pad(pop_axis_size(mesh))
-            n0 = lp_real.num_members
-            member_ids = np.arange(n0)
-
+            # single-device init (fillers draw from a folded key), and the
+            # optimizer moments are born sharded alongside them (zeros —
+            # identical padded or not).
             def born_sharded(key):
                 p = deep.init_params(key, lp_real)
                 return deep.pad_params(p, lp_real, lp,
@@ -242,7 +405,13 @@ def run_population(arch, args):
                 born_sharded,
                 out_shardings=population_shardings(lp, mesh))(
                 jax.random.PRNGKey(args.seed))
-        print(f"population: {lp.describe()}")
+            opt = build_opt(lp)
+            opt_state = jax.jit(
+                opt.init,
+                out_shardings=population_opt_shardings(lp, opt, mesh))(
+                params)
+        print(f"population: {lp.describe()}  optimizer: {opt_name}"
+              + (f" (grad clip {grad_clip})" if grad_clip else ""))
 
         # everything below depends on the RESOLVED layout (a resumed
         # checkpoint may change member count and feature/class dims)
@@ -251,43 +420,29 @@ def run_population(arch, args):
         (xtr, ytr), (xte, yte) = task.split()
         xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
 
-        lr0 = None
-        if args.per_member_lr:
-            # drawn ONCE over the run's ORIGINAL n0 members and indexed
-            # down by the survivor mapping (shard-pad fillers get the base
-            # lr): a member keeps its step size through every compaction
-            # and across resumes, identically to a single-device run
-            lr0 = jnp.exp(jax.random.uniform(
-                jax.random.PRNGKey(args.seed + 1), (n0,),
-                minval=jnp.log(arch.lr * 0.3), maxval=jnp.log(arch.lr * 3.0)))
-            print(f"per-member learning rates in "
-                  f"[{arch.lr * 0.3:.4f}, {arch.lr * 3.0:.4f}]")
-
-        def member_lr(lp):
-            if lr0 is None:
-                return arch.lr
-            lr = jnp.asarray(lr0)[jnp.asarray(member_ids)]
-            return jnp.concatenate([lr, jnp.full((lp.n_pad,), arch.lr)])
-
         def lifecycle_meta():
             return {"rung": rung, "n_members0": int(n0),
                     "member_ids": [int(i) for i in member_ids]}
 
         train_meta = {"compute_dtype": args.compute_dtype,
-                      "bd_impl": args.bd_impl, "act_impl": args.act_impl}
+                      "bd_impl": args.bd_impl, "act_impl": args.act_impl,
+                      "optimizer": opt_record}
 
         total = args.steps
         print_every = max(50 // scan, 1)
         stats = {}
 
-        def train_segment(params, lp, seg_start, seg_end):
+        def train_segment(params, opt_state, lp, opt, seg_start, seg_end):
             """Global steps [seg_start, seg_end) under the CURRENT layout:
-            jitted donated scan chunks, batches device_put sharded over the
-            'data' axis, TrainRunner replay/checkpoints against the
-            layout's own spec tree."""
+            jitted donated scan chunks carrying (params, opt_state),
+            batches device_put sharded over the 'data' axis, TrainRunner
+            replay/checkpoints against the layout's own param AND opt spec
+            trees (the state key is 'extra' to match
+            ``save_population``/``restore_population``'s on-disk schema)."""
             lr = member_lr(lp)
             chunk_fn = deep.make_population_train_step(
-                lp, m3_impl=args.m3_impl, bd_impl=args.bd_impl,
+                lp, optimizer=opt, grad_clip=grad_clip,
+                m3_impl=args.m3_impl, bd_impl=args.bd_impl,
                 act_impl=args.act_impl, scan_steps=scan,
                 compute_dtype=args.compute_dtype)
             sh_x, sh_y = population_batch_shardings(mesh, args.batch)
@@ -299,7 +454,8 @@ def run_population(arch, args):
                 bs = [task.batch(g0 + i, args.batch) for i in range(n)]
                 xs = jax.device_put(np.stack([b[0] for b in bs]), sh_x)
                 ys = jax.device_put(np.stack([b[1] for b in bs]), sh_y)
-                p, _losses, pers = chunk_fn(state["params"], xs, ys, lr)
+                p, st, _losses, pers, gnorms = chunk_fn(
+                    state["params"], state["extra"], xs, ys, lr)
                 # mean over REAL members only — shard-pad fillers train too
                 # but must not dilute the reported loss (a sharded run
                 # prints the same numbers as its single-device twin)
@@ -307,10 +463,17 @@ def run_population(arch, args):
                 stats.setdefault("first_loss", float(pers[0].mean()))
                 mean = float(pers[-1].mean())
                 stats["last_loss"] = mean
+                metrics = {"loss": mean, "step": g0 + n - 1}
+                if gnorms is not None:
+                    # pre-clip global grad norm, one per inner step — the
+                    # chunk's last one rides the metrics log
+                    metrics["grad_norm"] = float(np.asarray(gnorms)[n - 1])
                 if c % print_every == 0:
+                    gn = (f"  grad norm {metrics['grad_norm']:.3f}"
+                          if gnorms is not None else "")
                     print(f"step {g0 + n - 1:4d}  mean member loss "
-                          f"{mean:.4f}")
-                return {"params": p}, {"loss": mean, "step": g0 + n - 1}
+                          f"{mean:.4f}{gn}")
+                return {"params": p, "extra": st}, metrics
 
             def chunk_crosses_cadence(c):
                 # chunk c covers global steps [g0, g1): checkpoint iff one
@@ -324,7 +487,8 @@ def run_population(arch, args):
                 return g1 // args.ckpt_every > g0 // args.ckpt_every
 
             runner = TrainRunner(
-                step_fn, {"params": params}, ckpt_dir=args.ckpt_dir,
+                step_fn, {"params": params, "extra": opt_state},
+                ckpt_dir=args.ckpt_dir,
                 ckpt_every=args.ckpt_every,
                 straggler=StragglerPolicy(timeout_s=args.straggler_timeout),
                 ckpt_meta=population_meta(lp, params,
@@ -334,13 +498,14 @@ def run_population(arch, args):
                                             seg_end) - 1,
                 ckpt_step_unmap=lambda g: (g + 1 - seg_start) // scan - 1,
                 ckpt_save_pred=chunk_crosses_cadence,
-                mesh=mesh, state_specs={"params": lp.param_specs()})
+                mesh=mesh, state_specs={"params": lp.param_specs(),
+                                        "extra": lp.opt_specs(opt)})
             runner.run(n_chunks)
             # planned work, counted once per segment (a crash-replayed
             # chunk must not inflate the reported throughput)
             stats["member_steps"] = (stats.get("member_steps", 0)
                                      + lp.num_real * (seg_end - seg_start))
-            return runner.state["params"]
+            return runner.state["params"], runner.state["extra"]
 
         # rung segments: [0, b0) prune [b0, b1) prune ... [b_last, total).
         # A resumed run re-enters the ladder at its checkpointed rung (the
@@ -352,17 +517,20 @@ def run_population(arch, args):
                        len(segments)):
             seg_end, keep_frac = segments[i]
             if pos < seg_end:
-                params = train_segment(params, lp, pos, seg_end)
+                params, opt_state = train_segment(params, opt_state, lp,
+                                                  opt, pos, seg_end)
                 pos = seg_end
             if keep_frac is None:
                 continue
             # ---- rung boundary: eval under the training sharding (on a
             # subsampled split when --rung-eval-batches asks for cheap
             # rungs — halving only needs rank fidelity at the cut line),
-            # prune, compact into a freshly bucketed layout ON DEVICE
-            # (jitted static-index gather, no host round-trip), re-pad to
-            # the mesh, device_put born-sharded; the next segment re-jits
-            # against the physically smaller population.
+            # prune, compact PARAMS AND OPTIMIZER MOMENTS into a freshly
+            # bucketed layout ON DEVICE (jitted static-index gather, no
+            # host round-trip), re-pad to the mesh (zero filler moments),
+            # device_put born-sharded; the next segment re-jits against the
+            # physically smaller population with a rebuilt optimizer whose
+            # per-member hyper trees follow the survivor mapping.
             n_eval = xte_j.shape[0]
             if args.rung_eval_batches:
                 n_eval = min(n_eval, args.rung_eval_batches * args.batch)
@@ -371,7 +539,8 @@ def run_population(arch, args):
             n_before = lp.num_real
             keep = survivors(np.asarray(losses)[:n_before], keep_frac)
             member_ids = member_ids[keep]
-            lp_real, params_keep, _ = compact(lp, params, None, keep)
+            lp_real, params_keep, opt_keep = compact(lp, params, opt_state,
+                                                     keep)
             rung = i + 1
             lp = lp_real.shard_pad(pop_axis_size(mesh))
             fill = jax.random.fold_in(jax.random.PRNGKey(args.seed),
@@ -379,6 +548,10 @@ def run_population(arch, args):
             params = jax.device_put(
                 deep.pad_params(params_keep, lp_real, lp, fill),
                 population_shardings(lp, mesh))
+            opt = build_opt(lp)
+            opt_state = jax.device_put(
+                deep.pad_state(opt_keep, lp_real, lp),
+                population_opt_shardings(lp, opt, mesh))
             print(f"rung {i} @ step {pos - 1}: kept "
                   f"{len(keep)}/{n_before} members -> {lp.describe()}")
             if args.ckpt_every:
@@ -389,6 +562,7 @@ def run_population(arch, args):
                 # matches the live layout, so replay and --resume land on
                 # the new rung
                 save_population(args.ckpt_dir, pos - 1, params, lp,
+                                extra_state=opt_state,
                                 lifecycle=lifecycle_meta(),
                                 train_meta=train_meta)
         dt = time.time() - t0
@@ -410,6 +584,7 @@ def run_population(arch, args):
                 saved = latest_steps(args.ckpt_dir)
                 if not saved or saved[-1] != total - 1:
                     save_population(args.ckpt_dir, total - 1, params, lp,
+                                    extra_state=opt_state,
                                     lifecycle=lifecycle_meta(),
                                     train_meta=train_meta)
 
@@ -433,7 +608,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--num-micro", type=int, default=1)
-    ap.add_argument("--grad-clip", type=float, default=1.0)
+    ap.add_argument("--grad-clip", type=float, default=None,
+                    help="global-norm gradient clip; LM default 1.0, "
+                         "population default OFF (0 disables; when set, "
+                         "the pre-clip norm is logged per step)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -481,6 +659,36 @@ def main(argv=None):
                          "dispatch per chunk)")
     ap.add_argument("--per-member-lr", action="store_true",
                     help="paper §7: every member gets its own step size")
+    ap.add_argument("--optimizer", default=None,
+                    choices=["sgd", "momentum", "adamw", "adafactor"],
+                    help="population path: the stateful-optimizer engine "
+                         "(DESIGN.md §8).  sgd = the paper's plain SGD "
+                         "(stateless, bit-exact vs the historical step); "
+                         "momentum = SGD + heavy-ball momentum; "
+                         "adamw / adafactor as in repro.optim.  Optimizer "
+                         "state is born sharded, compacted through halving "
+                         "rungs, checkpointed, and validated on --resume. "
+                         "Default: the arch's optimizer (sgd for "
+                         "parallelmlp)")
+    ap.add_argument("--momentum", type=float, default=0.9,
+                    help="--optimizer momentum: heavy-ball coefficient")
+    ap.add_argument("--weight-decay", type=float, default=0.0,
+                    help="--optimizer adamw/adafactor: decoupled weight "
+                         "decay (population default 0 — the paper's task "
+                         "has no regularisation)")
+    ap.add_argument("--opt-state-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="--optimizer adamw: moment (m/v) storage dtype — "
+                         "bfloat16 halves optimizer HBM; moment MATH stays "
+                         "f32 either way (DESIGN.md §8)")
+    ap.add_argument("--per-member-momentum", action="store_true",
+                    help="--optimizer momentum: sample one heavy-ball "
+                         "coefficient per member (uniform [0.5, 0.99], "
+                         "drawn once over the original population like "
+                         "--per-member-lr)")
+    ap.add_argument("--per-member-weight-decay", action="store_true",
+                    help="--optimizer adamw/adafactor: sample one decay "
+                         "per member (log-uniform around --weight-decay)")
     ap.add_argument("--halving", default=None,
                     help='successive-halving rungs "STEP:KEEP,..." (e.g. '
                          '"500:0.5,1000:0.5,2000:0.25"): after each listed '

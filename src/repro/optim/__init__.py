@@ -2,14 +2,16 @@
 capable: pass a pytree of per-leaf scales as ``lr``)."""
 from repro.optim.optimizers import (OPTIMIZERS, SCHEDULES, Optimizer,
                                     adafactor, adamw, apply_updates,
-                                    broadcast_lr, clip_by_global_norm,
-                                    constant_lr, global_norm, make_optimizer,
+                                    broadcast_lr, broadcast_scale,
+                                    clip_by_global_norm, constant_lr,
+                                    global_norm, hyper_on, make_optimizer,
                                     sgd, tree_cast, tree_zeros_like,
                                     warmup_cosine)
 
 __all__ = [
     "OPTIMIZERS", "SCHEDULES", "Optimizer", "adafactor", "adamw",
-    "apply_updates", "broadcast_lr", "clip_by_global_norm", "constant_lr",
-    "global_norm", "make_optimizer", "sgd", "tree_cast", "tree_zeros_like",
+    "apply_updates", "broadcast_lr", "broadcast_scale",
+    "clip_by_global_norm", "constant_lr", "global_norm", "hyper_on",
+    "make_optimizer", "sgd", "tree_cast", "tree_zeros_like",
     "warmup_cosine",
 ]

@@ -21,6 +21,15 @@ learning rates reach fused populations: ``core.deep.member_lr_tree``
 expands a (P,) vector into exactly such a tree, and every optimizer here
 applies it leaf-wise (the paper's §7 "parallelise the learning rate too").
 
+The same generalisation applies to the *stateful* hyperparameters: SGD's
+``momentum`` and AdamW/Adafactor's ``weight_decay`` accept a scalar OR a
+per-leaf scale tree (``member_lr_tree`` over a per-member vector), so a
+fused population can race heterogeneous training RECIPES, not just
+architectures (DESIGN.md §8).  Tree hyperparameters are bound at
+construction — the optimizer closes over them, and the population driver
+rebuilds the optimizer whenever the layout changes (halving rung
+boundaries re-index the per-member vectors through the survivor mapping).
+
 ``state_specs`` needs the *abstract* params (shapes) because adafactor's
 state structure depends on each leaf's rank.  Every state leaf inherits its
 sharding from the param leaf it tracks (factored leaves drop the reduced
@@ -61,25 +70,41 @@ def _is_spec(x):
     return isinstance(x, P)
 
 
-def broadcast_lr(lr, tree):
-    """Normalise ``lr`` to a pytree matching ``tree``.
+def broadcast_scale(val, tree, name: str = "scale"):
+    """Normalise a scalar-or-scale-tree hyperparameter to a pytree matching
+    ``tree``.
 
     Scalars (python numbers / 0-d arrays) are replicated to every leaf; a
     pytree (e.g. from ``core.deep.member_lr_tree``) is passed through after a
     structure check, so mismatches fail loudly here instead of deep inside a
     tree.map.  A raw per-member (P,) vector is rejected for the same reason —
     expand it with ``core.deep.member_lr_tree`` first."""
-    if isinstance(lr, (dict, list, tuple)):
-        if jax.tree_util.tree_structure(lr) != jax.tree_util.tree_structure(tree):
-            raise ValueError("lr pytree structure does not match params")
-        return lr
-    if getattr(lr, "ndim", 0) != 0:
+    if isinstance(val, (dict, list, tuple)):
+        if jax.tree_util.tree_structure(val) != \
+                jax.tree_util.tree_structure(tree):
+            raise ValueError(f"{name} pytree structure does not match params")
+        return val
+    if getattr(val, "ndim", 0) != 0:
         raise ValueError(
-            f"lr must be a scalar or a pytree of per-leaf scales, got an "
-            f"array of shape {lr.shape}; expand per-member vectors with "
-            "core.deep.member_lr_tree(layout, lr) first")
+            f"{name} must be a scalar or a pytree of per-leaf scales, got an "
+            f"array of shape {val.shape}; expand per-member vectors with "
+            f"core.deep.member_lr_tree(layout, {name}) first")
     flat, tdef = jax.tree.flatten(tree)
-    return tdef.unflatten([lr] * len(flat))
+    return tdef.unflatten([val] * len(flat))
+
+
+def broadcast_lr(lr, tree):
+    return broadcast_scale(lr, tree, "lr")
+
+
+def hyper_on(h) -> bool:
+    """Is a scalar-or-tree hyperparameter active?  Scalars by truthiness
+    (``momentum=0.0`` means plain SGD, no state); a scale TREE is always
+    active — a per-member vector that happens to contain zeros still needs
+    the state allocated for the other members."""
+    if isinstance(h, (dict, list, tuple)):
+        return True
+    return bool(h)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,32 +118,39 @@ class Optimizer:
 # SGD                                                                   #
 # --------------------------------------------------------------------- #
 
-def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+def sgd(momentum=0.0, nesterov: bool = False) -> Optimizer:
+    """``momentum`` may be a scalar or a per-leaf scale tree (per-member
+    momentum through ``core.deep.member_lr_tree``); a scalar 0 keeps the
+    stateless plain-SGD fast path (state is just the step count)."""
+    stateful = hyper_on(momentum)
+
     def init(params):
         st = {"count": jnp.zeros((), jnp.int32)}
-        if momentum:
+        if stateful:
             st["mu"] = tree_zeros_like(params, jnp.float32)
         return st
 
     def update(grads, state, params, lr):
         lrs = broadcast_lr(lr, grads)
-        if not momentum:
+        if not stateful:
             upd = jax.tree.map(lambda g, l: -l * g.astype(jnp.float32),
                                grads, lrs)
             return upd, {"count": state["count"] + 1}
-        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
-                          state["mu"], grads)
+        moms = broadcast_scale(momentum, grads, "momentum")
+        mu = jax.tree.map(
+            lambda mo, m, g: mo * m + g.astype(jnp.float32),
+            moms, state["mu"], grads)
         if nesterov:
             upd = jax.tree.map(
-                lambda m, g, l: -l * (momentum * m + g.astype(jnp.float32)),
-                mu, grads, lrs)
+                lambda mo, m, g, l: -l * (mo * m + g.astype(jnp.float32)),
+                moms, mu, grads, lrs)
         else:
             upd = jax.tree.map(lambda m, l: -l * m, mu, lrs)
         return upd, {"count": state["count"] + 1, "mu": mu}
 
     def state_specs(param_specs, abstract_params):
         st = {"count": P()}
-        if momentum:
+        if stateful:
             st["mu"] = param_specs
         return st
 
@@ -130,8 +162,11 @@ def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
 # --------------------------------------------------------------------- #
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
-          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
-    """state_dtype=bf16 halves m/v HBM; the moment math stays f32."""
+          weight_decay=0.1, state_dtype=jnp.float32) -> Optimizer:
+    """state_dtype=bf16 halves m/v HBM; the moment math stays f32.
+    ``weight_decay`` may be a scalar or a per-leaf scale tree (per-member
+    decay through ``core.deep.member_lr_tree``)."""
+    decoupled = hyper_on(weight_decay)
 
     def init(params):
         return {"count": jnp.zeros((), jnp.int32),
@@ -144,21 +179,24 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         bc1 = 1.0 - b1 ** cf
         bc2 = 1.0 - b2 ** cf
 
-        def leaf(g, m, v, p, l):
+        def leaf(g, m, v, p, l, wd):
             gf = g.astype(jnp.float32)
             m32 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
             v32 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
             step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
-            if weight_decay:
-                step = step + weight_decay * p.astype(jnp.float32)
+            if wd is not None:
+                step = step + wd * p.astype(jnp.float32)
             return -l * step, m32.astype(state_dtype), v32.astype(state_dtype)
 
         flat_g, tdef = jax.tree.flatten(grads)
         flat_lr = tdef.flatten_up_to(broadcast_lr(lr, grads))
-        out = [leaf(g, m, v, p, l) for g, m, v, p, l in zip(
+        flat_wd = (tdef.flatten_up_to(
+            broadcast_scale(weight_decay, grads, "weight_decay"))
+            if decoupled else [None] * len(flat_g))
+        out = [leaf(g, m, v, p, l, wd) for g, m, v, p, l, wd in zip(
             flat_g, tdef.flatten_up_to(state["m"]),
             tdef.flatten_up_to(state["v"]), tdef.flatten_up_to(params),
-            flat_lr)]
+            flat_lr, flat_wd)]
         return (tdef.unflatten([o[0] for o in out]),
                 {"count": c,
                  "m": tdef.unflatten([o[1] for o in out]),
@@ -179,8 +217,12 @@ def _factored(shape) -> bool:
 
 
 def adafactor(b2: float = 0.99, eps: float = 1e-30, momentum: float = 0.9,
-              momentum_dtype=jnp.bfloat16, weight_decay: float = 0.0,
+              momentum_dtype=jnp.bfloat16, weight_decay=0.0,
               clip_threshold: float = 1.0) -> Optimizer:
+    """``weight_decay`` may be a scalar or a per-leaf scale tree, like
+    :func:`adamw`.  ``momentum`` stays a scalar (it is an EMA coefficient
+    folded into the bf16 state, not a per-member race knob)."""
+    decoupled = hyper_on(weight_decay)
 
     def init(params):
         def leaf(p):
@@ -199,7 +241,7 @@ def adafactor(b2: float = 0.99, eps: float = 1e-30, momentum: float = 0.9,
     def update(grads, state, params, lr):
         c = state["count"] + 1
 
-        def leaf(g, st, p, l):
+        def leaf(g, st, p, l, wd):
             gf = g.astype(jnp.float32)
             g2 = gf * gf + eps
             new_st = {}
@@ -220,17 +262,20 @@ def adafactor(b2: float = 0.99, eps: float = 1e-30, momentum: float = 0.9,
                 m = momentum * st["m"].astype(jnp.float32) + (1 - momentum) * u
                 new_st["m"] = m.astype(momentum_dtype)
                 u = m
-            if weight_decay:
-                u = u + weight_decay * p.astype(jnp.float32)
+            if wd is not None:
+                u = u + wd * p.astype(jnp.float32)
             return -l * u, new_st
 
         flat_g, tdef = jax.tree.flatten(grads)
         is_state_leaf = lambda x: isinstance(x, dict) and (
             "v" in x or "v_row" in x)
         flat_st = jax.tree.flatten(state["leaves"], is_leaf=is_state_leaf)[0]
-        out = [leaf(g, s, p, l) for g, s, p, l in
+        flat_wd = (tdef.flatten_up_to(
+            broadcast_scale(weight_decay, grads, "weight_decay"))
+            if decoupled else [None] * len(flat_g))
+        out = [leaf(g, s, p, l, wd) for g, s, p, l, wd in
                zip(flat_g, flat_st, tdef.flatten_up_to(params),
-                   tdef.flatten_up_to(broadcast_lr(lr, grads)))]
+                   tdef.flatten_up_to(broadcast_lr(lr, grads)), flat_wd)]
         return (tdef.unflatten([o[0] for o in out]),
                 {"count": c, "leaves": tdef.unflatten([o[1] for o in out])})
 

@@ -163,6 +163,68 @@ def test_compact_regroups_bucket_around_pruned_member():
                                   old_w[[0, 2]])
 
 
+def test_compact_real_adamw_state_bit_exact_incl_bf16_moments():
+    """compact gathers REAL AdamW state (not a fabricated tree): after two
+    engine steps the survivors' m/v moments come out bit-exact, in their
+    stored (bf16) dtype, with the step count riding through."""
+    from repro.optim import adamw
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    opt = adamw(weight_decay=0.01, state_dtype=jnp.bfloat16)
+    state = opt.init(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, 6))
+    y = jax.random.randint(jax.random.PRNGKey(2), (9,), 0, 3)
+    for _ in range(2):
+        params, state, *_ = deep.opt_step(params, state, x, y, 0.05, opt,
+                                          LP)
+    keep = [0, 2, 3, 5]
+    new_lp, new_p, new_st = compact(LP, params, state, keep)
+    assert int(new_st["count"]) == 2
+    assert new_st["m"]["w_in"].dtype == jnp.bfloat16
+    for i, m in enumerate(keep):
+        for mom in ("m", "v"):
+            _tree_eq(deep.extract_member(new_st[mom], new_lp, i),
+                     deep.extract_member(state[mom], LP, m))
+
+
+def test_trajectory_equals_no_pruning_run_with_momentum_state():
+    """The lifecycle invariant EXTENDED to stateful optimizers: a
+    survivor's post-compaction trajectory — params AND momentum buffers
+    riding through compact + the engine — equals its never-pruned
+    trajectory to float tolerance."""
+    from repro.optim import sgd as make_sgd
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    opt = make_sgd(momentum=0.9)
+    lr = jnp.linspace(0.02, 0.08, LP.num_members)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 6))
+    ys = jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0, 3)
+
+    full, st_full = params, opt.init(params)
+    for t in range(8):
+        full, st_full, *_ = deep.opt_step(full, st_full, xs[t], ys[t], lr,
+                                          opt, LP)
+
+    pruned, st = params, opt.init(params)
+    for t in range(4):
+        pruned, st, *_ = deep.opt_step(pruned, st, xs[t], ys[t], lr, opt,
+                                       LP)
+    keep = [0, 2, 3, 5]
+    new_lp, pruned, st = compact(LP, pruned, st, keep)
+    lr2 = lr[np.asarray(keep)]
+    for t in range(4, 8):
+        pruned, st, *_ = deep.opt_step(pruned, st, xs[t], ys[t], lr2, opt,
+                                       new_lp)
+
+    for i, m in enumerate(keep):
+        for tree_a, tree_b in ((pruned, full), (st["mu"], st_full["mu"])):
+            a = deep.extract_member(tree_a, new_lp, i)
+            b = deep.extract_member(tree_b, LP, m)
+            jax.tree.map(
+                lambda x, y: None if isinstance(x, str)
+                else np.testing.assert_allclose(np.asarray(x),
+                                                np.asarray(y),
+                                                rtol=1e-5, atol=1e-6), a, b)
+
+
 def test_compact_rejects_factored_state_and_wrong_layout():
     from repro.optim import adafactor
     params = deep.init_params(jax.random.PRNGKey(0), LP)
@@ -281,6 +343,116 @@ def test_halving_resume_mid_ladder_matches_straight_run(tmp_path):
     meta_r, _ = load_meta(str(tmp_path / "ck"))
     meta_s, _ = load_meta(str(tmp_path / "ck2"))
     assert meta_r["lifecycle"] == meta_s["lifecycle"]
+
+
+_ADAMW = ["--optimizer", "adamw", "--weight-decay", "0.01",
+          "--opt-state-dtype", "bfloat16"]
+
+
+def test_halving_driver_adamw_moments_through_rungs(tmp_path):
+    """Driver-level halving with a STATEFUL optimizer: AdamW moments are
+    compacted through two rung boundaries, the final checkpoint carries
+    the (bf16) state tree for the compacted layout, and the optimizer
+    record rides in meta['train']."""
+    from repro.checkpoint import load_meta, restore_population
+    from repro.core import deep
+    from repro.launch.train import main
+    from repro.optim import adamw
+
+    params, lp = main(_DRIVER + _ADAMW
+                      + ["--steps", "12", "--ckpt-dir",
+                         str(tmp_path / "ck")])
+    assert lp.num_real == 2
+    meta, step = load_meta(str(tmp_path / "ck"))
+    assert step == 11
+    rec = meta["train"]["optimizer"]
+    assert rec["name"] == "adamw" and rec["state_dtype"] == "bfloat16"
+    # restore the saved opt state for the COMPACTED layout and check the
+    # moments are live (non-zero) in the stored dtype
+    opt = adamw(weight_decay=0.01, state_dtype=jnp.bfloat16)
+    extra_like = jax.eval_shape(opt.init, deep.abstract_params(lp))
+    _, lp2, _, st = restore_population(str(tmp_path / "ck"),
+                                       extra_like=extra_like)
+    assert lp2 == lp
+    assert int(st["count"]) == 12
+    assert st["m"]["w_in"].dtype == jnp.bfloat16
+    assert np.any(np.asarray(st["m"]["w_in"], dtype=np.float32))
+
+
+def test_halving_adamw_resume_mid_ladder_matches_straight_run(tmp_path):
+    """Resume-mid-ladder equality with STATEFUL opt state: stopping
+    between rungs and resuming must reproduce the uninterrupted AdamW
+    run — the restored moments (and their compaction at the later rung)
+    carry the trajectory, so parameter equality proves the state
+    round-trip."""
+    from repro.checkpoint import load_meta
+    from repro.launch.train import main
+    main(_DRIVER + _ADAMW + ["--steps", "6",
+                             "--ckpt-dir", str(tmp_path / "ck")])
+    meta_a, _ = load_meta(str(tmp_path / "ck"))
+    assert meta_a["lifecycle"]["rung"] == 1
+    p_res, lp_res = main(_DRIVER + _ADAMW
+                         + ["--steps", "12", "--resume",
+                            "--ckpt-dir", str(tmp_path / "ck")])
+    p_str, lp_str = main(_DRIVER + _ADAMW
+                         + ["--steps", "12",
+                            "--ckpt-dir", str(tmp_path / "ck2")])
+    assert lp_res == lp_str
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7), p_res, p_str)
+    meta_r, _ = load_meta(str(tmp_path / "ck"))
+    meta_s, _ = load_meta(str(tmp_path / "ck2"))
+    assert meta_r["lifecycle"] == meta_s["lifecycle"]
+    assert meta_r["train"]["optimizer"] == meta_s["train"]["optimizer"]
+
+
+_ADAMW_HALVING_4DEV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.train import main
+
+BASE = ["--arch", "parallelmlp-10k", "--reduced", "--scan-steps", "2",
+        "--samples", "256", "--population-acts", "relu,tanh",
+        "--population-depths", "8,4;8,4;6;5;12,6;7;9;10",
+        "--per-member-lr", "--ckpt-every", "2",
+        "--halving", "4:0.5,8:0.5",
+        "--optimizer", "adamw", "--weight-decay", "0.01",
+        "--opt-state-dtype", "bfloat16"]
+assert len(jax.devices()) == 4
+# stop between rungs, then resume mid-ladder: rung 1 fires on the
+# compacted SHARDED layout with restored (sharded) AdamW moments
+main(BASE + ["--steps", "6", "--ckpt-dir", sys.argv[1] + "/ck"])
+p_res, lp_res = main(BASE + ["--steps", "12", "--resume",
+                             "--ckpt-dir", sys.argv[1] + "/ck"])
+p_str, lp_str = main(BASE + ["--steps", "12",
+                             "--ckpt-dir", sys.argv[1] + "/ck2"])
+assert lp_res == lp_str
+jax.tree.map(lambda a, b: np.testing.assert_allclose(
+    np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6), p_res, p_str)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_adamw_halving_resume_on_4_device_mesh(tmp_path):
+    """Acceptance: an AdamW --halving run prunes/compacts/resumes with opt
+    moments surviving rung boundaries ON THE 4-FAKE-DEVICE MESH — the
+    resumed ladder equals the uninterrupted one with sharded moment
+    restore + sharded compaction in the loop."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    r = subprocess.run([sys.executable, "-c", _ADAMW_HALVING_4DEV,
+                        str(tmp_path)],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
 
 
 def test_halving_catchup_prune_saves_compacted_latest(tmp_path):

@@ -96,6 +96,48 @@ def test_adafactor_descends():
     assert float(loss(p)) < float(loss({"w": w}))
 
 
+def test_sgd_momentum_scale_tree_per_leaf():
+    """A momentum TREE applies each leaf's own coefficient — the mechanism
+    carrying per-member momentum into fused populations."""
+    p = {"a": jnp.zeros(1), "b": jnp.zeros(1)}
+    g = {"a": jnp.ones(1), "b": jnp.ones(1)}
+    moms = {"a": 0.5, "b": 0.875}
+    opt = sgd(momentum=moms)
+    st = opt.init(p)
+    assert "mu" in st                             # trees are always stateful
+    ref = {k: sgd(momentum=moms[k]) for k in p}
+    ref_p = {k: {"w": p[k]} for k in p}
+    ref_st = {k: ref[k].init(ref_p[k]) for k in p}
+    for _ in range(3):
+        upd, st = opt.update(g, st, p, 0.1)
+        p = apply_updates(p, upd)
+        for k in ref:
+            u, ref_st[k] = ref[k].update({"w": g[k]}, ref_st[k], ref_p[k],
+                                         0.1)
+            ref_p[k] = apply_updates(ref_p[k], u)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(p[k]),
+                                      np.asarray(ref_p[k]["w"]))
+
+
+def test_adamw_weight_decay_scale_tree_per_leaf():
+    p = {"a": jnp.full((2,), 0.5), "b": jnp.full((2,), 0.5)}
+    g = {"a": jnp.full((2,), 0.1), "b": jnp.full((2,), 0.1)}
+    opt = adamw(weight_decay={"a": 0.0, "b": 0.5})
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p, 1e-2)
+    ua, ub = np.asarray(upd["a"]), np.asarray(upd["b"])
+    # identical grads → the decayed leaf steps further downhill by wd·p·lr
+    np.testing.assert_allclose(ub - ua, -1e-2 * 0.5 * 0.5, rtol=1e-5)
+
+
+def test_broadcast_scale_structure_check():
+    from repro.optim import broadcast_scale
+    p = {"a": jnp.zeros(1)}
+    with pytest.raises(ValueError, match="momentum"):
+        broadcast_scale(jnp.zeros((3,)), p, "momentum")
+
+
 def test_clip_by_global_norm():
     g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
     clipped, norm = clip_by_global_norm(g, 1.0)

@@ -93,8 +93,92 @@ def test_driver_fused_bf16_halving_with_cheap_rungs(tmp_path):
     assert all(p.dtype == np.float32             # f32 masters checkpointed
                for p in jax.tree.leaves(params))
     meta, _ = ckpt_mod.load_meta(str(tmp_path / "ck"))
-    assert meta["train"] == {"compute_dtype": "bfloat16",
-                             "bd_impl": "fused", "act_impl": "sliced"}
+    assert meta["train"]["compute_dtype"] == "bfloat16"
+    assert meta["train"]["bd_impl"] == "fused"
+    assert meta["train"]["act_impl"] == "sliced"
+    # the stateful-optimizer engine records its config too (sgd default)
+    assert meta["train"]["optimizer"]["name"] == "sgd"
+
+
+def test_resume_optimizer_mismatch_fails_loudly(tmp_path):
+    """--resume must refuse to reinterpret a stored optimizer state tree
+    under a different config: optimizer name AND hyperparameter changes
+    both fail with the stored-vs-requested diff; the matching config
+    resumes."""
+    _run(tmp_path, steps=4, ckpt_every=2, extra=["--optimizer", "momentum"])
+    with pytest.raises(ValueError, match="optimizer config mismatch"):
+        _run(tmp_path, steps=8, ckpt_every=2,
+             extra=["--optimizer", "adamw", "--resume"])
+    with pytest.raises(ValueError, match="momentum"):
+        _run(tmp_path, steps=8, ckpt_every=2,
+             extra=["--optimizer", "momentum", "--momentum", "0.5",
+                    "--resume"])
+    # flipping a per-member flag is a different recipe too
+    with pytest.raises(ValueError, match="per_member_momentum"):
+        _run(tmp_path, steps=8, ckpt_every=2,
+             extra=["--optimizer", "momentum", "--per-member-momentum",
+                    "--resume"])
+    params, lp = _run(tmp_path, steps=8, ckpt_every=2,
+                      extra=["--optimizer", "momentum", "--resume"])
+    assert lp.num_real == 4
+
+
+def test_driver_checkpoints_opt_state_and_records_config(tmp_path):
+    """Population checkpoints carry the optimizer state under 'extra'
+    (momentum buffers on disk, restorable) and the full optimizer record
+    under meta['train']['optimizer']."""
+    import numpy as _np
+    _run(tmp_path, steps=4, ckpt_every=2,
+         extra=["--optimizer", "momentum", "--grad-clip", "1.0"])
+    meta, step = ckpt_mod.load_meta(str(tmp_path / "ck"))
+    rec = meta["train"]["optimizer"]
+    assert rec["name"] == "momentum" and rec["momentum"] == 0.9
+    assert rec["grad_clip"] == 1.0
+    import os
+    data = _np.load(os.path.join(str(tmp_path / "ck"),
+                                 f"step_{step:08d}", "arrays.npz"))
+    mu_keys = [k for k in data.files if k.startswith("extra/mu/")]
+    assert mu_keys and any(_np.any(data[k]) for k in mu_keys)
+    assert "extra/count" in data.files
+
+
+def test_stateful_resume_equals_straight_run(tmp_path):
+    """4 + 4 resumed MOMENTUM steps equal 8 uninterrupted ones — the
+    restored momentum buffers carry the trajectory, so equality proves
+    the opt-state checkpoint round-trip."""
+    mom = ["--optimizer", "momentum", "--per-member-momentum"]
+    _run(tmp_path, steps=4, ckpt_every=4, extra=mom)
+    p_resumed, lp = _run(tmp_path, steps=8, ckpt_every=4,
+                         extra=mom + ["--resume"])
+    p_straight, lp2 = main([
+        "--arch", "parallelmlp-10k", "--reduced", "--steps", "8",
+        "--ckpt-every", "0", "--ckpt-dir", str(tmp_path / "ck2"),
+        "--population-depths", "8,4;8,4;6;5", "--population-acts",
+        "relu,tanh", "--scan-steps", "2", "--samples", "256", *mom])
+    assert lp == lp2
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        p_resumed, p_straight)
+    # a different --seed would silently redraw the per-member vectors
+    # beneath the restored moments — the config guard catches it
+    with pytest.raises(ValueError, match="seed"):
+        _run(tmp_path, steps=12, ckpt_every=4,
+             extra=mom + ["--resume", "--seed", "1"])
+
+
+def test_driver_flag_validation():
+    with pytest.raises(SystemExit):
+        main(["--arch", "parallelmlp-10k", "--reduced", "--steps", "1",
+              "--per-member-momentum"])          # needs --optimizer momentum
+    with pytest.raises(SystemExit):
+        main(["--arch", "parallelmlp-10k", "--reduced", "--steps", "1",
+              "--optimizer", "adamw", "--per-member-weight-decay"])  # wd=0
+    with pytest.raises(SystemExit):
+        main(["--arch", "parallelmlp-10k", "--reduced", "--steps", "1",
+              "--optimizer", "adafactor", "--halving", "1000:0.5"])
+    with pytest.raises(SystemExit):   # would be silently ignored otherwise
+        main(["--arch", "parallelmlp-10k", "--reduced", "--steps", "1",
+              "--optimizer", "momentum", "--opt-state-dtype", "bfloat16"])
 
 
 def test_resume_continues_training(tmp_path):
