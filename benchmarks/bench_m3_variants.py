@@ -45,6 +45,12 @@ from repro.core import deep as deep_mod
 from repro.core.activations import PAPER_TEN
 from repro.core.m3 import M3_IMPLS
 from repro.launch.hlo_cost import analyze
+from repro.launch.launch_count import fused_step_budget, phase_launches
+
+try:                             # package import (python -m benchmarks.…)
+    from benchmarks.roofline import kernel_roofline
+except ImportError:              # flat import (CI scripts, tests)
+    from roofline import kernel_roofline
 
 
 def bench(pop, batch, impl, iters=5):
@@ -83,7 +89,7 @@ def _require_impl(bd_impl: str):
 
 
 def bench_deep(lp, batch, bd_impl, iters=3, shardings=None,
-               act_impl="sliced", compute_dtype=None):
+               act_impl="sliced", compute_dtype=None, reps=5):
     _require_impl(bd_impl)
     params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
     if shardings is not None:
@@ -106,7 +112,7 @@ def bench_deep(lp, batch, bd_impl, iters=3, shardings=None,
             f"compute_dtype={compute_dtype}) failed to compile/run on this "
             f"backend — refusing to fall back") from e
     walls = []
-    for _ in range(5):          # best-of-5: robust on contended CI hosts
+    for _ in range(reps):       # best-of-5: robust on contended CI hosts
         t0 = time.perf_counter()
         for _ in range(iters):
             out = step(params)
@@ -233,45 +239,118 @@ def run_deep(args):
         print(f"# wrote {args.json_out}")
 
 
+def _phase_counts(lp, batch, impl, act, compute_dtype=None):
+    """Static kernel-launch counts per phase for one fused-loss train step
+    (repro.launch.launch_count): trace-only, so cheap at ANY batch size."""
+    params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+    x = jnp.zeros((batch, lp.in_features), jnp.float32)
+    y = jnp.zeros((batch,), jnp.int32)
+
+    def loss(p):
+        return deep_mod.fused_loss(p, x, y, lp, "bucketed", impl, act,
+                                   compute_dtype)[0]
+    return phase_launches(loss, params)
+
+
+def _check_budget(counts, budget, where):
+    """The §9 launch-budget regression guard: the fully fused step must
+    cost exactly 2·(depth+1) launches — MORE means a kernel stopped being
+    one-pass (e.g. the backward re-grew a batch-size fallback), and the
+    bench ABORTS rather than commit regressed numbers."""
+    if counts["fwd"] > budget["fwd"] or counts["bwd"] > budget["bwd"]:
+        raise SystemExit(
+            f"kernel-launch budget EXCEEDED ({where}): counted {counts} "
+            f"vs budget {budget} — the fused path is no longer one launch "
+            "per layer per direction (DESIGN.md §9)")
+
+
 def run_fused(args):
-    """Fused-epilogue shoot-out (DESIGN.md §7): the full fwd+bwd step of
-    the layered engine, each mid-layer impl in its PRODUCTION config —
+    """Fused-epilogue shoot-out (DESIGN.md §7/§9): the full fwd+bwd step
+    of the layered engine, each mid-layer impl in its PRODUCTION config —
 
       einsum — per-bucket einsums + sliced XLA activations
       pallas — block-diag kernel + the seg_act round trip (GEMM writes
                pre-activations to HBM, seg_act reads them back — the path
                the fused kernel replaces)
-      fused  — projection + bias + activation in ONE kernel pass (seg_act
-               only for layer 0)
+      fused  — the one-pass-everywhere path: fused input layer, fused mid
+               layers (projection + bias + activation per launch), fused
+               loss head (projection + softmax-XE + dlogits) — no seg_act
+               pass anywhere
 
-    measured at f32 AND bf16 operands (the --compute-dtype policy), wall
-    and loop-aware HLO HBM side by side → BENCH_fused.json.  A requested
-    impl that is missing or fails on this backend ABORTS the bench
-    (no silent fallback)."""
+    measured at f32 AND bf16 operands (the --compute-dtype policy), wall,
+    loop-aware HLO HBM, per-phase KERNEL-LAUNCH counts, and achieved
+    roofline coordinates side by side → BENCH_fused.json.  The fused rows
+    are checked against the §9 budget (2·(depth+1) launches per step,
+    batch-independent) and a batch sweep (32/256/1024) proves the
+    independence in the committed artifact.  A requested impl that is
+    missing or fails on this backend ABORTS the bench (no silent
+    fallback), as does a budget overrun."""
     lp, mesh, shardings, ctx = _deep_bench_population(args)
 
     act_for = {"einsum": "sliced", "pallas": "pallas", "fused": "pallas"}
     impls = args.bd_impls or ["einsum", "pallas", "fused"]
     for impl in impls:
         _require_impl(impl)
+    budget = fused_step_budget(lp.depth)
     rows = {}
     with ctx:
-        print("bd_impl,dtype,act_impl,wall_ms,hbm_mb")
+        print("bd_impl,dtype,act_impl,wall_ms,hbm_mb,launches")
         for impl in impls:
             act = act_for.get(impl, "sliced")
-            rows[impl] = {"act_impl": act}
+            counts = _phase_counts(lp, args.batch, impl, act)
+            if impl == "fused":
+                _check_budget(counts, budget, f"impl=fused B={args.batch}")
+            rows[impl] = {"act_impl": act, "kernel_launches": counts}
             for dt in ("float32", "bfloat16"):
                 wall, stats = bench_deep(
                     lp, args.batch, impl, shardings=shardings,
                     act_impl=act, compute_dtype=dt)
                 rows[impl][dt] = {
                     "wall_ms": round(wall * 1e3, 2),
-                    "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2)}
+                    "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2),
+                    "roofline": kernel_roofline(stats["flops"],
+                                                stats["hbm_bytes"], wall)}
                 print(f"{impl},{dt},{act},{wall*1e3:.2f},"
-                      f"{stats['hbm_bytes']/1e6:.1f}", flush=True)
+                      f"{stats['hbm_bytes']/1e6:.1f},{counts['total']}",
+                      flush=True)
+
+        # ---- batch sweep: the §9 invariant made CONCRETE — the fused
+        # step's launch count must not move with B (the two-level-grid
+        # backward is what removed the batch fallback), while wall/HBM
+        # scale.  Large-B wall-clock is measured at reduced reps (CPU
+        # interpret mode is slow there; the launch counts are the tracked
+        # regression numbers, the wall is context).
+        sweep = {}
+        for bsz in args.sweep_batches:
+            counts = _phase_counts(lp, bsz, "fused", act_for["fused"])
+            _check_budget(counts, budget, f"sweep B={bsz}")
+            row = {"kernel_launches": counts}
+            if not args.sweep_launches_only:
+                light = bsz > args.batch
+                wall, stats = bench_deep(
+                    lp, bsz, "fused", shardings=shardings,
+                    act_impl=act_for["fused"], compute_dtype="float32",
+                    iters=1 if light else 3, reps=2 if light else 5)
+                row.update({
+                    "wall_ms": round(wall * 1e3, 2),
+                    "hbm_mb": round(stats["hbm_bytes"] / 1e6, 2),
+                    "roofline": kernel_roofline(stats["flops"],
+                                                stats["hbm_bytes"], wall)})
+                print(f"# sweep B={bsz}: {row['wall_ms']} ms, "
+                      f"{row['hbm_mb']} MB, launches {counts}", flush=True)
+            else:
+                print(f"# sweep B={bsz}: launches {counts}", flush=True)
+            sweep[str(bsz)] = row
+        launch_sets = {json.dumps(r["kernel_launches"], sort_keys=True)
+                       for r in sweep.values()}
+        if len(launch_sets) > 1:
+            raise SystemExit(
+                f"fused launch count varies with batch size: {sweep} — "
+                "the one-pass backward regressed to a batch-dependent grid")
 
     out = {"bench": "fused_layer", "population": lp.describe(),
            "batch": args.batch, "results": rows,
+           "launch_budget": budget, "batch_sweep": sweep,
            "sharded": bool(args.sharded),
            "mesh": dict(mesh.shape) if mesh else None}
     if "fused" in rows and "pallas" in rows:
@@ -551,9 +630,19 @@ def main(argv=None):
                     help="bench the layered engine (BD_IMPLS shoot-out) "
                          "instead of the single-layer M3 variants")
     ap.add_argument("--fused", action="store_true",
-                    help="bench the fused mid-layer kernel against pallas "
-                         "(+seg_act round trip) and einsum, f32 AND bf16 "
+                    help="bench the one-pass fused path against pallas "
+                         "(+seg_act round trip) and einsum, f32 AND bf16, "
+                         "with per-phase kernel-launch counts, roofline "
+                         "coordinates, and the batch sweep "
                          "-> BENCH_fused.json")
+    ap.add_argument("--sweep-batches", nargs="+", type=int,
+                    default=[32, 256, 1024],
+                    help="--fused: batch sizes for the launch-budget sweep "
+                         "(counts must be IDENTICAL across all of them)")
+    ap.add_argument("--sweep-launches-only", action="store_true",
+                    help="--fused: skip the sweep's large-batch wall-clock "
+                         "measurements (interpret mode is slow there) and "
+                         "record only the trace-derived launch counts")
     ap.add_argument("--bd-impls", nargs="+", default=None,
                     help="mid-layer impls to bench (unknown impls ABORT; "
                          "default: einsum+pallas for --deep, all three "

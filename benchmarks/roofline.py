@@ -6,13 +6,36 @@
 Per (arch × shape × mesh): the three terms (compute/memory/collective, in
 seconds), the dominant term, MODEL_FLOPS (6·N_active·D train, 2·N_active·D
 inference), the useful-flops ratio, and the roofline fraction.  With
---baseline, a before/after delta column tracks the §Perf iterations."""
+--baseline, a before/after delta column tracks the §Perf iterations.
+
+``kernel_roofline`` is the per-kernel primitive the population fused bench
+(bench_m3_variants.py --fused) shares with this table: it turns a measured
+(flops, bytes, wall) triple into achieved-throughput numbers, so every
+BENCH_fused.json row carries its own roofline coordinates."""
 from __future__ import annotations
 
 import argparse
 import glob
 import json
 import os
+
+
+def kernel_roofline(flops: float, hbm_bytes: float, wall_s: float) -> dict:
+    """Achieved-throughput roofline row for one measured kernel or step:
+    FLOP/s actually sustained, HBM bytes/s actually moved, and the
+    arithmetic intensity (FLOP per HBM byte) that locates the point on a
+    roofline plot.  ``flops``/``hbm_bytes`` come from the static HLO cost
+    model (launch/hlo_cost.analyze) of the SAME computation the wall-clock
+    measured, so the coordinates are internally consistent; on the CPU
+    interpret-mode CI host the absolute rates are host-bound, but the
+    intensity is structural and transfers to TPU as-is."""
+    wall = max(wall_s, 1e-12)
+    return {
+        "achieved_gflops_per_s": round(flops / wall / 1e9, 4),
+        "achieved_gbytes_per_s": round(hbm_bytes / wall / 1e9, 4),
+        "arithmetic_intensity_flop_per_byte": round(
+            flops / max(hbm_bytes, 1.0), 4),
+    }
 
 
 def load(dirname):

@@ -138,6 +138,55 @@ def block_diag_matmul(h: jax.Array, w_buckets, lp: LayeredPopulation, l: int,
 
 
 # ---------------------------------------------------------------------- #
+# input-layer projection (registry, like BD_IMPLS)                       #
+# ---------------------------------------------------------------------- #
+
+def input_xla(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+              lp: LayeredPopulation, act_impl: str = "sliced") -> jax.Array:
+    """Input projection as an XLA dot (f32 accumulate) + bias + the
+    per-layer ``_act`` pass — the pre-§9 path."""
+    z0 = jax.lax.dot_general(x, w_in,
+                             dimension_numbers=(((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    return _act(lp, 0, z0 + b_in, act_impl)
+
+
+def input_fused(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+                lp: LayeredPopulation, act_impl: str = "sliced", *,
+                interpret: bool | None = None,
+                block_b: int = 128) -> jax.Array:
+    """FUSED input layer: dense GEMM + bias + per-segment activation +
+    padding mask in one Pallas pass (kernels/fused_input.py, DESIGN.md §9)
+    — no standalone seg_act pass, z0 never in HBM.  ``act_impl`` is
+    ignored: the epilogue IS the activation."""
+    from repro.kernels.ops import fused_input  # lazy: kernels import pallas
+    p0 = lp.layer_pop(0)
+    return fused_input(x, w_in, b_in.astype(jnp.float32), p0.block_act_ids,
+                       p0.hidden_mask, block=lp.block, block_b=block_b,
+                       interpret=interpret)
+
+
+IN_IMPLS = {
+    "xla": input_xla,
+    "fused": input_fused,
+}
+
+# input impls whose kernel epilogue already applies bias + activation + mask
+FUSED_IN_IMPLS = frozenset(["fused"])
+
+
+def _resolve_in_impl(in_impl, bd_impl: str) -> str:
+    """``None`` follows the mid layers: a fused ``bd_impl`` gets the fused
+    input kernel, anything else the XLA dot."""
+    if in_impl is None:
+        return "fused" if bd_impl in FUSED_BD_IMPLS else "xla"
+    if in_impl not in IN_IMPLS:
+        raise ValueError(f"unknown in_impl {in_impl!r} "
+                         f"(have {sorted(IN_IMPLS)})")
+    return in_impl
+
+
+# ---------------------------------------------------------------------- #
 # parameters                                                             #
 # ---------------------------------------------------------------------- #
 
@@ -337,27 +386,17 @@ def _resolve_compute_dtype(compute_dtype):
     return None if cd == jnp.dtype(jnp.float32) else cd
 
 
-def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
-            bd_impl: str = "einsum", act_impl: str = "sliced",
-            bd_kwargs: dict | None = None, m3_kwargs: dict | None = None,
-            compute_dtype=None):
-    """x (B, F) → logits (B, P, O) — every member an independent deep MLP.
-
-    ``compute_dtype="bfloat16"`` applies the mixed-precision policy: matmul
-    OPERANDS (activations and weights) are cast to bf16 at every projection
-    boundary while accumulators run f32 (``preferred_element_type`` / f32
-    VMEM scratch in the kernels), biases and the logits stay f32, and the
-    f32 master parameters are untouched — gradients arrive f32.
-
-    ``bd_impl="fused"`` routes every mid layer through the fused Pallas
-    kernel (projection + bias + activation + mask in one pass, DESIGN.md
-    §7); the per-layer ``_act`` then applies only to layer 0."""
+def _hidden(params, x, lp: LayeredPopulation, bd_impl: str = "einsum",
+            act_impl: str = "sliced", bd_kwargs: dict | None = None,
+            compute_dtype=None, in_impl=None):
+    """Input layer + every mid layer → the last hidden activations
+    (B, H_last_tot).  The shared trunk of ``forward`` and the fused loss
+    head; ``in_impl`` routing as in ``forward``."""
     cd = _resolve_compute_dtype(compute_dtype)
     cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
-    z0 = jax.lax.dot_general(cast(x), cast(params["w_in"]),
-                             dimension_numbers=(((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    h = _act(lp, 0, z0 + params["b_in"], act_impl)
+    in_impl = _resolve_in_impl(in_impl, bd_impl)
+    h = IN_IMPLS[in_impl](cast(x), cast(params["w_in"]), params["b_in"],
+                          lp, act_impl)
     for l in range(lp.depth - 1):
         hb = cast(h)
         wl = [cast(w) for w in params["mid"][l]["w"]]
@@ -373,6 +412,31 @@ def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
         h = z + params["mid"][l]["b"] * jnp.asarray(
             lp.active_unit_mask(l + 1), jnp.float32)
         h = _act(lp, l + 1, h, act_impl)
+    return h
+
+
+def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
+            bd_impl: str = "einsum", act_impl: str = "sliced",
+            bd_kwargs: dict | None = None, m3_kwargs: dict | None = None,
+            compute_dtype=None, in_impl=None):
+    """x (B, F) → logits (B, P, O) — every member an independent deep MLP.
+
+    ``compute_dtype="bfloat16"`` applies the mixed-precision policy: matmul
+    OPERANDS (activations and weights) are cast to bf16 at every projection
+    boundary while accumulators run f32 (``preferred_element_type`` / f32
+    VMEM scratch in the kernels), biases and the logits stay f32, and the
+    f32 master parameters are untouched — gradients arrive f32.
+
+    ``bd_impl="fused"`` routes every mid layer through the fused Pallas
+    kernel (projection + bias + activation + mask in one pass, DESIGN.md
+    §7).  ``in_impl`` picks the input-layer path (``IN_IMPLS``); the
+    default ``None`` follows ``bd_impl`` — a fused run gets the fused
+    input kernel (DESIGN.md §9) so no standalone seg_act pass survives
+    anywhere in the forward."""
+    cd = _resolve_compute_dtype(compute_dtype)
+    cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
+    h = _hidden(params, x, lp, bd_impl, act_impl, bd_kwargs, compute_dtype,
+                in_impl)
     y = _m3_apply(cast(h), cast(params["w_out"]),
                   lp.layer_pop(lp.depth - 1), impl=m3_impl,
                   **(m3_kwargs or {}))
@@ -381,9 +445,35 @@ def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
 
 def fused_loss(params, x, targets, lp: LayeredPopulation,
                m3_impl: str = "bucketed", bd_impl: str = "einsum",
-               act_impl: str = "sliced", compute_dtype=None):
+               act_impl: str = "sliced", compute_dtype=None,
+               in_impl=None, loss_impl=None):
+    """Summed per-member softmax cross-entropy → ``(loss, per)`` with
+    ``per`` (P,) the per-member mean NLL.
+
+    ``loss_impl`` picks the head: ``"xla"`` materialises logits via
+    ``forward`` and runs log_softmax in XLA; ``"fused"`` skips ``m3``
+    entirely and runs projection + softmax-XE + dlogits in one Pallas
+    launch per direction (``core.m3.m3_loss_head``, DESIGN.md §9).  The
+    default ``None`` follows ``bd_impl``, so a fused run's whole
+    forward+backward is a fixed number of launches per layer at any batch
+    size."""
+    from repro.core.m3 import LOSS_IMPLS, m3_loss_head
+    if loss_impl is None:
+        loss_impl = "fused" if bd_impl in FUSED_BD_IMPLS else "xla"
+    if loss_impl not in LOSS_IMPLS:
+        raise ValueError(f"unknown loss_impl {loss_impl!r} "
+                         f"(have {sorted(LOSS_IMPLS)})")
+    if loss_impl == "fused":
+        cd = _resolve_compute_dtype(compute_dtype)
+        cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
+        h = _hidden(params, x, lp, bd_impl, act_impl, None, compute_dtype,
+                    in_impl)
+        per = m3_loss_head(cast(h), cast(params["w_out"]), params["b_out"],
+                           targets, lp.layer_pop(lp.depth - 1))
+        return per.sum(), per
     logits = forward(params, x, lp, m3_impl=m3_impl, bd_impl=bd_impl,
-                     act_impl=act_impl, compute_dtype=compute_dtype)
+                     act_impl=act_impl, compute_dtype=compute_dtype,
+                     in_impl=in_impl)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(
         logp, targets[:, None, None].astype(jnp.int32), axis=-1)[..., 0]
@@ -496,7 +586,8 @@ def make_population_train_step(lp: LayeredPopulation, *,
                                act_impl: str = "sliced",
                                scan_steps: int = 1,
                                donate: bool = True,
-                               compute_dtype=None):
+                               compute_dtype=None,
+                               lr_schedule=None):
     """Build the jitted multi-step population train chunk.
 
     Without ``optimizer`` this is the stateless plain-SGD chunk:
@@ -512,6 +603,19 @@ def make_population_train_step(lp: LayeredPopulation, *,
     AND opt state are donated: at 10k members the moment trees double the
     dominant HBM resident, so reusing their buffers in place matters twice
     as much as it did for params alone.
+
+    ``lr_schedule`` (a ``step -> multiplier`` callable, e.g.
+    ``repro.optim.warmup_cosine(1.0, ...)``) threads the GLOBAL step
+    through the scan as a carry: each chunk signature gains a trailing
+    ``step0`` argument (the global step of the chunk's first batch —
+    resume-correct because the driver passes its segment cursor) and inner
+    step k trains at ``lr · lr_schedule(step0 + k)``.  ``lr`` keeps its
+    scalar-or-(P,) semantics — the multiplier broadcasts, so per-member
+    LRs and the schedule compose, and filler members simply ride the same
+    multiplier (they are excluded from selection regardless).  With
+    ``lr_schedule=None`` the signatures and the emitted program are
+    EXACTLY the pre-schedule ones: the plain-SGD chunk stays bit-identical
+    to the committed baselines.
 
     ``xs``/``ys`` carry a leading ``scan_steps`` axis and ``losses``
     (scan_steps,) / ``pers`` (scan_steps, P) hold every inner step's
@@ -530,28 +634,62 @@ def make_population_train_step(lp: LayeredPopulation, *,
                 "grad_clip runs through the optimizer engine — pass "
                 "optimizer= (e.g. repro.optim.sgd()) alongside it")
 
-        def chunk(params, xs, ys, lr):
-            def body(p, batch):
-                x, y = batch
-                p, loss, per = _sgd_update(p, x, y, lr, lp, m3_impl,
-                                           bd_impl, act_impl, compute_dtype)
-                return p, (loss, per)
-            params, (losses, pers) = jax.lax.scan(body, params, (xs, ys))
-            return params, losses, pers
+        if lr_schedule is None:
+            def chunk(params, xs, ys, lr):
+                def body(p, batch):
+                    x, y = batch
+                    p, loss, per = _sgd_update(p, x, y, lr, lp, m3_impl,
+                                               bd_impl, act_impl,
+                                               compute_dtype)
+                    return p, (loss, per)
+                params, (losses, pers) = jax.lax.scan(body, params, (xs, ys))
+                return params, losses, pers
+        else:
+            def chunk(params, xs, ys, lr, step0):
+                def body(carry, batch):
+                    p, g = carry
+                    x, y = batch
+                    lr_t = jnp.asarray(lr) * lr_schedule(g)
+                    p, loss, per = _sgd_update(p, x, y, lr_t, lp, m3_impl,
+                                               bd_impl, act_impl,
+                                               compute_dtype)
+                    return (p, g + 1), (loss, per)
+                (params, _), (losses, pers) = jax.lax.scan(
+                    body, (params, jnp.asarray(step0, jnp.int32)), (xs, ys))
+                return params, losses, pers
 
         return jax.jit(chunk, donate_argnums=(0,) if donate else ())
 
-    def chunk(params, opt_state, xs, ys, lr):
-        def body(carry, batch):
-            p, st = carry
-            x, y = batch
-            p, st, loss, per, gnorm = _opt_update(
-                p, st, x, y, lr, optimizer, lp, m3_impl, bd_impl, act_impl,
-                compute_dtype, grad_clip)
-            return (p, st), (loss, per, gnorm)
-        (params, opt_state), (losses, pers, gnorms) = jax.lax.scan(
-            body, (params, opt_state), (xs, ys))
-        return params, opt_state, losses, pers, gnorms
+    if lr_schedule is None:
+        def chunk(params, opt_state, xs, ys, lr):
+            def body(carry, batch):
+                p, st = carry
+                x, y = batch
+                p, st, loss, per, gnorm = _opt_update(
+                    p, st, x, y, lr, optimizer, lp, m3_impl, bd_impl,
+                    act_impl, compute_dtype, grad_clip)
+                return (p, st), (loss, per, gnorm)
+            (params, opt_state), (losses, pers, gnorms) = jax.lax.scan(
+                body, (params, opt_state), (xs, ys))
+            return params, opt_state, losses, pers, gnorms
+    else:
+        def chunk(params, opt_state, xs, ys, lr, step0):
+            def body(carry, batch):
+                p, st, g = carry
+                x, y = batch
+                mult = lr_schedule(g)
+                if isinstance(lr, (dict, list, tuple)):  # scale tree
+                    lr_t = jax.tree.map(lambda s: s * mult, lr)
+                else:
+                    lr_t = jnp.asarray(lr) * mult
+                p, st, loss, per, gnorm = _opt_update(
+                    p, st, x, y, lr_t, optimizer, lp, m3_impl, bd_impl,
+                    act_impl, compute_dtype, grad_clip)
+                return (p, st, g + 1), (loss, per, gnorm)
+            (params, opt_state, _), (losses, pers, gnorms) = jax.lax.scan(
+                body, (params, opt_state, jnp.asarray(step0, jnp.int32)),
+                (xs, ys))
+            return params, opt_state, losses, pers, gnorms
 
     return jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
 

@@ -121,3 +121,32 @@ M3_IMPLS = {
 def m3(h: jax.Array, w2: jax.Array, pop: Population,
        impl: str = "bucketed", **kw) -> jax.Array:
     return M3_IMPLS[impl](h, w2, pop, **kw)
+
+
+# ---------------------------------------------------------------------- #
+# 5. fused loss head: M3 projection + softmax-XE in one pass             #
+# ---------------------------------------------------------------------- #
+
+def m3_loss_head(h: jax.Array, w2: jax.Array, b2: jax.Array,
+                 targets: jax.Array, pop: Population, *,
+                 interpret: bool | None = None,
+                 block_b: int = 128) -> jax.Array:
+    """The training-time fusion of M3: projection + per-member bias +
+    softmax cross-entropy + dlogits in one Pallas launch per direction
+    (kernels/loss_head.py, DESIGN.md §9) — the logits never reach HBM.
+    Returns the per-member mean NLL (P,) f32; eval paths that need actual
+    logits keep using ``m3``."""
+    from repro.kernels.ops import loss_head  # lazy: kernels import pallas
+    return loss_head(h, w2, b2, targets,
+                     np.asarray(pop.block_segment_ids),
+                     block_h=pop.block, block_b=block_b,
+                     interpret=interpret)
+
+
+# loss-head impls that bypass logits materialisation entirely; the name
+# mirrors FUSED_BD_IMPLS — deep.fused_loss routes through this registry
+LOSS_IMPLS = {
+    "xla": None,          # log_softmax over forward() logits (deep.fused_loss)
+    "fused": m3_loss_head,
+}
+FUSED_LOSS_IMPLS = frozenset(["fused"])

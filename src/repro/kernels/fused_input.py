@@ -1,0 +1,205 @@
+"""Fused input-layer kernel: dense input GEMM + per-member bias +
+per-segment activation in ONE Pallas pass (DESIGN.md §9).
+
+The mid layers got their §7 epilogue in kernels/fused_layer.py, but the
+INPUT projection — the one dense (non-block-diagonal) GEMM of the stack,
+shared x (B, F) against the stacked first-layer weight (H, F) — still ran
+as an XLA dot followed by a standalone seg_act pass: z0 round-trips
+through HBM twice.  This kernel folds the same epilogue into the input
+GEMM:
+
+  forward   y  = act(x·W_in^T + b_in) · mask   (one kernel, z0 never in HBM)
+            g' = act'(x·W_in^T + b_in) · mask  (emitted instead of z0 when a
+                                               VJP will consume it)
+  backward  du = dy ⊙ g' formed in-register in ONE kernel that emits both
+            dx (du·W_in, accumulated across hidden tiles in an f32 scratch)
+            and dW_in (du^T·x, accumulated across batch tiles in an f32
+            scratch holding every hidden tile's slice).  db = Σ_b dy·g' is
+            one XLA fused reduce over arrays that exist anyway.
+
+Grid layout: the hidden axis is tiled at the population block size (the
+per-block activation id is scalar-prefetched, dispatched via lax.switch on
+the flush step, exactly like the mid layers); the feature axis F is tiled
+at ``block_f`` (the whole padded F when F ≤ 128, else 128 lanes) as the
+reduction dimension.
+
+Mixed precision: operand tiles may be bf16; accumulators and the bias add
+are always f32, outputs are cast back to the operand dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.block_diag import tpu_compiler_params
+from repro.kernels.fused_layer import _VAL_BRANCHES, _VAL_DERIV_BRANCHES
+
+
+def pick_block_f(f_pad: int) -> int:
+    """Feature-axis tile: whole (padded) F when it fits a lane register,
+    else 128-lane tiles."""
+    return f_pad if f_pad <= 128 else 128
+
+
+# --------------------------------------------------------------------- #
+# forward: dense GEMM + bias + activation epilogue                      #
+# --------------------------------------------------------------------- #
+
+def _make_fwd_kernel(with_deriv: bool):
+    def kernel(act_ref, x_ref, w_ref, b_ref, m_ref, *out_and_scratch):
+        if with_deriv:
+            y_ref, g_ref, acc_ref = out_and_scratch
+        else:
+            y_ref, acc_ref = out_and_scratch
+        t = pl.program_id(1)
+        kf = pl.program_id(2)
+        nf = pl.num_programs(2)
+
+        @pl.when(kf == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(kf == nf - 1)
+        def _epilogue():
+            u = acc_ref[...] + b_ref[...].astype(jnp.float32)
+            m = m_ref[...].astype(jnp.float32)
+            if with_deriv:
+                y, g = jax.lax.switch(act_ref[t], _VAL_DERIV_BRANCHES, u)
+                y_ref[...] = (y * m).astype(y_ref.dtype)
+                g_ref[...] = (g * m).astype(g_ref.dtype)
+            else:
+                y = jax.lax.switch(act_ref[t], _VAL_BRANCHES, u)
+                y_ref[...] = (y * m).astype(y_ref.dtype)
+    return kernel
+
+
+def fused_input_fwd(x: jax.Array, w: jax.Array, bias: jax.Array,
+                    mask: jax.Array, act_ids: jax.Array, *, block: int,
+                    block_b: int, with_deriv: bool,
+                    interpret: bool = False):
+    """x (B, F_pad), w (H, F_pad), bias/mask (1, H), per-block act ids
+    (H/block,) → y (B, H) [, g' (B, H) when ``with_deriv``]."""
+    b, f_pad = x.shape
+    h = w.shape[0]
+    block_f = pick_block_f(f_pad)
+    grid = (b // block_b, h // block, f_pad // block_f)
+    out_shape = [jax.ShapeDtypeStruct((b, h), x.dtype)]
+    out_specs = [pl.BlockSpec((block_b, block),
+                              lambda i, t, kf, act: (i, t))]
+    if with_deriv:
+        out_shape.append(jax.ShapeDtypeStruct((b, h), x.dtype))
+        out_specs.append(pl.BlockSpec((block_b, block),
+                                      lambda i, t, kf, act: (i, t)))
+    y = pl.pallas_call(
+        _make_fwd_kernel(with_deriv),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block_f),
+                             lambda i, t, kf, act: (i, kf)),
+                pl.BlockSpec((block, block_f),
+                             lambda i, t, kf, act: (t, kf)),
+                pl.BlockSpec((1, block), lambda i, t, kf, act: (0, t)),
+                pl.BlockSpec((1, block), lambda i, t, kf, act: (0, t)),
+            ],
+            out_specs=out_specs if with_deriv else out_specs[0],
+            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+        ),
+        out_shape=out_shape if with_deriv else out_shape[0],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary", "arbitrary"),
+            (block_b, block_f), (block, block_f), (1, block), (1, block),
+            (block_b, block), (block_b, block), (block_b, block)),
+        interpret=interpret,
+    )(act_ids, x, w, bias, mask)
+    return y
+
+
+# --------------------------------------------------------------------- #
+# backward: dx and dw in one pass, du = dy·g' in-register               #
+# --------------------------------------------------------------------- #
+
+def _bwd_kernel(dy_ref, g_ref, x_ref, w_ref, dx_ref, dw_ref,
+                dx_acc_ref, dw_acc_ref):
+    """Grid (kf, i, t): feature tile OUTER (each emits an independent dx /
+    dw column stripe), batch tile middle, hidden tile INNER.  dx
+    accumulates over the inner hidden tiles; dw accumulates over the
+    middle batch tiles in a per-hidden-tile slice of a (H, block_f)
+    scratch — the dw output block (t, kf) is revisited across i, and the
+    final (complete) store at i = nb−1 is sequentially the last writer."""
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+    blk = dy_ref.shape[1]
+
+    du = dy_ref[...] * g_ref[...]          # dz0 never exists outside
+                                           # this register
+    @pl.when(t == 0)
+    def _init_dx():
+        dx_acc_ref[...] = jnp.zeros_like(dx_acc_ref)
+
+    dx_acc_ref[...] += jax.lax.dot_general(
+        du, w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _flush_dx():
+        dx_ref[...] = dx_acc_ref[...].astype(dx_ref.dtype)
+
+    rows = pl.ds(t * blk, blk)
+    prev = dw_acc_ref[rows, :]
+    prev = jnp.where(i == 0, jnp.zeros_like(prev), prev)
+    acc = prev + jax.lax.dot_general(
+        du, x_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dw_acc_ref[rows, :] = acc
+    dw_ref[...] = acc.astype(dw_ref.dtype)
+
+
+def fused_input_bwd(dy: jax.Array, gp: jax.Array, x: jax.Array,
+                    w: jax.Array, *, block: int, block_b: int,
+                    interpret: bool = False):
+    """dy, g' (B, H), x (B, F_pad), w (H, F_pad) → (dx (B, F_pad),
+    dW (H, F_pad)) in ONE launch."""
+    b, h = dy.shape
+    f_pad = x.shape[1]
+    block_f = pick_block_f(f_pad)
+    grid = (f_pad // block_f, b // block_b, h // block)
+    dx, dw = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block), lambda kf, i, t: (i, t)),
+            pl.BlockSpec((block_b, block), lambda kf, i, t: (i, t)),
+            pl.BlockSpec((block_b, block_f), lambda kf, i, t: (i, kf)),
+            pl.BlockSpec((block, block_f), lambda kf, i, t: (t, kf)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_f), lambda kf, i, t: (i, kf)),
+            pl.BlockSpec((block, block_f), lambda kf, i, t: (t, kf)),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_b, block_f), jnp.float32),
+                        pltpu.VMEM((h, block_f), jnp.float32)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, f_pad), dy.dtype),
+            jax.ShapeDtypeStruct((h, f_pad), dy.dtype),
+        ],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary", "arbitrary"),
+            (block_b, block), (block_b, block), (block_b, block_f),
+            (block, block_f), (block_b, block_f), (block, block_f),
+            (block_b, block_f), (h, block_f)),
+        interpret=interpret,
+    )(dy, gp, x, w)
+    return dx, dw

@@ -12,11 +12,16 @@ still in VMEM:
             g' = act'(z + b) · mask           (the activation derivative,
                                                computed IN-REGISTER while z
                                                is live, emitted instead of z)
-  backward  du = dy ⊙ g'  fused INTO the transposed-GEMM (dx) and dw
-            kernels — each reads the (dy, g') tile pair and forms du on the
-            VPU right before the MXU contraction, so neither z nor dz ever
-            materialises in HBM in either direction.  db = Σ_b dy·g' is one
-            XLA fused reduce over arrays that exist anyway.
+  backward  du = dy ⊙ g'  fused into ONE two-level-grid kernel — the
+            transposed param step runs on the OUTER grid dimension, the
+            batch tile on the INNER one, and each (step, tile) invocation
+            forms du on the VPU right before both MXU contractions: the dx
+            accumulation (per-batch-tile running sums in a (B, blk) f32
+            scratch) and the dw parameter tile (accumulated across the
+            inner batch tiles) — so neither z nor dz ever materialises in
+            HBM in either direction, at ANY batch size, in a single launch.
+            db = Σ_b dy·g' is one XLA fused reduce over arrays that exist
+            anyway.
 
 Grid/tile metadata is the ragged flattened step layout shared with
 ``kernels/block_diag.py`` (``BlockDiagLayout``); the per-step activation id
@@ -142,89 +147,58 @@ def fused_layer_fwd(x: jax.Array, wb: jax.Array, bias: jax.Array,
 
 
 # --------------------------------------------------------------------- #
-# backward: dx (transposed GEMM) and dw, with du = dy·g' in-register    #
+# backward: ONE two-level-grid pass — dx and dw, du = dy·g' in-register #
 # --------------------------------------------------------------------- #
 
-def _dx_kernel(ins_ref, w_ids, outs_ref, first_ref, last_ref,
-               dy_ref, g_ref, wb_ref, dx_ref, acc_ref):
-    s = pl.program_id(1)
+def _dx_dw_kernel(ins_ref, w_ids, outs_ref, first_ref, last_ref, q_ref,
+                  dy_ref, g_ref, x_ref, wb_ref, dx_ref, dw_ref,
+                  dx_acc_ref, dw_acc_ref):
+    """ONE backward pass over a two-level grid (transposed param step s
+    OUTER, batch tile i INNER): at step (s, i) the du tile (dy·g', out-tile
+    space) and the x tile (= this step's dx output tile) are both live in
+    VMEM, so the step emits its dw parameter tile (du^T·x, accumulated
+    across the inner batch tiles in a (blk, blk) f32 scratch) alongside the
+    dx accumulation — the dw sweep costs zero extra kernel launches and
+    zero extra du reads at ANY batch size.
 
-    @pl.when(first_ref[s] == 1)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    dx state: each batch tile's running sum lives in its slice of a
+    (B, blk) f32 scratch, zeroed at the first step of a reduction run; the
+    running value is stored to the dx output block every step.  The block
+    index (i, outs[s]) changes every step so each store is copied back to
+    HBM, and since every output tile belongs to exactly ONE run per batch
+    tile, the run's last (complete) store is sequentially the final writer
+    of that block — partial sums written earlier are overwritten.
+    Pass-through steps write the appended dummy dw slot (sliced off by the
+    wrapper)."""
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+    bb = dy_ref.shape[0]
 
     du = dy_ref[...] * g_ref[...]          # the VPU fusion: dz tile never
-    acc_ref[...] += jax.lax.dot_general(   # exists outside this register
+                                           # exists outside this register
+    rows = pl.ds(i * bb, bb)
+    prev = dx_acc_ref[rows, :]
+    prev = jnp.where(first_ref[s] == 1, jnp.zeros_like(prev), prev)
+    acc = prev + jax.lax.dot_general(
         du, wb_ref[...][0],
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
+    dx_acc_ref[rows, :] = acc
+    dx_ref[...] = acc.astype(dx_ref.dtype)
 
-    @pl.when(last_ref[s] == 1)
-    def _flush():
-        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+    @pl.when(i == 0)
+    def _init_dw():
+        dw_acc_ref[...] = jnp.zeros_like(dw_acc_ref)
 
-
-def fused_layer_dx(dy: jax.Array, gp: jax.Array, wb_t: jax.Array,
-                   s_in_t, s_w_t, s_out_t, s_first_t, s_last_t, *,
-                   n_in_tiles: int, n_steps_t: int, block: int, block_b: int,
-                   interpret: bool = False) -> jax.Array:
-    """dy, g' (B, out_tiles·blk), wb_t transposed tiles → dx (B, in·blk)."""
-    b = dy.shape[0]
-    grid = (b // block_b, n_steps_t)
-    return pl.pallas_call(
-        _dx_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=5,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_b, block),
-                             lambda i, s, ins, w, outs, fr, la: (i, ins[s])),
-                pl.BlockSpec((block_b, block),
-                             lambda i, s, ins, w, outs, fr, la: (i, ins[s])),
-                pl.BlockSpec((1, block, block),
-                             lambda i, s, ins, w, outs, fr, la: (w[s], 0, 0)),
-            ],
-            out_specs=pl.BlockSpec(
-                (block_b, block),
-                lambda i, s, ins, w, outs, fr, la: (i, outs[s])),
-            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((b, n_in_tiles * block), dy.dtype),
-        compiler_params=tpu_compiler_params(
-            ("parallel", "arbitrary"),
-            (block_b, block), (block_b, block), (block, block),
-            (block_b, block), (block_b, block)),
-        interpret=interpret,
-    )(s_in_t, s_w_t, s_out_t, s_first_t, s_last_t, dy, gp, wb_t)
-
-
-def _dx_dw_kernel(ins_ref, w_ids, outs_ref, first_ref, last_ref, q_ref,
-                  dy_ref, g_ref, x_ref, wb_ref, dx_ref, dw_ref, acc_ref):
-    """ONE backward pass (single-batch-tile case): at transposed step s the
-    du tile (dy·g', out-tile space) and the x tile (= this step's dx output
-    tile) are both live in VMEM, so the step emits its dw parameter tile
-    (du^T·x) alongside the dx accumulation — the dw sweep costs zero extra
-    grid steps and zero extra du reads.  Pass-through steps write the
-    appended dummy dw slot (sliced off by the wrapper)."""
-    s = pl.program_id(1)
-
-    @pl.when(first_ref[s] == 1)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    du = dy_ref[...] * g_ref[...]
-    acc_ref[...] += jax.lax.dot_general(
-        du, wb_ref[...][0],
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    dw_ref[...] = jax.lax.dot_general(
+    dw_acc_ref[...] += jax.lax.dot_general(
         du, x_ref[...],
         dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(dw_ref.dtype)[None]
+        preferred_element_type=jnp.float32)
 
-    @pl.when(last_ref[s] == 1)
-    def _flush():
-        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+    @pl.when(i == nb - 1)
+    def _flush_dw():
+        dw_ref[...] = dw_acc_ref[...].astype(dw_ref.dtype)[None]
 
 
 def fused_layer_dx_dw(dy: jax.Array, gp: jax.Array, x: jax.Array,
@@ -232,14 +206,15 @@ def fused_layer_dx_dw(dy: jax.Array, gp: jax.Array, x: jax.Array,
                       s_last_t, s_q_t, *, n_in_tiles: int, n_steps_t: int,
                       n_param_blocks: int, block: int, block_b: int,
                       interpret: bool = False):
-    """Single-pass backward for B ≤ block_b: → (dx, dWB) where dWB has the
-    trailing dummy tile already sliced off."""
+    """Single-pass backward at any batch size: → (dx, dWB) where dWB has
+    the trailing dummy tile already sliced off.  Batch must be padded to a
+    block_b multiple (the wrapper's ``_pad_axis`` guarantees it)."""
     b = dy.shape[0]
-    if b != block_b:
+    if b % block_b:
         raise ValueError(
-            f"fused one-pass backward needs exactly one batch tile, got "
-            f"batch {b} with block_b {block_b}")
-    grid = (1, n_steps_t)
+            f"fused one-pass backward needs batch padded to a block_b "
+            f"multiple, got batch {b} with block_b {block_b}")
+    grid = (n_steps_t, b // block_b)
     dx, dwb = pl.pallas_call(
         _dx_dw_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -248,26 +223,27 @@ def fused_layer_dx_dw(dy: jax.Array, gp: jax.Array, x: jax.Array,
             in_specs=[
                 pl.BlockSpec(
                     (block_b, block),
-                    lambda i, s, ins, w, outs, fr, la, q: (i, ins[s])),
+                    lambda s, i, ins, w, outs, fr, la, q: (i, ins[s])),
                 pl.BlockSpec(
                     (block_b, block),
-                    lambda i, s, ins, w, outs, fr, la, q: (i, ins[s])),
+                    lambda s, i, ins, w, outs, fr, la, q: (i, ins[s])),
                 pl.BlockSpec(
                     (block_b, block),
-                    lambda i, s, ins, w, outs, fr, la, q: (i, outs[s])),
+                    lambda s, i, ins, w, outs, fr, la, q: (i, outs[s])),
                 pl.BlockSpec(
                     (1, block, block),
-                    lambda i, s, ins, w, outs, fr, la, q: (w[s], 0, 0)),
+                    lambda s, i, ins, w, outs, fr, la, q: (w[s], 0, 0)),
             ],
             out_specs=[
                 pl.BlockSpec(
                     (block_b, block),
-                    lambda i, s, ins, w, outs, fr, la, q: (i, outs[s])),
+                    lambda s, i, ins, w, outs, fr, la, q: (i, outs[s])),
                 pl.BlockSpec(
                     (1, block, block),
-                    lambda i, s, ins, w, outs, fr, la, q: (q[s], 0, 0)),
+                    lambda s, i, ins, w, outs, fr, la, q: (q[s], 0, 0)),
             ],
-            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((b, block), jnp.float32),
+                            pltpu.VMEM((block, block), jnp.float32)],
         ),
         out_shape=[
             jax.ShapeDtypeStruct((b, n_in_tiles * block), dy.dtype),
@@ -275,63 +251,10 @@ def fused_layer_dx_dw(dy: jax.Array, gp: jax.Array, x: jax.Array,
                                  dy.dtype),
         ],
         compiler_params=tpu_compiler_params(
-            ("parallel", "arbitrary"),
+            ("arbitrary", "arbitrary"),
             (block_b, block), (block_b, block), (block_b, block),
             (block, block), (block_b, block), (block, block),
-            (block_b, block)),
+            (b, block), (block, block)),
         interpret=interpret,
     )(s_in_t, s_w_t, s_out_t, s_first_t, s_last_t, s_q_t, dy, gp, x, wb_t)
     return dx, dwb[:n_param_blocks]
-
-
-def _dw_kernel(ot_ref, it_ref, dy_ref, g_ref, x_ref, dw_ref, acc_ref):
-    i = pl.program_id(1)
-    nb = pl.num_programs(1)
-
-    @pl.when(i == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    du = dy_ref[...] * g_ref[...]
-    acc_ref[...] += jax.lax.dot_general(
-        du, x_ref[...],
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-    @pl.when(i == nb - 1)
-    def _flush():
-        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)[None]
-
-
-def fused_layer_dw(dy: jax.Array, gp: jax.Array, x: jax.Array,
-                   wb_out_tile, wb_in_tile, *, n_param_blocks: int,
-                   block: int, block_b: int,
-                   interpret: bool = False) -> jax.Array:
-    """(dy·g')^T · x per parameter tile → dWB (n_param, blk, blk)."""
-    b = x.shape[0]
-    grid = (n_param_blocks, b // block_b)
-    return pl.pallas_call(
-        _dw_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_b, block),
-                             lambda q, i, ot, it: (i, ot[q])),
-                pl.BlockSpec((block_b, block),
-                             lambda q, i, ot, it: (i, ot[q])),
-                pl.BlockSpec((block_b, block),
-                             lambda q, i, ot, it: (i, it[q])),
-            ],
-            out_specs=pl.BlockSpec((1, block, block),
-                                   lambda q, i, ot, it: (q, 0, 0)),
-            scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((n_param_blocks, block, block),
-                                       dy.dtype),
-        compiler_params=tpu_compiler_params(
-            ("parallel", "arbitrary"),
-            (block_b, block), (block_b, block), (block_b, block),
-            (block, block), (block, block)),
-        interpret=interpret,
-    )(wb_out_tile, wb_in_tile, dy, gp, x)

@@ -15,7 +15,9 @@ import numpy as np
 
 from repro.kernels import block_diag as _bdk
 from repro.kernels import flash_attn as _flashk
+from repro.kernels import fused_input as _fik
 from repro.kernels import fused_layer as _flk
+from repro.kernels import loss_head as _lhk
 from repro.kernels import m3_matmul as _m3k
 from repro.kernels import moe_gemm as _moek
 from repro.kernels import seg_act as _segk
@@ -214,26 +216,15 @@ def _fused_bwd(layout, acts_s, mask_s, block_b, interpret, res, dy):
     import numpy as _np
     h, wb, gp = res
     ids_t = _bd_ids(layout, transposed=True)
-    if dy.shape[0] == block_b:
-        # one batch tile → ONE backward pass: dw tiles are emitted at the
-        # dx steps where their (du, x) pair is already in VMEM
-        dh, dwb = _flk.fused_layer_dx_dw(
-            dy, gp, h, _bd_transposed_tiles(wb, layout), *ids_t,
-            jnp.asarray(_np.asarray(layout.s_q_t, _np.int32)),
-            n_in_tiles=layout.n_in_tiles, n_steps_t=layout.n_steps_t,
-            n_param_blocks=layout.n_param_blocks, block=layout.block,
-            block_b=block_b, interpret=interpret)
-    else:
-        dh = _flk.fused_layer_dx(
-            dy, gp, _bd_transposed_tiles(wb, layout), *ids_t,
-            n_in_tiles=layout.n_in_tiles, n_steps_t=layout.n_steps_t,
-            block=layout.block, block_b=block_b, interpret=interpret)
-        dwb = _flk.fused_layer_dw(
-            dy, gp, h,
-            jnp.asarray(_np.asarray(layout.wb_out_tile, _np.int32)),
-            jnp.asarray(_np.asarray(layout.wb_in_tile, _np.int32)),
-            n_param_blocks=layout.n_param_blocks, block=layout.block,
-            block_b=block_b, interpret=interpret)
+    # ONE backward pass at any batch size (two-level grid: transposed param
+    # step outer, batch tile inner) — dw tiles are emitted at the dx steps
+    # where their (du, x) pair is already in VMEM
+    dh, dwb = _flk.fused_layer_dx_dw(
+        dy, gp, h, _bd_transposed_tiles(wb, layout), *ids_t,
+        jnp.asarray(_np.asarray(layout.s_q_t, _np.int32)),
+        n_in_tiles=layout.n_in_tiles, n_steps_t=layout.n_steps_t,
+        n_param_blocks=layout.n_param_blocks, block=layout.block,
+        block_b=block_b, interpret=interpret)
     # bias cotangent: one fused XLA reduce over tiles that exist anyway
     db = (dy.astype(jnp.float32) * gp.astype(jnp.float32)).sum(axis=0)
     return dh, dwb, db.astype(jnp.float32)
@@ -276,6 +267,73 @@ def fused_layer(h: jax.Array, wb: jax.Array, b_eff: jax.Array, layout,
     hp, b0 = _pad_axis(h, 0, block_b)
     y = _fused_core(hp, wb, b_eff, layout, _StaticArray(s_act, np.int32),
                     _StaticArray(mask, np.float32), block_b, interpret)
+    return y[:b0]
+
+
+# --------------------------------------------------------------------- #
+# fused input layer: dense GEMM + bias + activation epilogue            #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fin_core(x, w, b, acts_s, mask_s, block, block_b, interpret):
+    """Primal (no-grad contexts, e.g. eval): single-output kernel."""
+    return _fik.fused_input_fwd(
+        x, w, jnp.reshape(b, (1, -1)).astype(jnp.float32),
+        jnp.asarray(mask_s.arr).reshape(1, -1), jnp.asarray(acts_s.arr),
+        block=block, block_b=block_b, with_deriv=False, interpret=interpret)
+
+
+def _fin_fwd(x, w, b, acts_s, mask_s, block, block_b, interpret):
+    y, gp = _fik.fused_input_fwd(
+        x, w, jnp.reshape(b, (1, -1)).astype(jnp.float32),
+        jnp.asarray(mask_s.arr).reshape(1, -1), jnp.asarray(acts_s.arr),
+        block=block, block_b=block_b, with_deriv=True, interpret=interpret)
+    return y, (x, w, gp)
+
+
+def _fin_bwd(acts_s, mask_s, block, block_b, interpret, res, dy):
+    x, w, gp = res
+    dx, dw = _fik.fused_input_bwd(dy, gp, x, w, block=block,
+                                  block_b=block_b, interpret=interpret)
+    # bias cotangent: one fused XLA reduce over tiles that exist anyway
+    db = (dy.astype(jnp.float32) * gp.astype(jnp.float32)).sum(axis=0)
+    return dx, dw, db.astype(jnp.float32)
+
+
+_fin_core.defvjp(_fin_fwd, _fin_bwd)
+
+
+def fused_input(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+                block_act_ids: np.ndarray, mask: np.ndarray, *,
+                block: int, block_b: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """Dense input projection + bias + per-segment activation + padding
+    mask in one Pallas pass (kernels/fused_input.py; DESIGN.md §9);
+    differentiable (fused one-pass custom VJP); pads B and F.
+
+    x (B, F), w_in (H, F) the stacked first-layer weight, ``b_in`` (H,),
+    ``block_act_ids`` the first hidden layer's per-block activation ids,
+    ``mask`` its hidden mask → (B, H) of ``act(x·W_in^T + b_in)·mask``.
+    H must already be block-aligned (Population guarantees this).
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    interpret = _resolve_interpret(interpret)
+    h = w_in.shape[0]
+    if h % block:
+        raise ValueError(f"hidden axis {h} not {block}-aligned")
+    if x.shape[1] != w_in.shape[1]:
+        raise ValueError(f"feature axis {x.shape[1]} != {w_in.shape[1]}")
+    if b_in.shape != (h,):
+        raise ValueError(f"bias shape {b_in.shape} != ({h},)")
+    block_b = min(block_b, max(8, 1 << (x.shape[0] - 1).bit_length()))
+    xp, b0 = _pad_axis(x, 0, block_b)
+    # feature padding: whole-F lane register when small, 128-lane reduction
+    # tiles when large (pick_block_f)
+    fmult = 8 if x.shape[1] <= 128 else 128
+    xp, _ = _pad_axis(xp, 1, fmult)
+    wp, _ = _pad_axis(w_in, 1, fmult)
+    y = _fin_core(xp, wp, b_in, _StaticArray(block_act_ids, np.int32),
+                  _StaticArray(mask, np.float32), block, block_b, interpret)
     return y[:b0]
 
 
@@ -345,6 +403,78 @@ def seg_act(h: jax.Array, block_act_ids: np.ndarray, mask: np.ndarray, *,
                   _StaticArray(mask, np.float32), block_h, block_b,
                   interpret)
     return y[:b0]
+
+
+# --------------------------------------------------------------------- #
+# fused loss head: M3 projection + softmax-XE + dlogits                 #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _lh_core(h, w2, b2, tgt, seg_s, b_real, block_h, block_b, interpret):
+    """Primal (no-grad contexts): per-member losses only, dlogits_base is
+    only emitted when a VJP will consume it."""
+    per = _lhk.loss_head_fwd(
+        h, w2, b2, tgt, jnp.asarray(seg_s.arr), b2.shape[0],
+        b_real=b_real, block_h=block_h, block_b=block_b, with_dl=False,
+        interpret=interpret)
+    return per[0]
+
+
+def _lh_fwd(h, w2, b2, tgt, seg_s, b_real, block_h, block_b, interpret):
+    per, dl = _lhk.loss_head_fwd(
+        h, w2, b2, tgt, jnp.asarray(seg_s.arr), b2.shape[0],
+        b_real=b_real, block_h=block_h, block_b=block_b, with_dl=True,
+        interpret=interpret)
+    return per[0], (h, w2, dl)
+
+
+def _lh_bwd(seg_s, b_real, block_h, block_b, interpret, res, dper):
+    h, w2, dl = res
+    dper = dper.astype(jnp.float32)
+    dh, dw = _lhk.loss_head_bwd(
+        dper.reshape(1, -1), dl, h, w2, jnp.asarray(seg_s.arr),
+        block_h=block_h, block_b=block_b, interpret=interpret)
+    # bias cotangent: one fused XLA reduce over the array that exists anyway
+    db = dper[:, None] * dl.sum(axis=0)
+    # integer targets carry a float0 cotangent
+    dt = np.zeros((h.shape[0], 1), jax.dtypes.float0)
+    return dh, dw, db, dt
+
+
+_lh_core.defvjp(_lh_fwd, _lh_bwd)
+
+
+def loss_head(h: jax.Array, w_out: jax.Array, b_out: jax.Array,
+              targets: jax.Array, block_seg_ids: np.ndarray, *,
+              block_h: int, block_b: int = 128,
+              interpret: bool | None = None) -> jax.Array:
+    """Output projection + per-member softmax cross-entropy in one Pallas
+    pass (kernels/loss_head.py; DESIGN.md §9); differentiable (fused
+    one-pass custom VJP emitting dh and dW_out together); pads B and O.
+
+    h (B, H), w_out (O, H), b_out (P, O), integer targets (B,) →
+    per-member mean NLL (P,) f32 — ``per.sum()`` is the scalar training
+    loss and matches the XLA log_softmax reference to f32 tolerance.
+    H must already be block_h-aligned (Population guarantees this).
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    interpret = _resolve_interpret(interpret)
+    if h.shape[1] % block_h:
+        raise ValueError(f"hidden axis {h.shape[1]} not {block_h}-aligned")
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    # pad rows carry target −1 → zero loss weight, zero dlogits
+    tp = jnp.pad(targets.astype(jnp.int32).reshape(-1, 1),
+                 ((0, hp.shape[0] - b0), (0, 0)), constant_values=-1)
+    # O padding: −1e30 bias columns get zero softmax mass (and zero dW rows)
+    w2p, o0 = _pad_axis(w_out, 0, 128 if not interpret else 1)
+    pad_o = w2p.shape[0] - o0
+    b2p = b_out.astype(jnp.float32)
+    if pad_o:
+        b2p = jnp.pad(b2p, ((0, 0), (0, pad_o)), constant_values=-1e30)
+    return _lh_core(hp, w2p, b2p, tp,
+                    _StaticArray(block_seg_ids, np.int32), b0, block_h,
+                    block_b, interpret)
 
 
 # --------------------------------------------------------------------- #

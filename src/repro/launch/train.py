@@ -426,7 +426,16 @@ def run_population(arch, args):
 
         train_meta = {"compute_dtype": args.compute_dtype,
                       "bd_impl": args.bd_impl, "act_impl": args.act_impl,
-                      "optimizer": opt_record}
+                      "optimizer": opt_record,
+                      "lr_schedule": args.lr_schedule}
+
+        # ---- LR schedule (PR-6 follow-up): a per-step multiplier threaded
+        # through the scanned chunk as a carried global-step counter, so a
+        # chunked run anneals identically to a per-step loop and --resume
+        # re-enters the schedule at the right step.  The schedule composes
+        # with --per-member-lr (it scales the member vector uniformly).
+        lr_sched = (warmup_cosine(1.0, args.warmup, args.steps)
+                    if args.lr_schedule == "warmup_cosine" else None)
 
         total = args.steps
         print_every = max(50 // scan, 1)
@@ -444,7 +453,8 @@ def run_population(arch, args):
                 lp, optimizer=opt, grad_clip=grad_clip,
                 m3_impl=args.m3_impl, bd_impl=args.bd_impl,
                 act_impl=args.act_impl, scan_steps=scan,
-                compute_dtype=args.compute_dtype)
+                compute_dtype=args.compute_dtype,
+                lr_schedule=lr_sched)
             sh_x, sh_y = population_batch_shardings(mesh, args.batch)
             n_chunks = (seg_end - seg_start + scan - 1) // scan
 
@@ -454,8 +464,14 @@ def run_population(arch, args):
                 bs = [task.batch(g0 + i, args.batch) for i in range(n)]
                 xs = jax.device_put(np.stack([b[0] for b in bs]), sh_x)
                 ys = jax.device_put(np.stack([b[1] for b in bs]), sh_y)
+                # with a schedule, the chunk takes the chunk-start GLOBAL
+                # step and carries it through the scan — g0 is derived from
+                # the segment, so crash replay and --resume stay consistent
+                sched_args = ((jnp.asarray(g0, jnp.int32),) if lr_sched
+                              else ())
                 p, st, _losses, pers, gnorms = chunk_fn(
-                    state["params"], state["extra"], xs, ys, lr)
+                    state["params"], state["extra"], xs, ys, lr,
+                    *sched_args)
                 # mean over REAL members only — shard-pad fillers train too
                 # but must not dilute the reported loss (a sharded run
                 # prints the same numbers as its single-device twin)
@@ -659,6 +675,14 @@ def main(argv=None):
                          "dispatch per chunk)")
     ap.add_argument("--per-member-lr", action="store_true",
                     help="paper §7: every member gets its own step size")
+    ap.add_argument("--lr-schedule", default="constant",
+                    choices=["constant", "warmup_cosine"],
+                    help="population path: per-step LR multiplier threaded "
+                         "through the scanned chunk as a carried global-"
+                         "step counter (warmup over --warmup steps, cosine "
+                         "decay to 10%% over --steps).  Composes with "
+                         "--per-member-lr; 'constant' keeps the historical "
+                         "schedule-free chunk bit-exact")
     ap.add_argument("--optimizer", default=None,
                     choices=["sgd", "momentum", "adamw", "adafactor"],
                     help="population path: the stateful-optimizer engine "

@@ -1,0 +1,91 @@
+"""Fused input layer (kernels/fused_input.py, DESIGN.md §9): dense
+input-feature matmul + bias + per-segment activation + padding mask in ONE
+Pallas pass, replacing the XLA dot + standalone seg_act epilogue for
+layer 0 of the fused population path.  Interpret-mode equivalence vs the
+XLA reference (``input_xla``) — values and per-operand gradients — on
+ragged layouts, the wide-feature (F > 128, tiled reduction) path, and the
+registry's default routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deep import (IN_IMPLS, FUSED_IN_IMPLS, _resolve_in_impl,
+                             init_params, input_fused, input_xla)
+from repro.core.population import LayeredPopulation
+
+LP = LayeredPopulation(20, 3, ((5, 3), (12, 9), (7,), (17, 9, 5)),
+                       ("relu", "gelu", "tanh", "mish"), block=8)
+# in_features > 128 exercises the tiled (block_f=128) reduction grid and
+# the feature-axis padding (177 → 256) whose pad VJP must slice cotangents
+LP_WIDE = LayeredPopulation(177, 3, ((9, 4), (24, 16), (6,)),
+                            ("selu", "hardshrink", "sigmoid"), block=8)
+
+
+def _inputs(lp, b=9, seed=0):
+    params = init_params(jax.random.PRNGKey(seed), lp)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, lp.in_features))
+    return x, params["w_in"], params["b_in"]
+
+
+def test_registry_has_fused():
+    assert set(IN_IMPLS) == {"xla", "fused"}
+    assert "fused" in FUSED_IN_IMPLS
+
+
+def test_default_routing_follows_bd_impl():
+    assert _resolve_in_impl(None, "fused") == "fused"
+    assert _resolve_in_impl(None, "einsum") == "xla"
+    assert _resolve_in_impl(None, "pallas") == "xla"
+    assert _resolve_in_impl("xla", "fused") == "xla"   # explicit override
+    with pytest.raises(ValueError, match="in_impl"):
+        _resolve_in_impl("cutlass", "fused")
+
+
+@pytest.mark.parametrize("lp", [LP, LP_WIDE], ids=["narrow", "wide_f"])
+def test_forward_matches_xla(lp):
+    x, w, b = _inputs(lp)
+    ye = input_xla(x, w, b, lp)
+    yf = input_fused(x, w, b, lp)
+    np.testing.assert_allclose(np.asarray(ye), np.asarray(yf),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("lp", [LP, LP_WIDE], ids=["narrow", "wide_f"])
+def test_grads_match_xla(lp):
+    """dx, dW_in, db_in from the one-pass fused backward vs XLA autodiff —
+    the feature-axis pad cotangent must slice back to the caller's F."""
+    x, w, b = _inputs(lp, seed=3)
+    ge = jax.grad(lambda *a: (input_xla(*a, lp) ** 2).sum(),
+                  argnums=(0, 1, 2))(x, w, b)
+    gf = jax.grad(lambda *a: (input_fused(*a, lp) ** 2).sum(),
+                  argnums=(0, 1, 2))(x, w, b)
+    for a, f in zip(ge, gf):
+        assert f.shape == a.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_grads_match_multi_batch_tile():
+    """B > block_b → several inner batch tiles: dW_in accumulates across
+    them (the stale-overwrite flush pattern), dx stays per-tile direct."""
+    x, w, b = _inputs(LP, b=300, seed=5)
+    ge = jax.grad(lambda *a: (input_xla(*a, LP) ** 2).sum(),
+                  argnums=(0, 1, 2))(x, w, b)
+    gf = jax.grad(lambda *a: (input_fused(*a, LP, block_b=128) ** 2).sum(),
+                  argnums=(0, 1, 2))(x, w, b)
+    for a, f in zip(ge, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_operands_f32_epilogue():
+    """bf16 x/W_in tiles, f32 accumulator + f32 bias/activation epilogue:
+    tracks the XLA bf16 reference within bf16 tolerance."""
+    x, w, b = _inputs(LP, seed=7)
+    x16, w16 = x.astype(jnp.bfloat16), w.astype(jnp.bfloat16)
+    ye = input_xla(x16, w16, b, LP)
+    yf = input_fused(x16, w16, b, LP)
+    np.testing.assert_allclose(np.asarray(ye, dtype=np.float32),
+                               np.asarray(yf, dtype=np.float32),
+                               rtol=2e-2, atol=2e-2)

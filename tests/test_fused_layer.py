@@ -1,9 +1,11 @@
-"""Fused mid-layer kernel (kernels/fused_layer.py, DESIGN.md §7):
+"""Fused mid-layer kernel (kernels/fused_layer.py, DESIGN.md §7/§9):
 projection + bias + per-segment activation in one Pallas pass, with the
-fused backward (dy·act'(z) formed in-register inside the transposed-GEMM /
-dw kernels).  Interpret-mode equivalence vs the einsum reference — values
-AND gradients — across every paper activation, ragged segment layouts, the
-shard_pad filler-member case, and the bf16 mixed-precision policy."""
+ONE-PASS backward (dy·act'(z) formed in-register inside a two-level
+param-tile × batch-tile grid that emits dx AND dw from a single launch at
+any batch size).  Interpret-mode equivalence vs the einsum reference —
+values AND gradients — across every paper activation, ragged segment
+layouts, multi-batch-tile shapes (B > block_b), the shard_pad
+filler-member case, and the bf16 mixed-precision policy."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -56,9 +58,11 @@ def test_grad_matches_einsum_every_activation():
             np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6), ge, gf)
 
 
-def test_grad_matches_multi_batch_tile_fallback():
-    """Batch > 128 pads to several batch tiles → the separate dx/dw
-    backward kernels (the one-pass dx+dw fusion needs a single tile)."""
+def test_grad_matches_multi_batch_tile_one_pass():
+    """Batch > 128 pads to several batch tiles → the TWO-LEVEL-GRID
+    one-pass backward (param-tile outer × batch-tile inner, dx and dw
+    accumulated in-register across the inner dimension, DESIGN.md §9) —
+    every paper activation, still a single dx+dw launch."""
     params, x, y = _params_and_batch(LP_ALL, b=160, seed=5)
 
     def loss(impl):
@@ -69,6 +73,59 @@ def test_grad_matches_multi_batch_tile_fallback():
     jax.tree.map(
         lambda a, b: np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6), ge, gf)
+
+
+def test_grad_matches_large_batch_direct_kernel():
+    """B=1024 with block_b=128 (8 inner batch tiles) straight through the
+    mid-layer custom-VJP primitive on a ragged MULTI-BUCKET layout: the
+    §9 acceptance shape for the two-level grid, per-operand grads vs the
+    einsum+activation reference."""
+    lp = LayeredPopulation(5, 2, ((11, 3, 5), (4,), (24, 16), (9, 9)),
+                           ("gelu", "sigmoid", "tanh", "relu"), block=8)
+    params = init_params(jax.random.PRNGKey(7), lp)
+    w, bia = params["mid"][0]["w"], params["mid"][0]["b"]
+    h = jax.random.normal(jax.random.PRNGKey(8),
+                          (1024, lp.layer_pop(0).total_hidden))
+    from repro.core.deep import _act
+
+    def ref(hh, ww, bb):
+        z = block_diag_matmul(hh, ww, lp, 0, impl="einsum")
+        z = z + bb * jnp.asarray(lp.active_unit_mask(1), jnp.float32)
+        return _act(lp, 1, z, "sliced")
+
+    def fus(hh, ww, bb):
+        return block_diag_matmul(hh, ww, lp, 0, impl="fused", bias=bb,
+                                 block_b=128)
+
+    np.testing.assert_allclose(np.asarray(ref(h, w, bia)),
+                               np.asarray(fus(h, w, bia)),
+                               rtol=1e-5, atol=1e-6)
+    ge = jax.grad(lambda *a: (ref(*a) ** 2).sum(), argnums=(0, 1, 2))(
+        h, w, bia)
+    gf = jax.grad(lambda *a: (fus(*a) ** 2).sum(), argnums=(0, 1, 2))(
+        h, w, bia)
+    jax.tree.map(
+        lambda a_, b_: np.testing.assert_allclose(
+            np.asarray(a_), np.asarray(b_), rtol=1e-4, atol=1e-4),
+        ge, gf)
+
+
+def test_bf16_grad_multi_batch_tile():
+    """The two-level-grid backward under the bf16 policy at B > block_b:
+    bf16 operands, f32 accumulators/grads — fused tracks einsum within
+    bf16 tolerance across the batch-tile loop (accumulator dtype bugs
+    amplify with more inner steps, so this is where they'd show)."""
+    params, x, y = _params_and_batch(LP_ALL, b=160, seed=11)
+    ge = jax.grad(lambda p: fused_loss(p, x, y, LP_ALL, "bucketed",
+                                       "einsum", "sliced",
+                                       "bfloat16")[0])(params)
+    gf = jax.grad(lambda p: fused_loss(p, x, y, LP_ALL, "bucketed",
+                                       "fused", "pallas",
+                                       "bfloat16")[0])(params)
+    for a, b in zip(jax.tree.leaves(ge), jax.tree.leaves(gf)):
+        assert b.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-1, atol=5e-2)
 
 
 @pytest.mark.parametrize("widths,acts,block", [

@@ -1,0 +1,106 @@
+"""Fused loss head (kernels/loss_head.py, DESIGN.md §9): output projection
+(M3) + per-member softmax cross-entropy + dlogits in ONE Pallas pass — the
+logits never reach HBM.  Interpret-mode equivalence vs the XLA reference
+(m3 + log_softmax) for the per-member losses and the h/W_out/b_out
+gradients, including non-uniform per-member cotangents, multi-batch-tile
+shapes, and bf16 operands."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.activations import ACTIVATION_ORDER
+from repro.core.deep import init_params
+from repro.core.m3 import (FUSED_LOSS_IMPLS, LOSS_IMPLS, m3, m3_loss_head)
+from repro.core.population import LayeredPopulation
+
+_WIDTHS = ((5, 3), (12, 9), (7,), (17, 9, 5), (8, 8),
+           (5, 3), (3, 11, 2), (24, 16), (4,), (9, 9, 9))
+LP = LayeredPopulation(6, 3, _WIDTHS, ACTIVATION_ORDER, block=8)
+POP = LP.layer_pop(LP.depth - 1)
+
+
+def _head_inputs(b=9, seed=0):
+    params = init_params(jax.random.PRNGKey(seed), LP)
+    h = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (b, POP.total_hidden))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 2), (b,), 0,
+                           LP.out_features)
+    return h, params["w_out"], params["b_out"], y
+
+
+def _per_ref(h, w2, b2, y):
+    """The pre-§9 XLA loss head: M3 logits in HBM + log_softmax + NLL."""
+    logits = m3(h, w2, POP, impl="bucketed") + b2
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None, None], axis=2)[:, :, 0]
+    return nll.mean(axis=0)
+
+
+def test_registry():
+    assert set(LOSS_IMPLS) == {"xla", "fused"}
+    assert "fused" in FUSED_LOSS_IMPLS
+
+
+def test_per_member_loss_matches_xla():
+    h, w2, b2, y = _head_inputs()
+    pe = _per_ref(h, w2, b2, y)
+    pf = m3_loss_head(h, w2, b2, y, POP)
+    assert pf.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(pe), np.asarray(pf),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grads_match_xla():
+    h, w2, b2, y = _head_inputs(seed=3)
+    ge = jax.grad(lambda *a: _per_ref(*a, y).sum(),
+                  argnums=(0, 1, 2))(h, w2, b2)
+    gf = jax.grad(lambda *a: m3_loss_head(*a, y, POP).sum(),
+                  argnums=(0, 1, 2))(h, w2, b2)
+    for a, f in zip(ge, gf):
+        assert f.shape == a.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_grads_with_per_member_cotangent():
+    """A NON-uniform per-member cotangent (the real caller is per.sum(),
+    but selection/halving code may weight members): the backward must
+    scale each member's dlogits tile by ITS d_per, not a shared scalar."""
+    h, w2, b2, y = _head_inputs(seed=5)
+    wts = jnp.linspace(0.1, 2.0, POP.num_members)
+    ge = jax.grad(lambda *a: (_per_ref(*a, y) * wts).sum(),
+                  argnums=(0, 1, 2))(h, w2, b2)
+    gf = jax.grad(lambda *a: (m3_loss_head(*a, y, POP) * wts).sum(),
+                  argnums=(0, 1, 2))(h, w2, b2)
+    for a, f in zip(ge, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_multi_batch_tile():
+    """B > block_b (300 → 3 padded batch tiles at block_b=128): per-member
+    means and grads stay exact — pad rows carry target −1 and contribute
+    zero loss / zero dlogits."""
+    h, w2, b2, y = _head_inputs(b=300, seed=7)
+    pe = _per_ref(h, w2, b2, y)
+    pf = m3_loss_head(h, w2, b2, y, POP)
+    np.testing.assert_allclose(np.asarray(pe), np.asarray(pf),
+                               rtol=1e-5, atol=1e-6)
+    ge = jax.grad(lambda hh: _per_ref(hh, w2, b2, y).sum())(h)
+    gf = jax.grad(lambda hh: m3_loss_head(hh, w2, b2, y, POP).sum())(h)
+    np.testing.assert_allclose(np.asarray(ge), np.asarray(gf),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_bf16_operands_f32_loss():
+    """bf16 h/W_out tiles: the logits accumulator, softmax math, and the
+    per-member losses stay f32; the result tracks the XLA bf16 reference
+    within bf16 tolerance."""
+    h, w2, b2, y = _head_inputs(seed=9)
+    h16, w16 = h.astype(jnp.bfloat16), w2.astype(jnp.bfloat16)
+    pe = _per_ref(h16, w16, b2, y)
+    pf = m3_loss_head(h16, w16, b2, y, POP)
+    assert pf.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(pe, dtype=np.float32),
+                               np.asarray(pf), rtol=5e-2, atol=5e-2)
