@@ -388,6 +388,147 @@ def run_fused(args):
     return out
 
 
+def run_serve(args):
+    """Forward-only serving bench (DESIGN.md §10) → BENCH_serve.json.
+    Three proofs in one artifact:
+
+      1. LAUNCH BUDGET — ``forward(infer=True)`` traces to exactly depth+1
+         Pallas launches, every one single-output (no residual buffer can
+         exist in the program).  Overrun or a 2-output launch ABORTS.
+      2. FORWARD-ONLY vs TRAINING-FORWARD REUSE — the infer path against
+         what serving without it would run: the training step's VJP-forward
+         (``jax.vjp(forward)[0]``), whose kernels emit g' residuals that
+         stay live because the jaxpr cannot drop one output of a used
+         pallas_call.  The infer path must be STRICTLY better on wall AND
+         HBM (ABORT otherwise); the HBM delta is the residual footprint,
+         verifiably gone.
+      3. SERVING ENGINE — p50/p99 latency + req/s vs ensemble size
+         (all / top-k / best-1) through ``PopulationServer``'s batching
+         loop, member set published from a calibration leaderboard."""
+    from repro.core.ensemble import real_slots
+    from repro.data.synthetic import TabularTask
+    from repro.launch.launch_count import (count_pallas_launches,
+                                           fused_infer_budget,
+                                           max_eqn_outputs)
+    from repro.launch.serve_population import PopulationServer
+
+    _require_impl("fused")
+    lp, mesh, shardings, ctx = _deep_bench_population(args)
+    params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+    if shardings is not None:
+        params = jax.device_put(params, shardings)
+    budget = fused_infer_budget(lp.depth)
+    # the forward proof runs at its own batch: residual buffers scale with
+    # B (g' is (B, H_out) per layer), so the honest comparison point is a
+    # serving-slab batch where reuse actually pays for them — at tiny B
+    # both programs are noise-sized and the delta is unmeasurable
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (args.fwd_batch, lp.in_features))
+
+    def infer_fwd(p):
+        return deep_mod.forward(p, x, lp, bd_impl="fused",
+                                act_impl="pallas", infer=True)
+
+    def train_reuse_fwd(p):
+        # serving off the training step's forward: the VJP-forward keeps
+        # every kernel's residual output alive alongside the logits
+        return jax.vjp(lambda q: deep_mod.forward(
+            q, x, lp, bd_impl="fused", act_impl="pallas"), p)[0]
+
+    with ctx:
+        got = count_pallas_launches(infer_fwd, params)
+        if got != budget["total"]:
+            raise SystemExit(
+                f"infer launch budget EXCEEDED: counted {got} vs "
+                f"{budget['total']} (= depth+1, DESIGN.md §10)")
+        worst = max_eqn_outputs(infer_fwd, params)
+        if worst > 1:
+            raise SystemExit(
+                f"infer forward emits a {worst}-output pallas_call — a "
+                "residual buffer survived in the serving program")
+        reuse_worst = max_eqn_outputs(train_reuse_fwd, params)
+        print(f"# infer launches {got} (budget {budget['total']}); "
+              f"max pallas outputs: infer {worst}, train-reuse "
+              f"{reuse_worst}", flush=True)
+
+        def best_of(fn, iters=3, reps=5):
+            f = jax.jit(fn)
+            jax.block_until_ready(f(params))
+            walls = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    out = f(params)
+                jax.block_until_ready(out)
+                walls.append((time.perf_counter() - t0) / iters)
+            stats = analyze(f.lower(params).compile().as_text())
+            return min(walls), stats
+
+        i_wall, i_stats = best_of(infer_fwd)
+        r_wall, r_stats = best_of(train_reuse_fwd)
+        fwd_cmp = {
+            "infer": {"wall_ms": round(i_wall * 1e3, 2),
+                      "hbm_mb": round(i_stats["hbm_bytes"] / 1e6, 2)},
+            "train_reuse": {"wall_ms": round(r_wall * 1e3, 2),
+                            "hbm_mb": round(r_stats["hbm_bytes"] / 1e6, 2)},
+            "speedup": round(r_wall / max(i_wall, 1e-12), 3),
+            "residual_hbm_mb": round(
+                (r_stats["hbm_bytes"] - i_stats["hbm_bytes"]) / 1e6, 2),
+        }
+        print(f"# forward-only {fwd_cmp['infer']['wall_ms']} ms / "
+              f"{fwd_cmp['infer']['hbm_mb']} MB vs train-reuse "
+              f"{fwd_cmp['train_reuse']['wall_ms']} ms / "
+              f"{fwd_cmp['train_reuse']['hbm_mb']} MB "
+              f"({fwd_cmp['speedup']}x, residuals "
+              f"{fwd_cmp['residual_hbm_mb']} MB)", flush=True)
+        if i_wall >= r_wall or i_stats["hbm_bytes"] >= r_stats["hbm_bytes"]:
+            raise SystemExit(
+                "forward-only path does NOT strictly beat training-forward "
+                f"reuse: {fwd_cmp} — the §10 residual-free contract "
+                "regressed")
+
+        # ---- serving engine: latency/throughput vs ensemble size
+        server = PopulationServer(
+            params, lp, mesh=mesh, batch=args.batch, topk=args.topk,
+            max_latency_ms=args.max_latency_ms)
+        task = TabularTask(512 + args.serve_requests, lp.in_features,
+                           n_classes=lp.out_features, seed=0)
+        (xc, yc), (xr, _) = task.split(
+            frac=512 / (512 + args.serve_requests))
+        board = server.publish(xc, yc)
+        serve_rows = {}
+        print("mode,members,p50_ms,p99_ms,req_per_s")
+        for mode in ("all", "topk", "best1"):
+            r = server.run(xr[:args.serve_requests], mode)
+            serve_rows[mode] = {
+                "members_served": r["members_served"],
+                "requests": r["requests"],
+                "p50_ms": round(r["p50_ms"], 3),
+                "p99_ms": round(r["p99_ms"], 3),
+                "req_per_s": round(r["req_per_s"], 1)}
+            print(f"{mode},{r['members_served']},{r['p50_ms']:.2f},"
+                  f"{r['p99_ms']:.2f},{r['req_per_s']:.0f}", flush=True)
+
+    out = {"bench": "serve", "population": lp.describe(),
+           "batch": args.batch, "fwd_batch": args.fwd_batch,
+           "topk": args.topk,
+           "max_latency_ms": args.max_latency_ms,
+           "members": real_slots(lp),
+           "launch_budget": {**budget, "counted": got,
+                             "max_pallas_outputs": worst,
+                             "train_reuse_max_outputs": reuse_worst},
+           "forward_only_vs_train_reuse": fwd_cmp,
+           "serve": serve_rows,
+           "board_top3": board[:3],
+           "sharded": bool(args.sharded),
+           "mesh": dict(mesh.shape) if mesh else None}
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+        print(f"# wrote {args.json_out}")
+    return out
+
+
 def _tree_mb(abs_tree) -> float:
     """Static HBM residency of an abstract tree (ShapeDtypeStructs), MB."""
     return sum(int(np.prod(l.shape)) * l.dtype.itemsize
@@ -653,6 +794,24 @@ def main(argv=None):
     ap.add_argument("--scan-steps", type=int, default=8,
                     help="--deep: chunk size for the scan-vs-loop "
                          "train-step bench")
+    ap.add_argument("--serve", action="store_true",
+                    help="bench the forward-only serving path: infer "
+                         "launch budget (depth+1, no residual outputs), "
+                         "forward-only vs training-forward-reuse wall/HBM, "
+                         "and p50/p99 + req/s vs ensemble size "
+                         "-> BENCH_serve.json")
+    ap.add_argument("--serve-requests", type=int, default=256,
+                    help="--serve: requests through the batching loop "
+                         "per ensemble mode")
+    ap.add_argument("--fwd-batch", type=int, default=256,
+                    help="--serve: batch for the forward-only vs "
+                         "train-reuse proof (residual buffers scale with "
+                         "batch, so this is a serving-slab size, decoupled "
+                         "from the latency loop's --batch)")
+    ap.add_argument("--topk", type=int, default=4,
+                    help="--serve: ensemble size for the top-k mode")
+    ap.add_argument("--max-latency-ms", type=float, default=5.0,
+                    help="--serve: flush timer for partial batches")
     ap.add_argument("--optim", action="store_true",
                     help="bench the stateful-optimizer engine: the scanned "
                          "chunk under sgd/momentum/adamw (f32 + bf16 "
@@ -673,6 +832,11 @@ def main(argv=None):
                     help="write results as JSON (BENCH_*.json tracking)")
     args = ap.parse_args(argv)
 
+    if args.serve:
+        if args.json_out is None:
+            args.json_out = "BENCH_serve.json"
+        run_serve(args)
+        return
     if args.optim:
         if args.json_out is None:
             args.json_out = "BENCH_optim.json"

@@ -118,10 +118,37 @@ def block_diag_fused(h: jax.Array, w_buckets, lp: LayeredPopulation, l: int,
                        block_b=block_b, interpret=interpret)
 
 
+def block_diag_fused_infer(h: jax.Array, w_buckets, lp: LayeredPopulation,
+                           l: int, *, bias: jax.Array,
+                           interpret: bool | None = None,
+                           block_b: int | None = None) -> jax.Array:
+    """Forward-only ``block_diag_fused``: same epilogue fusion, but through
+    ``ops.fused_layer_infer`` — no custom_vjp, ``with_deriv=False``, and the
+    bigger inference batch tile (DESIGN.md §10)."""
+    from repro.kernels.ops import INFER_BLOCK_B, fused_layer_infer  # lazy
+    wb = pack_weight_tiles(w_buckets, lp, l)
+    pout = lp.layer_pop(l + 1)
+    b_eff = (bias.astype(jnp.float32)
+             * jnp.asarray(lp.active_unit_mask(l + 1), jnp.float32))
+    return fused_layer_infer(
+        h, wb.astype(h.dtype), b_eff, lp.bd_layout(l),
+        pout.block_act_ids, pout.hidden_mask,
+        block_b=INFER_BLOCK_B if block_b is None else block_b,
+        interpret=interpret)
+
+
 BD_IMPLS = {
     "einsum": block_diag_einsum,
     "pallas": block_diag_pallas,
     "fused": block_diag_fused,
+}
+
+# the ``infer=True`` registry: XLA impls are already residual-free, the
+# fused impl swaps in its forward-only twin
+BD_INFER_IMPLS = {
+    "einsum": block_diag_einsum,
+    "pallas": block_diag_pallas,
+    "fused": block_diag_fused_infer,
 }
 
 # impls whose kernel epilogue already applies bias + activation + mask —
@@ -166,9 +193,29 @@ def input_fused(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
                        interpret=interpret)
 
 
+def input_fused_infer(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+                      lp: LayeredPopulation, act_impl: str = "sliced", *,
+                      interpret: bool | None = None,
+                      block_b: int | None = None) -> jax.Array:
+    """Forward-only ``input_fused`` through ``ops.fused_input_infer`` — no
+    custom_vjp, no g' residual, bigger inference batch tile."""
+    from repro.kernels.ops import INFER_BLOCK_B, fused_input_infer  # lazy
+    p0 = lp.layer_pop(0)
+    return fused_input_infer(
+        x, w_in, b_in.astype(jnp.float32), p0.block_act_ids, p0.hidden_mask,
+        block=lp.block, block_b=INFER_BLOCK_B if block_b is None else block_b,
+        interpret=interpret)
+
+
 IN_IMPLS = {
     "xla": input_xla,
     "fused": input_fused,
+}
+
+# ``infer=True`` twins of IN_IMPLS (same rule as BD_INFER_IMPLS)
+IN_INFER_IMPLS = {
+    "xla": input_xla,
+    "fused": input_fused_infer,
 }
 
 # input impls whose kernel epilogue already applies bias + activation + mask
@@ -388,14 +435,21 @@ def _resolve_compute_dtype(compute_dtype):
 
 def _hidden(params, x, lp: LayeredPopulation, bd_impl: str = "einsum",
             act_impl: str = "sliced", bd_kwargs: dict | None = None,
-            compute_dtype=None, in_impl=None):
+            compute_dtype=None, in_impl=None, infer: bool = False):
     """Input layer + every mid layer → the last hidden activations
     (B, H_last_tot).  The shared trunk of ``forward`` and the fused loss
-    head; ``in_impl`` routing as in ``forward``."""
+    head; ``in_impl`` routing as in ``forward``.  ``infer=True`` swaps the
+    fused impls for their forward-only twins (``*_INFER_IMPLS``): no
+    custom_vjp attached, no residual emitted, bigger batch tiles."""
     cd = _resolve_compute_dtype(compute_dtype)
     cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
     in_impl = _resolve_in_impl(in_impl, bd_impl)
-    h = IN_IMPLS[in_impl](cast(x), cast(params["w_in"]), params["b_in"],
+    bd_impls = BD_INFER_IMPLS if infer else BD_IMPLS
+    in_impls = IN_INFER_IMPLS if infer else IN_IMPLS
+    if bd_impl not in bd_impls:
+        raise ValueError(f"unknown bd_impl {bd_impl!r} "
+                         f"(have {sorted(bd_impls)})")
+    h = in_impls[in_impl](cast(x), cast(params["w_in"]), params["b_in"],
                           lp, act_impl)
     for l in range(lp.depth - 1):
         hb = cast(h)
@@ -403,12 +457,11 @@ def _hidden(params, x, lp: LayeredPopulation, bd_impl: str = "einsum",
         if bd_impl in FUSED_BD_IMPLS:
             # bias + activation + mask live in the kernel epilogue; the
             # output is layer l+1's (operand-dtype) activations
-            h = block_diag_matmul(hb, wl, lp, l, impl=bd_impl,
+            h = bd_impls[bd_impl](hb, wl, lp, l,
                                   bias=params["mid"][l]["b"],
                                   **(bd_kwargs or {}))
             continue
-        z = block_diag_matmul(hb, wl, lp, l, impl=bd_impl,
-                              **(bd_kwargs or {}))
+        z = bd_impls[bd_impl](hb, wl, lp, l, **(bd_kwargs or {}))
         h = z + params["mid"][l]["b"] * jnp.asarray(
             lp.active_unit_mask(l + 1), jnp.float32)
         h = _act(lp, l + 1, h, act_impl)
@@ -418,7 +471,8 @@ def _hidden(params, x, lp: LayeredPopulation, bd_impl: str = "einsum",
 def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
             bd_impl: str = "einsum", act_impl: str = "sliced",
             bd_kwargs: dict | None = None, m3_kwargs: dict | None = None,
-            compute_dtype=None, in_impl=None):
+            compute_dtype=None, in_impl=None, infer: bool = False,
+            head_impl=None, log_probs: bool = False):
     """x (B, F) → logits (B, P, O) — every member an independent deep MLP.
 
     ``compute_dtype="bfloat16"`` applies the mixed-precision policy: matmul
@@ -432,15 +486,41 @@ def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
     §7).  ``in_impl`` picks the input-layer path (``IN_IMPLS``); the
     default ``None`` follows ``bd_impl`` — a fused run gets the fused
     input kernel (DESIGN.md §9) so no standalone seg_act pass survives
-    anywhere in the forward."""
+    anywhere in the forward.
+
+    ``infer=True`` is the serving hot path (DESIGN.md §10): every fused
+    impl is swapped for its forward-only twin (no custom_vjp, no residual
+    emission, INFER_BLOCK_B batch tiles) and the output projection runs
+    through ``head_impl`` (``HEAD_IMPLS``; default ``None`` follows
+    ``bd_impl``) — ``"fused"`` is the one-launch infer-head kernel with the
+    per-member bias (and, under ``log_probs=True``, the log-softmax) in its
+    epilogue, making the whole forward exactly depth+1 launches
+    (``launch_count.fused_infer_budget``).  Numerics match the training
+    forward to f32 tolerance; the program is NOT differentiable."""
     cd = _resolve_compute_dtype(compute_dtype)
     cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
     h = _hidden(params, x, lp, bd_impl, act_impl, bd_kwargs, compute_dtype,
-                in_impl)
+                in_impl, infer)
+    if infer:
+        from repro.core.m3 import HEAD_IMPLS, m3_infer_head
+        if head_impl is None:
+            head_impl = "fused" if bd_impl in FUSED_BD_IMPLS else "xla"
+        if head_impl not in HEAD_IMPLS:
+            raise ValueError(f"unknown head_impl {head_impl!r} "
+                             f"(have {sorted(HEAD_IMPLS)})")
+        if head_impl == "fused":
+            # bias (and optional log-softmax) live in the kernel epilogue
+            return m3_infer_head(cast(h), cast(params["w_out"]),
+                                 params["b_out"],
+                                 lp.layer_pop(lp.depth - 1),
+                                 log_probs=log_probs, **(m3_kwargs or {}))
     y = _m3_apply(cast(h), cast(params["w_out"]),
                   lp.layer_pop(lp.depth - 1), impl=m3_impl,
                   **(m3_kwargs or {}))
-    return y.astype(jnp.float32) + params["b_out"][None]
+    y = y.astype(jnp.float32) + params["b_out"][None]
+    if log_probs:
+        y = jax.nn.log_softmax(y, axis=-1)
+    return y
 
 
 def fused_loss(params, x, targets, lp: LayeredPopulation,

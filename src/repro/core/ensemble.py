@@ -1,0 +1,159 @@
+"""On-device ensemble reductions over the member axis (DESIGN.md §10).
+
+The paper's product is a trained *population*; serving it means reducing the
+(B, P, O) per-member outputs of ``deep.forward(infer=True)`` on device into
+one answer per request — plus an uncertainty signal that only a population
+can give (the "Instant Learning: Parallel DNNs and Convolutional
+Bootstrapping" framing, PAPERS.md):
+
+  best_member       one member's probabilities (leaderboard rank-0 routing)
+  soft_vote         mean of member softmaxes over a published member set
+                    (optionally weighted) — the top-k / all-members ensemble
+  disagreement      mixture entropy, mean member entropy, their gap (the
+                    mutual information = epistemic uncertainty), and the
+                    fraction of members voting with the ensemble
+
+All reductions accept raw logits OR log-probabilities interchangeably:
+``softmax`` is shift-invariant per row, so ``softmax(log_softmax(x)) ==
+softmax(x)`` and the fused infer head may emit either.
+
+Filler exclusion (the shard-pad invariant): ``LayeredPopulation.shard_pad``
+appends identity filler members so the member axis divides the mesh.  Those
+slots hold REAL arrays — the fused kernels compute them like any member —
+but they are NOT models, and a mean/argmax that sees them is silently
+wrong.  Every reduction here therefore (a) slices the member axis to
+``num_real`` (fillers are guaranteed trailing) before reducing, and (b)
+validates any explicit member-id set against the real range, failing
+loudly rather than gathering a filler.  Regression-tested with a poisoned
+padded population in tests/test_infer_path.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def real_slots(pop) -> int:
+    """Number of REAL members in a (possibly shard-padded) layout."""
+    return int(getattr(pop, "num_real", pop.num_members))
+
+
+def _real_logits(logits: jax.Array, pop):
+    """Slice the member axis to the real prefix — fillers are trailing by
+    the ``shard_pad`` contract, so the slice IS the exclusion mask."""
+    nr = real_slots(pop)
+    if logits.shape[1] < nr:
+        raise ValueError(f"member axis {logits.shape[1]} smaller than the "
+                         f"layout's {nr} real members")
+    return logits[:, :nr, :], nr
+
+
+def _validate_slots(member_ids, num_real: int) -> np.ndarray:
+    """Explicit member sets must name real members only (loud-fail side of
+    the filler-exclusion invariant)."""
+    ids = np.asarray(member_ids, np.int64).reshape(-1)
+    if ids.size == 0:
+        raise ValueError("empty ensemble member set")
+    bad = ids[(ids < 0) | (ids >= num_real)]
+    if bad.size:
+        raise ValueError(
+            f"member ids {sorted(set(bad.tolist()))} outside the real-member "
+            f"range [0, {num_real}) — shard_pad identity fillers must never "
+            "reach an ensemble reduction")
+    return ids.astype(np.int32)
+
+
+def member_log_probs(logits: jax.Array) -> jax.Array:
+    """Per-member log-probabilities (idempotent on log-prob input)."""
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def best_member(logits: jax.Array, pop, member_id: int) -> jax.Array:
+    """(B, P, O) → one member's probabilities (B, O) — leaderboard rank-0
+    routing.  ``member_id`` indexes the CURRENT layout's member axis."""
+    lg, nr = _real_logits(logits, pop)
+    (mid,) = _validate_slots([member_id], nr)
+    return jax.nn.softmax(lg[:, int(mid), :], axis=-1)
+
+
+def soft_vote(logits: jax.Array, pop, member_ids=None,
+              weights=None) -> jax.Array:
+    """(B, P, O) → ensemble probabilities (B, O): mean (or ``weights``-
+    weighted mean, normalised here) of member softmaxes over ``member_ids``
+    (default: every real member)."""
+    lg, nr = _real_logits(logits, pop)
+    ids = (np.arange(nr, dtype=np.int32) if member_ids is None
+           else _validate_slots(member_ids, nr))
+    probs = jax.nn.softmax(lg[:, ids, :], axis=-1)      # (B, K, O)
+    if weights is None:
+        return probs.mean(axis=1)
+    w = jnp.asarray(weights, jnp.float32).reshape(-1)
+    if w.shape[0] != ids.shape[0]:
+        raise ValueError(f"{w.shape[0]} weights for {ids.shape[0]} members")
+    return jnp.einsum("bko,k->bo", probs, w / w.sum())
+
+
+def disagreement(logits: jax.Array, pop, member_ids=None) -> dict:
+    """Population-disagreement uncertainty over ``member_ids`` (default all
+    real members).  Returns (B,) arrays:
+
+      mixture_entropy      H(mean member distribution) — total uncertainty
+      mean_member_entropy  E_m H(member m) — aleatoric part
+      mutual_information   their gap — epistemic part, ~0 when members agree
+      vote_agreement       fraction of members whose argmax matches the
+                           ensemble's
+    """
+    lg, nr = _real_logits(logits, pop)
+    ids = (np.arange(nr, dtype=np.int32) if member_ids is None
+           else _validate_slots(member_ids, nr))
+    logp = jax.nn.log_softmax(lg[:, ids, :], axis=-1)   # (B, K, O)
+    p = jnp.exp(logp)
+    mix = p.mean(axis=1)                                # (B, O)
+    mixture_entropy = -jnp.sum(
+        mix * jnp.log(jnp.clip(mix, 1e-20, None)), axis=-1)
+    mean_member_entropy = -jnp.sum(p * logp, axis=-1).mean(axis=1)
+    pred = jnp.argmax(mix, axis=-1)
+    votes = jnp.argmax(logp, axis=-1)                   # (B, K)
+    return {
+        "mixture_entropy": mixture_entropy,
+        "mean_member_entropy": mean_member_entropy,
+        "mutual_information": mixture_entropy - mean_member_entropy,
+        "vote_agreement": (votes == pred[:, None]).mean(axis=1),
+    }
+
+
+ENSEMBLE_MODES = ("best1", "topk", "all")
+
+
+def ensemble_predict(logits: jax.Array, pop, mode: str = "all",
+                     member_ids=None, weights=None,
+                     with_uncertainty: bool = False) -> dict:
+    """One dispatcher for the three serving reductions.
+
+    ``mode="best1"`` routes to ``member_ids[0]`` (leaderboard rank 0);
+    ``"topk"`` soft-votes over the published ``member_ids``; ``"all"``
+    soft-votes over every real member.  Returns ``{"probs": (B, O),
+    "pred": (B,)}`` plus the ``disagreement`` arrays (computed over the
+    same member set) when ``with_uncertainty`` is set."""
+    if mode not in ENSEMBLE_MODES:
+        raise ValueError(f"unknown ensemble mode {mode!r} "
+                         f"(have {ENSEMBLE_MODES})")
+    if mode == "best1":
+        if member_ids is None:
+            raise ValueError("mode='best1' needs member_ids (leaderboard)")
+        mid = int(np.asarray(member_ids).reshape(-1)[0])
+        probs = best_member(logits, pop, mid)
+        ids = [mid]
+    elif mode == "topk":
+        if member_ids is None:
+            raise ValueError("mode='topk' needs member_ids (leaderboard)")
+        probs = soft_vote(logits, pop, member_ids, weights)
+        ids = member_ids
+    else:
+        probs = soft_vote(logits, pop, None, weights)
+        ids = None
+    out = {"probs": probs, "pred": jnp.argmax(probs, axis=-1)}
+    if with_uncertainty:
+        out.update(disagreement(logits, pop, ids))
+    return out

@@ -134,8 +134,8 @@ def m3_loss_head(h: jax.Array, w2: jax.Array, b2: jax.Array,
     """The training-time fusion of M3: projection + per-member bias +
     softmax cross-entropy + dlogits in one Pallas launch per direction
     (kernels/loss_head.py, DESIGN.md §9) — the logits never reach HBM.
-    Returns the per-member mean NLL (P,) f32; eval paths that need actual
-    logits keep using ``m3``."""
+    Returns the per-member mean NLL (P,) f32; paths that need actual
+    logits use ``m3`` (training) or ``m3_infer_head`` (serving)."""
     from repro.kernels.ops import loss_head  # lazy: kernels import pallas
     return loss_head(h, w2, b2, targets,
                      np.asarray(pop.block_segment_ids),
@@ -150,3 +150,32 @@ LOSS_IMPLS = {
     "fused": m3_loss_head,
 }
 FUSED_LOSS_IMPLS = frozenset(["fused"])
+
+
+# ---------------------------------------------------------------------- #
+# 6. forward-only inference head: M3 + bias (+ log-softmax) in one pass  #
+# ---------------------------------------------------------------------- #
+
+def m3_infer_head(h: jax.Array, w2: jax.Array, b2: jax.Array,
+                  pop: Population, *, log_probs: bool = False,
+                  interpret: bool | None = None,
+                  block_b: int | None = None) -> jax.Array:
+    """The serving-time counterpart of ``m3_loss_head``: projection +
+    per-member bias — and optionally the stable log-softmax — in ONE
+    forward-only Pallas launch (kernels/infer_head.py, DESIGN.md §10),
+    producing the (B, P, O) logits/log-probs the ensemble reductions
+    consume.  Not differentiable: the inference hot path must not be able
+    to emit residuals.  This retires the old caveat that eval paths
+    needing actual logits fall back to ``m3`` + XLA bias/softmax."""
+    from repro.kernels.ops import INFER_BLOCK_B, infer_head  # lazy
+    return infer_head(h, w2, b2, np.asarray(pop.block_segment_ids),
+                      block_h=pop.block,
+                      block_b=INFER_BLOCK_B if block_b is None else block_b,
+                      log_probs=log_probs, interpret=interpret)
+
+
+# inference head impls — deep.forward(infer=True) routes through this
+HEAD_IMPLS = {
+    "xla": None,          # m3 logits + XLA bias/log_softmax (deep.forward)
+    "fused": m3_infer_head,
+}

@@ -22,6 +22,10 @@ from repro.core.population import LayeredPopulation, Population
 def _forward(params, x, layout, **fw):
     if isinstance(layout, LayeredPopulation):
         return _deep.forward(params, x, layout, **fw)
+    if fw.pop("infer", False):
+        raise ValueError("infer=True eval routes through the layered "
+                         "engine — single-layer Population has no "
+                         "forward-only kernel path")
     return _pmlp.forward(params, x, layout, **fw)
 
 
@@ -74,6 +78,13 @@ def evaluate_population(params, pop, x, targets,
     reductions to the population axis (no-op off-mesh), so selection over a
     mesh-sharded population never gathers the fused tensors to one device.
 
+    Forward kwargs pass straight through to ``deep.forward`` — in
+    particular ``infer=True`` (with ``bd_impl="fused"``) runs the whole
+    eval on the forward-only serving kernels (DESIGN.md §10): no residual
+    buffers, depth+1 launches per batch, identical metrics to f32
+    tolerance.  That is how the serving engine scores members for its
+    published set without ever touching the training kernels.
+
     Returns (losses (P,), accuracies (P,) or None)."""
     fw_key = _freeze_kwargs(fw)
     n = x.shape[0]
@@ -109,11 +120,15 @@ def _member_arch(pop, m: int):
     return pop.hidden_sizes[m], pop.activations[m]
 
 
-def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None):
+def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None,
+                sort_by: str = "loss"):
     """Top-k members as (rank, member, hidden, activation, loss[, acc]).
 
     For layered populations ``hidden`` is the member's width tuple;
     shard-pad filler members are excluded from the ranking.
+    ``sort_by="acc"`` ranks by accuracy (descending) instead of loss —
+    the serving engine publishes its member set off whichever metric the
+    deployment optimises for.
 
     ``member_ids``: optional survivor→ORIGINAL id mapping (one entry per
     real member) from the successive-halving lifecycle — after compaction
@@ -125,7 +140,15 @@ def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None):
         raise ValueError(
             f"member_ids has {len(member_ids)} entries for "
             f"{_num_real(pop)} real members")
-    order = np.argsort(np.asarray(losses)[:_num_real(pop)])[:k]
+    if sort_by == "loss":
+        key = np.asarray(losses)[:_num_real(pop)]
+    elif sort_by == "acc":
+        if accs is None:
+            raise ValueError("sort_by='acc' needs accuracies")
+        key = -np.asarray(accs)[:_num_real(pop)]
+    else:
+        raise ValueError(f"unknown sort_by {sort_by!r} (have loss, acc)")
+    order = np.argsort(key, kind="stable")[:k]
     rows = []
     for r, m in enumerate(order):
         hidden, act = _member_arch(pop, int(m))
@@ -136,5 +159,29 @@ def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None):
                    activation=act, loss=float(losses[m]))
         if accs is not None:
             row["acc"] = float(accs[m])
+        rows.append(row)
+    return rows
+
+
+def member_metrics(pop, losses, accs=None, member_ids=None):
+    """Structured per-member metric rows for EVERY real member, unranked —
+    the first slice of the metrics module (ROADMAP direction 3).  Each row
+    is ``{member, slot, hidden, activation, depth, loss[, acc]}``; the
+    leaderboard is a sorted top-k view of exactly this table.  Shard-pad
+    fillers are excluded (their arrays hold identities, not models)."""
+    import numpy as np
+    nr = _num_real(pop)
+    if member_ids is not None and len(member_ids) != nr:
+        raise ValueError(f"member_ids has {len(member_ids)} entries for "
+                         f"{nr} real members")
+    rows = []
+    for m in range(nr):
+        hidden, act = _member_arch(pop, m)
+        row = dict(member=m if member_ids is None else int(member_ids[m]),
+                   slot=m, hidden=hidden, activation=act,
+                   depth=len(hidden) if isinstance(hidden, tuple) else 1,
+                   loss=float(np.asarray(losses)[m]))
+        if accs is not None:
+            row["acc"] = float(np.asarray(accs)[m])
         rows.append(row)
     return rows

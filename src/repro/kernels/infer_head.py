@@ -1,0 +1,106 @@
+"""Forward-only inference head: output projection (M3) + per-member bias
+(+ optional log-softmax) in ONE Pallas pass (DESIGN.md §10).
+
+Derived from the loss-head kernel (kernels/loss_head.py) by keeping its
+projection loop and REPLACING the epilogue: no targets, no NLL, no
+dlogits_base — the epilogue just adds the member bias to the still-in-VMEM
+f32 accumulator and stores the finished (block_b, O) logits tile straight
+into its member's slot of the (B, P, O) output.  With ``log_probs=True``
+the same stable logsumexp the loss head runs produces normalised
+log-probabilities instead — serving's soft-vote ensembles consume
+``exp(log_probs)`` without any extra XLA softmax pass over the (B, P, O)
+tensor.
+
+What the epilogue DROPS vs training (and why the batch tile can grow):
+the loss head keeps a second (block_b, O) array live for dlogits_base and
+the per-member (1, P) loss scratch; the mid/input training kernels keep a
+whole (block_b, H_out) g' residual block.  Here the only live buffers are
+the h/w tiles and ONE f32 accumulator, so ``block_b`` defaults to 2× the
+training tile (kernels/ops.py routes 256 vs 128) and the grid has half
+the batch rows.
+
+Grid/tile metadata is the per-block member id (``block_segment_ids``)
+scalar-prefetched exactly like the loss head: member boundaries
+(first/last) come from neighbouring ids, so ragged member widths need no
+extra metadata.  O pads via −1e30 bias columns (zero softmax mass under
+``log_probs``; the caller slices them off regardless).
+
+Mixed precision: h/w tiles may be bf16; the accumulator and the emitted
+logits / log-probs are always f32.
+
+There is NO backward: this kernel exists so that no VJP (and no residual)
+can even trace into a serving program — training paths keep using the
+loss head / m3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.block_diag import tpu_compiler_params
+
+
+def _make_kernel(log_probs: bool):
+    def kernel(seg_ref, h_ref, w_ref, b_ref, y_ref, acc_ref):
+        t = pl.program_id(1)
+        nt = pl.num_programs(1)
+        seg_t = seg_ref[t]
+        first = jnp.logical_or(t == 0, seg_ref[jnp.maximum(t - 1, 0)] != seg_t)
+        last = jnp.logical_or(t == nt - 1,
+                              seg_ref[jnp.minimum(t + 1, nt - 1)] != seg_t)
+
+        @pl.when(first)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jax.lax.dot_general(
+            h_ref[...], w_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(last)
+        def _epilogue():
+            logits = acc_ref[...] + b_ref[...].astype(jnp.float32)
+            if log_probs:
+                mx = jnp.max(logits, axis=1, keepdims=True)
+                lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=1,
+                                      keepdims=True)) + mx
+                logits = logits - lse
+            y_ref[...] = logits[:, None, :]
+    return kernel
+
+
+def infer_head_fwd(h: jax.Array, w2: jax.Array, b2: jax.Array,
+                   seg: jax.Array, num_members: int, *, block_h: int,
+                   block_b: int, log_probs: bool,
+                   interpret: bool = False) -> jax.Array:
+    """h (B, H), w2 (O, H), b2 (P, O) → logits (or log-probs) (B, P, O) f32.
+    Forward-only: one launch, no residual outputs."""
+    b, hh = h.shape
+    o = w2.shape[0]
+    p = num_members
+    grid = (b // block_b, hh // block_h)
+    return pl.pallas_call(
+        _make_kernel(log_probs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block_h),
+                             lambda i, t, seg_r: (i, t)),
+                pl.BlockSpec((o, block_h), lambda i, t, seg_r: (0, t)),
+                pl.BlockSpec((1, o), lambda i, t, seg_r: (seg_r[t], 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, 1, o),
+                                   lambda i, t, seg_r: (i, seg_r[t], 0)),
+            scratch_shapes=[pltpu.VMEM((block_b, o), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, p, o), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            ("arbitrary", "arbitrary"),
+            (block_b, block_h), (o, block_h), (1, o),
+            (block_b, o), (block_b, o)),
+        interpret=interpret,
+    )(seg, h, w2, b2)

@@ -17,6 +17,7 @@ from repro.kernels import block_diag as _bdk
 from repro.kernels import flash_attn as _flashk
 from repro.kernels import fused_input as _fik
 from repro.kernels import fused_layer as _flk
+from repro.kernels import infer_head as _ihk
 from repro.kernels import loss_head as _lhk
 from repro.kernels import m3_matmul as _m3k
 from repro.kernels import moe_gemm as _moek
@@ -270,6 +271,48 @@ def fused_layer(h: jax.Array, wb: jax.Array, b_eff: jax.Array, layout,
     return y[:b0]
 
 
+# Inference batch tile: forward-only launches keep no g' residual block in
+# VMEM (the dominant extra buffer of the training kernels), so the batch
+# tile defaults to 2× the training tile — half the grid rows per launch.
+INFER_BLOCK_B = 256
+
+
+def fused_layer_infer(h: jax.Array, wb: jax.Array, b_eff: jax.Array, layout,
+                      block_act_ids: np.ndarray, mask: np.ndarray, *,
+                      block_b: int = INFER_BLOCK_B,
+                      interpret: bool | None = None) -> jax.Array:
+    """Forward-only ``fused_layer``: same one-pass GEMM + bias + activation,
+    but no custom_vjp is attached and the kernel runs ``with_deriv=False``
+    unconditionally — a VJP traced through a serving program cannot emit a
+    residual here, it fails loudly instead (DESIGN.md §10).  The freed VMEM
+    pays for the bigger default batch tile."""
+    interpret = _resolve_interpret(interpret)
+    if h.shape[1] != layout.n_in_tiles * layout.block:
+        raise ValueError(f"input axis {h.shape[1]} != "
+                         f"{layout.n_in_tiles}×{layout.block}")
+    if wb.shape != (layout.n_param_blocks, layout.block, layout.block):
+        raise ValueError(f"weight tiles {wb.shape} != "
+                         f"({layout.n_param_blocks}, {layout.block}, "
+                         f"{layout.block})")
+    h_out = layout.n_out_tiles * layout.block
+    if b_eff.shape != (h_out,):
+        raise ValueError(f"bias shape {b_eff.shape} != ({h_out},)")
+    import numpy as _np
+    s_act = _np.asarray(block_act_ids, _np.int32)[
+        _np.asarray(layout.s_out, _np.int32)]
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    ids = _bd_ids(layout, transposed=False)
+    y = _flk.fused_layer_fwd(
+        hp, _bd_augment(wb, layout), jnp.reshape(b_eff, (1, -1)),
+        jnp.asarray(_np.asarray(mask, _np.float32)).reshape(1, -1), *ids,
+        jnp.asarray(s_act),
+        n_out_tiles=layout.n_out_tiles, n_steps=layout.n_steps,
+        block=layout.block, block_b=block_b, with_deriv=False,
+        interpret=interpret)
+    return y[:b0]
+
+
 # --------------------------------------------------------------------- #
 # fused input layer: dense GEMM + bias + activation epilogue            #
 # --------------------------------------------------------------------- #
@@ -334,6 +377,34 @@ def fused_input(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
     wp, _ = _pad_axis(w_in, 1, fmult)
     y = _fin_core(xp, wp, b_in, _StaticArray(block_act_ids, np.int32),
                   _StaticArray(mask, np.float32), block, block_b, interpret)
+    return y[:b0]
+
+
+def fused_input_infer(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+                      block_act_ids: np.ndarray, mask: np.ndarray, *,
+                      block: int, block_b: int = INFER_BLOCK_B,
+                      interpret: bool | None = None) -> jax.Array:
+    """Forward-only ``fused_input``: no custom_vjp, ``with_deriv=False``
+    unconditionally — no g' residual can be emitted, and the freed VMEM
+    pays for the bigger default batch tile (DESIGN.md §10)."""
+    interpret = _resolve_interpret(interpret)
+    h = w_in.shape[0]
+    if h % block:
+        raise ValueError(f"hidden axis {h} not {block}-aligned")
+    if x.shape[1] != w_in.shape[1]:
+        raise ValueError(f"feature axis {x.shape[1]} != {w_in.shape[1]}")
+    if b_in.shape != (h,):
+        raise ValueError(f"bias shape {b_in.shape} != ({h},)")
+    block_b = min(block_b, max(8, 1 << (x.shape[0] - 1).bit_length()))
+    xp, b0 = _pad_axis(x, 0, block_b)
+    fmult = 8 if x.shape[1] <= 128 else 128
+    xp, _ = _pad_axis(xp, 1, fmult)
+    wp, _ = _pad_axis(w_in, 1, fmult)
+    y = _fik.fused_input_fwd(
+        xp, wp, jnp.reshape(b_in, (1, -1)).astype(jnp.float32),
+        jnp.asarray(np.asarray(mask, np.float32)).reshape(1, -1),
+        jnp.asarray(np.asarray(block_act_ids, np.int32)),
+        block=block, block_b=block_b, with_deriv=False, interpret=interpret)
     return y[:b0]
 
 
@@ -475,6 +546,39 @@ def loss_head(h: jax.Array, w_out: jax.Array, b_out: jax.Array,
     return _lh_core(hp, w2p, b2p, tp,
                     _StaticArray(block_seg_ids, np.int32), b0, block_h,
                     block_b, interpret)
+
+
+def infer_head(h: jax.Array, w_out: jax.Array, b_out: jax.Array,
+               block_seg_ids: np.ndarray, *, block_h: int,
+               block_b: int = INFER_BLOCK_B, log_probs: bool = False,
+               interpret: bool | None = None) -> jax.Array:
+    """Forward-only output head: M3 projection + per-member bias (+ optional
+    stable log-softmax) in one Pallas pass (kernels/infer_head.py;
+    DESIGN.md §10).  NOT differentiable by design — serving programs must
+    not be able to trace a residual-emitting VJP through the head.
+
+    h (B, H), w_out (O, H), b_out (P, O) → per-member logits — or, with
+    ``log_probs=True``, log-probabilities — (B, P, O) f32; pads B and O.
+    H must already be block_h-aligned (Population guarantees this).
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    interpret = _resolve_interpret(interpret)
+    if h.shape[1] % block_h:
+        raise ValueError(f"hidden axis {h.shape[1]} not {block_h}-aligned")
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    # O padding: −1e30 bias columns get zero softmax mass under log_probs
+    # (and are sliced off regardless)
+    w2p, o0 = _pad_axis(w_out, 0, 128 if not interpret else 1)
+    pad_o = w2p.shape[0] - o0
+    b2p = b_out.astype(jnp.float32)
+    if pad_o:
+        b2p = jnp.pad(b2p, ((0, 0), (0, pad_o)), constant_values=-1e30)
+    seg = jnp.asarray(np.asarray(block_seg_ids, np.int32))
+    y = _ihk.infer_head_fwd(hp, w2p, b2p, seg, b2p.shape[0],
+                            block_h=block_h, block_b=block_b,
+                            log_probs=log_probs, interpret=interpret)
+    return y[:b0, :, :o0]
 
 
 # --------------------------------------------------------------------- #

@@ -78,3 +78,32 @@ def fused_step_budget(depth: int) -> dict:
     input + (depth−1) mids + loss head — independent of batch size."""
     per_dir = depth + 1
     return {"fwd": per_dir, "bwd": per_dir, "total": 2 * per_dir}
+
+
+def fused_infer_budget(depth: int) -> dict:
+    """The §10 invariant for the forward-only serving path
+    (``forward(infer=True)`` with fused routing): input + (depth−1) mids +
+    infer head = depth+1 launches per request batch — half the train step,
+    no backward phase to budget, independent of batch size."""
+    return {"fwd": depth + 1, "total": depth + 1}
+
+
+def max_eqn_outputs(fn, *args, primitive: str = "pallas_call",
+                    **kwargs) -> int:
+    """Largest number of outputs any ``primitive`` equation in ``fn``'s
+    (recursively walked) jaxpr carries.  The §10 no-residual assertion:
+    a forward-only program's pallas_calls are all single-output — a 2 here
+    means some kernel still emits a residual (g'/dlogits) buffer."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def walk(jaxpr) -> int:
+        worst = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == primitive:
+                worst = max(worst, len(eqn.outvars))
+            for val in eqn.params.values():
+                for sub in _sub_jaxprs(val):
+                    worst = max(worst, walk(sub))
+        return worst
+
+    return walk(closed.jaxpr)
