@@ -666,6 +666,7 @@ def make_population_train_step(lp: LayeredPopulation, *,
                                act_impl: str = "sliced",
                                scan_steps: int = 1,
                                donate: bool = True,
+                               donate_batch: bool = False,
                                compute_dtype=None,
                                lr_schedule=None):
     """Build the jitted multi-step population train chunk.
@@ -696,6 +697,13 @@ def make_population_train_step(lp: LayeredPopulation, *,
     ``lr_schedule=None`` the signatures and the emitted program are
     EXACTLY the pre-schedule ones: the plain-SGD chunk stays bit-identical
     to the committed baselines.
+
+    ``donate_batch`` additionally donates the ``xs``/``ys`` slabs (only
+    meaningful with ``donate``): the streaming data plane
+    (``data/pipeline.py``) hands each chunk a freshly ``device_put`` slab
+    that nothing else references, so XLA may reuse its buffer — at
+    scan_steps×B×F float32 per chunk this keeps the double-buffered
+    pipeline's device footprint at exactly two slabs.
 
     ``xs``/``ys`` carry a leading ``scan_steps`` axis and ``losses``
     (scan_steps,) / ``pers`` (scan_steps, P) hold every inner step's
@@ -738,7 +746,8 @@ def make_population_train_step(lp: LayeredPopulation, *,
                     body, (params, jnp.asarray(step0, jnp.int32)), (xs, ys))
                 return params, losses, pers
 
-        return jax.jit(chunk, donate_argnums=(0,) if donate else ())
+        dn = ((0, 1, 2) if donate_batch else (0,)) if donate else ()
+        return jax.jit(chunk, donate_argnums=dn)
 
     if lr_schedule is None:
         def chunk(params, opt_state, xs, ys, lr):
@@ -771,7 +780,8 @@ def make_population_train_step(lp: LayeredPopulation, *,
                 (xs, ys))
             return params, opt_state, losses, pers, gnorms
 
-    return jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
+    dn = ((0, 1, 2, 3) if donate_batch else (0, 1)) if donate else ()
+    return jax.jit(chunk, donate_argnums=dn)
 
 
 # ---------------------------------------------------------------------- #

@@ -253,7 +253,8 @@ def compact(pop: LayeredPopulation, params, opt_state, keep,
     subtrees (SGD momentum ``mu``, Adam ``m``/``v``) are compacted through
     the same index maps — scalar leaves (step counts) pass through.
     Factored states (adafactor ``v_row``/``v_col``) are rejected: their
-    leaves are not member-major along a gatherable axis.
+    leaves are not member-major along a gatherable axis — use
+    :func:`compact_factored` for those.
 
     The caller owns re-padding (``new_pop.shard_pad``), re-deriving
     per-member learning rates (index the original vector by the survivor
@@ -273,3 +274,44 @@ def compact(pop: LayeredPopulation, params, opt_state, keep,
         opt_state, params,
         lambda node: compact_params(pop, new_pop, node, keep, gather=gather),
         op="compact")
+
+
+def _is_factored_leaf(x) -> bool:
+    """An adafactor per-param state dict: {"v"|"v_row"+"v_col"[, "m"]}."""
+    return isinstance(x, dict) and ("v" in x or "v_row" in x)
+
+
+def compact_factored(pop: LayeredPopulation, params, opt_state, keep,
+                     gather: str = "device"):
+    """Adafactor-aware rung compaction → ``(new_pop, new_params, carry)``.
+
+    ``opt_state`` must be an adafactor state (``{"count", "leaves"}`` with
+    per-param dicts holding ``v``/``v_row``+``v_col`` and optionally
+    ``m``).  The factored second-moment statistics reduce over the fused
+    hidden axis — ``v_row``/``v_col`` of a fused weight MIX members, so no
+    member-major gather can recover a survivor's statistics — and are
+    therefore DROPPED.  What survives the rung rides in ``carry``:
+
+      * ``carry["m"]`` — the params-shaped momentum tree, gathered through
+        the same index maps as the parameters (bit-exact, dtype preserved;
+        ``None`` when the optimizer runs without momentum);
+      * ``carry["count"]`` — the step count, passed through.
+
+    The caller re-initialises fresh (zero) factored statistics on the new
+    layout and merges the carry back in (launch/train.py): the second
+    moment then re-warms in ~1/(1−b2) steps — the documented cost of
+    riding adafactor through a halving ladder."""
+    if not (isinstance(opt_state, dict) and "leaves" in opt_state):
+        raise ValueError(
+            "compact_factored expects an adafactor state "
+            "({'count', 'leaves'}); use compact() for params-shaped states")
+    new_pop = pop.subset(keep)
+    new_params = compact_params(pop, new_pop, params, keep, gather=gather)
+    leaves = opt_state["leaves"]
+    flat = jax.tree.leaves(leaves, is_leaf=_is_factored_leaf)
+    m = None
+    if flat and all("m" in st for st in flat):
+        m_tree = jax.tree.map(lambda st: st["m"], leaves,
+                              is_leaf=_is_factored_leaf)
+        m = compact_params(pop, new_pop, m_tree, keep, gather=gather)
+    return new_pop, new_params, {"count": opt_state["count"], "m": m}

@@ -1,0 +1,272 @@
+"""Streaming data plane: double-buffered async host->device prefetch
+(DESIGN.md §11).
+
+The population train loop is device-bound arithmetic wrapped in host-bound
+glue: every scan chunk waits while the driver generates batches, stacks
+them, and ``device_put``s the slab, and every per-chunk metric fetch
+(``np.asarray`` on per-member losses / grad norms) drains the dispatch
+pipeline before the next chunk can launch.  "On the Performance of Network
+Parallel Training in Artificial Neural Networks" (PAPERS.md) measures
+exactly this failure mode — data movement, not FLOPs, bounding parallel
+ANN training.  This module closes the seam with two pieces:
+
+  * :class:`Prefetcher` — a background producer thread that materialises
+    the NEXT chunk's ``(scan_steps, B, ...)`` batch slab into one of two
+    alternating host staging buffers and ``device_put``s it (sharded by
+    ``distributed.sharding.population_batch_shardings``) while the current
+    chunk executes on device.  The promoted, reusable form of the
+    double-buffer pattern ``launch.serve_population.PopulationServer``
+    already uses for request slabs.  A bounded queue (default depth 2 —
+    double buffering) gives backpressure; ``seek`` re-synchronises after a
+    crash replay; ``retarget`` flushes and re-aims the producer when a
+    halving rung boundary re-shard-pads the layout and re-jits the chunk;
+    ``close`` shuts the thread down even when it is blocked mid-``put``.
+    Producer exceptions are captured and re-raised on the consumer thread
+    (``get``) — a dead producer can never hang the train loop.
+
+  * :class:`DeferredMetrics` — a chunk's metrics as a lazy mapping over
+    the live device arrays: the host transfer happens on FIRST ACCESS, so
+    the driver resolves chunk N's metrics after chunk N+1 is already
+    dispatched and the device queue never drains for a ``float()``.
+
+Bit-exactness contract: the prefetcher changes WHEN a batch is built and
+copied, never WHAT is built — ``produce(chunk_idx, staging)`` is required
+to be a pure function of the chunk index (the repo's step-indexed data
+rule), so a pipelined run's trajectory is bit-identical to the synchronous
+driver's (tests/test_pipeline.py)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Mapping, Optional
+
+
+class PrefetchError(RuntimeError):
+    """Producer-thread failure, re-raised on the consumer thread with the
+    original exception chained (``raise ... from err``)."""
+
+
+class DeferredMetrics(Mapping):
+    """A metrics dict whose values stay on device until first access.
+
+    ``resolve()`` is called once, lazily; its result (a plain dict) is
+    cached.  Everything mapping-like (``metrics["loss"]``, ``dict(m)``,
+    iteration, ``len``) forces resolution — so code that stores the object
+    (``TrainRunner.metrics_log``) costs nothing, and code that reads it
+    pays one host sync at read time, ideally after the NEXT chunk is in
+    flight."""
+
+    __slots__ = ("_resolve", "_value")
+
+    def __init__(self, resolve: Callable[[], dict]):
+        self._resolve = resolve
+        self._value: Optional[dict] = None
+
+    @property
+    def resolved(self) -> bool:
+        return self._value is not None
+
+    def force(self) -> dict:
+        if self._value is None:
+            self._value = dict(self._resolve())
+        return self._value
+
+    def __getitem__(self, key):
+        return self.force()[key]
+
+    def __iter__(self) -> Iterator:
+        return iter(self.force())
+
+    def __len__(self) -> int:
+        return len(self.force())
+
+    def __repr__(self) -> str:
+        if self._value is None:
+            return "DeferredMetrics(<unresolved>)"
+        return f"DeferredMetrics({self._value!r})"
+
+
+class Prefetcher:
+    """Bounded async producer of per-chunk device slabs.
+
+    Parameters
+    ----------
+    produce : ``(chunk_idx, staging) -> slab``
+        Runs ON THE PRODUCER THREAD.  Builds chunk ``chunk_idx``'s batches
+        into ``staging`` (one of two alternating host buffers from
+        ``make_staging``, or ``None``) and returns the device slab —
+        typically the ``jax.device_put(..., sharding)`` of the staged
+        arrays.  Must be a pure function of ``chunk_idx`` (step-indexed
+        data) so replays and the synchronous path agree bit-for-bit.
+    n_chunks : total chunks in the current target (exclusive end).
+    make_staging : optional zero-arg factory for ONE host staging buffer;
+        called twice so consecutive chunks alternate buffers — chunk k+1
+        stages while chunk k's device slab is still in flight.  ALIASING
+        RULE: a sharded ``jax.device_put`` of a numpy array may ZERO-COPY
+        alias its memory (the jax CPU backend does), so ``produce`` must
+        never hand a staging buffer itself to the device — snapshot the
+        staged region (``np.array``) and device_put the snapshot, which
+        nothing ever writes again (DESIGN.md §11).
+    depth : queue bound (default 2 = double buffering): the producer runs
+        at most ``depth`` chunks ahead, then blocks (backpressure) until
+        the consumer drains one.
+    """
+
+    _END = object()
+
+    def __init__(self, produce: Callable[[int, Any], Any], n_chunks: int,
+                 *, make_staging: Optional[Callable[[], Any]] = None,
+                 depth: int = 2, start: int = 0, name: str = "prefetch"):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._depth = depth
+        self._name = name
+        self._produce = produce
+        self._make_staging = make_staging
+        self._staging = ([make_staging(), make_staging()]
+                         if make_staging else [None, None])
+        self._n_chunks = int(n_chunks)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        self._next = int(start)          # next chunk the consumer expects
+        self._start_thread(int(start))
+
+    # ----------------------------------------------------------------- #
+    # producer                                                          #
+    # ----------------------------------------------------------------- #
+
+    def _start_thread(self, start: int):
+        self._stop.clear()
+        self._error = None
+        self._q = queue.Queue(maxsize=self._depth)
+        self._thread = threading.Thread(
+            target=self._run, args=(start,), daemon=True, name=self._name)
+        self._thread.start()
+
+    def _run(self, start: int):
+        flip = 0
+        try:
+            for c in range(start, self._n_chunks):
+                if self._stop.is_set():
+                    return
+                slab = self._produce(c, self._staging[flip])
+                flip ^= 1
+                if not self._put((c, slab)):
+                    return
+            self._put(self._END)
+        except BaseException as e:       # noqa: BLE001 — surface on get()
+            self._error = e
+            self._put(self._END)
+
+    def _put(self, item) -> bool:
+        """Bounded put that stays responsive to ``close``/``retarget``:
+        never blocks longer than 50 ms without checking the stop flag."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    # ----------------------------------------------------------------- #
+    # consumer                                                          #
+    # ----------------------------------------------------------------- #
+
+    def get(self, chunk_idx: int, timeout: float = 600.0):
+        """The device slab for ``chunk_idx``.  Consecutive calls must walk
+        the chunk range in order; an out-of-order index (a crash replay
+        restarting mid-segment, or a resume skipping ahead) triggers an
+        implicit :meth:`seek` — queued slabs for the abandoned position are
+        discarded and the producer restarts at ``chunk_idx``."""
+        if chunk_idx != self._next:
+            self.seek(chunk_idx)
+        deadline = timeout
+        while True:
+            try:
+                item = self._q.get(timeout=min(deadline, 0.5))
+            except queue.Empty:
+                deadline -= 0.5
+                if self._error is not None:
+                    self._raise()
+                if not self._thread.is_alive():
+                    raise PrefetchError(
+                        f"{self._name}: producer thread died without "
+                        f"delivering chunk {chunk_idx}")
+                if deadline <= 0:
+                    raise TimeoutError(
+                        f"{self._name}: chunk {chunk_idx} not produced "
+                        f"within {timeout}s")
+                continue
+            if item is self._END:
+                if self._error is not None:
+                    self._raise()
+                raise PrefetchError(
+                    f"{self._name}: chunk {chunk_idx} requested past the "
+                    f"end of the target ({self._n_chunks} chunks)")
+            c, slab = item
+            if c != chunk_idx:           # stale slab from before a seek
+                continue
+            self._next = chunk_idx + 1
+            return slab
+
+    def _raise(self):
+        err = self._error
+        raise PrefetchError(
+            f"{self._name}: producer thread failed while building a "
+            f"batch slab: {err!r}") from err
+
+    def seek(self, chunk_idx: int):
+        """Flush and restart the producer at ``chunk_idx`` (crash-replay
+        re-synchronisation: ``TrainRunner`` restores a checkpoint and the
+        loop re-enters at an earlier chunk)."""
+        self._halt()
+        self._next = int(chunk_idx)
+        self._start_thread(int(chunk_idx))
+
+    def retarget(self, produce: Callable[[int, Any], Any], n_chunks: int,
+                 *, make_staging: Optional[Callable[[], Any]] = None,
+                 start: int = 0):
+        """Flush the pipeline and aim it at a NEW chunk source — the rung-
+        boundary protocol: when a halving boundary re-shard-pads the layout
+        and re-jits the chunk, in-flight slabs for the old segment are
+        dropped, staging is rebuilt if the shapes changed, and the producer
+        restarts against the next segment's ``produce``."""
+        self._halt()
+        self._produce = produce
+        self._n_chunks = int(n_chunks)
+        if make_staging is not None:
+            self._make_staging = make_staging
+            self._staging = [make_staging(), make_staging()]
+        self._next = int(start)
+        self._start_thread(int(start))
+
+    def _halt(self):
+        """Stop the producer thread and drain the queue (dropping slabs)."""
+        self._stop.set()
+        while True:                      # unblock a producer stuck in put()
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            if self._thread.is_alive():  # pragma: no cover — defensive
+                raise RuntimeError(
+                    f"{self._name}: producer thread failed to stop")
+        self._thread = None
+
+    def close(self):
+        """Shut the producer down; idempotent, never hangs (the producer's
+        bounded put polls the stop flag)."""
+        if self._thread is not None:
+            self._halt()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -56,6 +56,42 @@ class TabularTask:
             idx = np.concatenate([idx, order[:batch_size - len(idx)]])
         return self.x[idx], self.y[idx]
 
+    def batch_slab(self, start: int, n_steps: int, batch_size: int,
+                   out=None):
+        """``n_steps`` consecutive batches as one ``(n_steps, ...)`` slab —
+        VALUE-IDENTICAL to stacking ``batch(step)`` for ``step`` in
+        ``[start, start + n_steps)`` (tests/test_pipeline.py pins this).
+
+        This is the §11 producer-granularity build: ``batch`` must stay a
+        pure random-access function of ``step``, so every call re-derives
+        its epoch's n-sample permutation; a slab builder knows its steps
+        are consecutive and derives each epoch order ONCE (single-entry
+        cache, so consecutive slabs inside one epoch pay only the row
+        gathers).  ``out=(xs, ys)`` writes into caller-owned staging
+        buffers (the prefetcher's alternating pair) instead of
+        allocating."""
+        n = self.n_samples
+        per_epoch = max(n // batch_size, 1)
+        if out is not None:
+            xs, ys = out
+        else:
+            xs = np.empty((n_steps, batch_size, self.n_features), np.float32)
+            ys = np.empty((n_steps, batch_size), np.int32)
+        for j in range(n_steps):
+            epoch, k = divmod(start + j, per_epoch)
+            cached = getattr(self, "_epoch_order", None)
+            if cached is None or cached[0] != epoch:
+                cached = (epoch, np.random.default_rng(
+                    np.random.SeedSequence([self.seed, epoch])).permutation(n))
+                self._epoch_order = cached
+            order = cached[1]
+            idx = order[(k * batch_size) % n: (k * batch_size) % n
+                        + batch_size]
+            if len(idx) < batch_size:  # wrap, as batch() does
+                idx = np.concatenate([idx, order[:batch_size - len(idx)]])
+            xs[j], ys[j] = self.x[idx], self.y[idx]
+        return xs, ys
+
     def split(self, frac: float = 0.8):
         k = int(self.n_samples * frac)
         return (self.x[:k], self.y[:k]), (self.x[k:], self.y[k:])

@@ -93,6 +93,7 @@ class TrainRunner:
                  ckpt_step_map: Optional[Callable[[int], int]] = None,
                  ckpt_step_unmap: Optional[Callable[[int], int]] = None,
                  ckpt_save_pred: Optional[Callable[[int], bool]] = None,
+                 on_restore: Optional[Callable[[int], None]] = None,
                  restore_shardings=None, mesh=None, state_specs=None):
         """``ckpt_meta``/``ckpt_step_map``: forwarded to the checkpointer
         (population runs attach the fused layout and record GLOBAL step
@@ -105,7 +106,13 @@ class TrainRunner:
         PartitionSpec tree matching ``state``, e.g. ``{"params":
         layout.param_specs()}``) derive ``restore_shardings`` here, so
         callers wire their LOGICAL specs through and mid-run replay stays
-        sharded without hand-building NamedSharding trees."""
+        sharded without hand-building NamedSharding trees.
+
+        ``on_restore(step)`` fires after every crash restore with the step
+        the replay will re-enter at — the hook for re-synchronising
+        step-indexed side state the replay would otherwise desynchronise
+        (the streaming data plane drops queued slabs / unresolved deferred
+        metrics for the abandoned trajectory, DESIGN.md §11)."""
         self.step_fn = step_fn
         self.state = state
         if restore_shardings is None and mesh is not None \
@@ -119,6 +126,7 @@ class TrainRunner:
                                       step_map=ckpt_step_map,
                                       save_pred=ckpt_save_pred)
         self.ckpt_step_unmap = ckpt_step_unmap or (lambda s: s)
+        self.on_restore = on_restore
         self.restore_shardings = restore_shardings
         self.straggler = straggler or StragglerPolicy(timeout_s=1e9)
         self.failure_hook = failure_hook
@@ -152,10 +160,15 @@ class TrainRunner:
                     f"no committed checkpoint under {self.ckpt.directory} "
                     "and the initial-state snapshot was already released")
             self.state = self._put(self._init_state_host)
+            if self.on_restore:
+                self.on_restore(0)
             return 0
         self.state, step = restore(self.ckpt.directory, self.state,
                                    shardings=self.restore_shardings)
-        return self.ckpt_step_unmap(step) + 1
+        step = self.ckpt_step_unmap(step) + 1
+        if self.on_restore:
+            self.on_restore(step)
+        return step
 
     def run(self, num_steps: int, start_step: int = 0) -> int:
         step = start_step

@@ -75,6 +75,28 @@ class PopulationServer:
     # published member set                                              #
     # ----------------------------------------------------------------- #
 
+    def refresh(self, params, layout):
+        """Re-target the server at a LIVE training run's current state —
+        the rung-boundary driver hook (launch/train.py --serve-publish).
+        Halving compaction changes the layout (member count, fused width),
+        so everything keyed on it resets: the per-mode jit cache (layouts
+        are jit constants), the leaderboard and published sets (old member
+        slots no longer exist), and the host staging slabs if the feature
+        width changed.  Call :meth:`publish` after to re-derive the served
+        member set on the new population."""
+        if layout.in_features != self.layout.in_features:
+            self._host = [
+                np.zeros((self.batch, layout.in_features), np.float32)
+                for _ in range(2)]
+        self.params = params
+        self.layout = layout
+        # a halving rung may shrink the population below the served top-k
+        self.topk = max(1, min(self.topk, real_slots(layout)))
+        self._steps.clear()
+        self.board = None
+        self.published = {"all": None}
+        return self
+
     def publish(self, x_calib, y_calib, task: str = "classification",
                 sort_by: str = "loss"):
         """Refresh the served member set from a leaderboard over a

@@ -187,10 +187,11 @@ def run_population(arch, args):
                                   restore_population, save_population)
     from repro.core import deep
     from repro.core.activations import PAPER_TEN
-    from repro.core.lifecycle import HalvingSchedule, compact, survivors
+    from repro.core.lifecycle import (HalvingSchedule, compact,
+                                      compact_factored, survivors)
     from repro.core.population import LayeredPopulation, Population
     from repro.core.selection import evaluate_population, leaderboard
-    from repro.data import TabularTask
+    from repro.data import DeferredMetrics, Prefetcher, TabularTask
     from repro.distributed import StragglerPolicy, TrainRunner
     from repro.distributed.sharding import (pop_axis_size,
                                             population_batch_shardings,
@@ -221,12 +222,6 @@ def run_population(arch, args):
             "--opt-state-dtype applies to --optimizer adamw only "
             "(sgd/momentum moments are f32; adafactor manages its own "
             "state dtypes) — it would be silently ignored here")
-    if opt_name == "adafactor" and schedule:
-        raise SystemExit(
-            "adafactor state is factored (v_row/v_col) and cannot be "
-            "compacted at halving rungs — use sgd/momentum/adamw with "
-            "--halving")
-
     # the record checkpoints carry under meta["train"]["optimizer"]: resume
     # must match it EXACTLY or fail loudly (require_optimizer_match) — a
     # state tree reinterpreted under different hyperparameters is silent
@@ -440,6 +435,9 @@ def run_population(arch, args):
         total = args.steps
         print_every = max(50 // scan, 1)
         stats = {}
+        pipeline = args.pipeline == "on"
+        pf = None          # ONE Prefetcher for the run, retargeted per rung
+        pending = []       # the in-flight chunk's DeferredMetrics (≤ 1)
 
         def train_segment(params, opt_state, lp, opt, seg_start, seg_end):
             """Global steps [seg_start, seg_end) under the CURRENT layout:
@@ -447,23 +445,98 @@ def run_population(arch, args):
             batches device_put sharded over the 'data' axis, TrainRunner
             replay/checkpoints against the layout's own param AND opt spec
             trees (the state key is 'extra' to match
-            ``save_population``/``restore_population``'s on-disk schema)."""
+            ``save_population``/``restore_population``'s on-disk schema).
+
+            With ``--pipeline on`` (default) the segment runs through the
+            streaming data plane (data/pipeline.py, DESIGN.md §11): a
+            producer thread builds chunk c+1's slab into alternating host
+            staging and device_puts it (sharded over 'data') while chunk c
+            executes, the slab is DONATED into the chunk, and each chunk's
+            host metric fetch is DEFERRED until the next chunk is already
+            dispatched — the device queue never drains at the host
+            boundary.  The trajectory is bit-identical to ``--pipeline
+            off`` (same chunk index → same slab; tests/test_pipeline.py)."""
+            nonlocal pf
             lr = member_lr(lp)
             chunk_fn = deep.make_population_train_step(
                 lp, optimizer=opt, grad_clip=grad_clip,
                 m3_impl=args.m3_impl, bd_impl=args.bd_impl,
                 act_impl=args.act_impl, scan_steps=scan,
+                donate_batch=pipeline,
                 compute_dtype=args.compute_dtype,
                 lr_schedule=lr_sched)
             sh_x, sh_y = population_batch_shardings(mesh, args.batch)
             n_chunks = (seg_end - seg_start + scan - 1) // scan
 
+            # one probe batch pins the staging dtypes/shapes (pure function
+            # of the step index — building it twice changes nothing)
+            bx0, by0 = task.batch(seg_start, args.batch)
+
+            def make_staging():
+                return (np.empty((scan,) + bx0.shape, bx0.dtype),
+                        np.empty((scan,) + by0.shape, by0.dtype))
+
+            def build_slab(c, staging):
+                """Chunk c's (scan, B, ...) slab, staged on host and
+                device_put sharded — the producer-thread body (also the
+                synchronous path's builder, so both paths stage and copy
+                identically).  The slab handed to device_put is a SNAPSHOT
+                of the staging region: a sharded device_put of a numpy
+                array may zero-copy ALIAS its memory (jax CPU backend
+                does), so the reusable staging buffer itself must never
+                become a device buffer — the snapshot is what the device
+                owns, and nothing ever writes it again (DESIGN.md §11
+                aliasing rule)."""
+                sx, sy = staging
+                g0 = seg_start + c * scan
+                n = min(scan, seg_end - g0)
+                task.batch_slab(g0, n, args.batch, out=(sx[:n], sy[:n]))
+                return (jax.device_put(np.array(sx[:n]), sh_x),
+                        jax.device_put(np.array(sy[:n]), sh_y))
+
+            if pipeline:
+                if pf is None:
+                    pf = Prefetcher(build_slab, n_chunks,
+                                    make_staging=make_staging,
+                                    depth=args.prefetch_depth)
+                else:
+                    # rung-boundary flush: drop slabs staged for the OLD
+                    # segment, re-aim the producer at this one
+                    pf.retarget(build_slab, n_chunks,
+                                make_staging=make_staging)
+            sync_staging = None if pipeline else make_staging()
+
+            def resolve_metrics(pers, gnorms, g0, n, c):
+                """Host side of chunk c's metrics — runs at force() time,
+                i.e. after chunk c+1 is dispatched (pipelined) or inline
+                (sync).  Resolution happens in chunk order either way, so
+                the stats and prints match the historical loop exactly."""
+                def resolve():
+                    # mean over REAL members only — shard-pad fillers train
+                    # too but must not dilute the reported loss (a sharded
+                    # run prints the same numbers as its single-device twin)
+                    per = np.asarray(pers[:, :lp.num_real])
+                    stats.setdefault("first_loss", float(per[0].mean()))
+                    mean = float(per[-1].mean())
+                    stats["last_loss"] = mean
+                    metrics = {"loss": mean, "step": g0 + n - 1}
+                    if gnorms is not None:
+                        # pre-clip global grad norm, one per inner step —
+                        # the chunk's last one rides the metrics log
+                        metrics["grad_norm"] = float(np.asarray(gnorms)[n - 1])
+                    if c % print_every == 0:
+                        gn = (f"  grad norm {metrics['grad_norm']:.3f}"
+                              if gnorms is not None else "")
+                        print(f"step {g0 + n - 1:4d}  mean member loss "
+                              f"{mean:.4f}{gn}")
+                    return metrics
+                return resolve
+
             def step_fn(state, c):
                 g0 = seg_start + c * scan
                 n = min(scan, seg_end - g0)
-                bs = [task.batch(g0 + i, args.batch) for i in range(n)]
-                xs = jax.device_put(np.stack([b[0] for b in bs]), sh_x)
-                ys = jax.device_put(np.stack([b[1] for b in bs]), sh_y)
+                xs, ys = (pf.get(c) if pipeline
+                          else build_slab(c, sync_staging))
                 # with a schedule, the chunk takes the chunk-start GLOBAL
                 # step and carries it through the scan — g0 is derived from
                 # the segment, so crash replay and --resume stay consistent
@@ -472,24 +545,22 @@ def run_population(arch, args):
                 p, st, _losses, pers, gnorms = chunk_fn(
                     state["params"], state["extra"], xs, ys, lr,
                     *sched_args)
-                # mean over REAL members only — shard-pad fillers train too
-                # but must not dilute the reported loss (a sharded run
-                # prints the same numbers as its single-device twin)
-                pers = np.asarray(pers[:, :lp.num_real])
-                stats.setdefault("first_loss", float(pers[0].mean()))
-                mean = float(pers[-1].mean())
-                stats["last_loss"] = mean
-                metrics = {"loss": mean, "step": g0 + n - 1}
-                if gnorms is not None:
-                    # pre-clip global grad norm, one per inner step — the
-                    # chunk's last one rides the metrics log
-                    metrics["grad_norm"] = float(np.asarray(gnorms)[n - 1])
-                if c % print_every == 0:
-                    gn = (f"  grad norm {metrics['grad_norm']:.3f}"
-                          if gnorms is not None else "")
-                    print(f"step {g0 + n - 1:4d}  mean member loss "
-                          f"{mean:.4f}{gn}")
-                return {"params": p, "extra": st}, metrics
+                dm = DeferredMetrics(resolve_metrics(pers, gnorms, g0, n, c))
+                if pipeline:
+                    # chunk c is dispatched; NOW pay chunk c-1's host fetch
+                    # while c runs (the final chunk resolves after run())
+                    while pending:
+                        pending.pop(0).force()
+                    pending.append(dm)
+                else:
+                    dm.force()
+                return {"params": p, "extra": st}, dm
+
+            def on_restore(c):
+                # crash replay: metrics queued for the abandoned trajectory
+                # must not resolve (their chunks re-run); the prefetcher
+                # re-seeks itself on the out-of-order get(c)
+                pending.clear()
 
             def chunk_crosses_cadence(c):
                 # chunk c covers global steps [g0, g1): checkpoint iff one
@@ -514,14 +585,65 @@ def run_population(arch, args):
                                             seg_end) - 1,
                 ckpt_step_unmap=lambda g: (g + 1 - seg_start) // scan - 1,
                 ckpt_save_pred=chunk_crosses_cadence,
+                on_restore=on_restore,
                 mesh=mesh, state_specs={"params": lp.param_specs(),
                                         "extra": lp.opt_specs(opt)})
             runner.run(n_chunks)
+            # the segment's last chunk still owes its host fetch — resolve
+            # it before the rung boundary / final eval reads stats
+            while pending:
+                pending.pop(0).force()
             # planned work, counted once per segment (a crash-replayed
             # chunk must not inflate the reported throughput)
             stats["member_steps"] = (stats.get("member_steps", 0)
                                      + lp.num_real * (seg_end - seg_start))
             return runner.state["params"], runner.state["extra"]
+
+        def rewarm_adafactor_state(fresh, carried, lp_real, lp, opt):
+            """Merge the carried params-shaped momentum + step count into a
+            freshly initialised (born-sharded, all-zero) adafactor state on
+            the padded layout.  The factored v_row/v_col stay at the fresh
+            zeros — they reduce over the fused hidden axis, so survivors'
+            statistics mix members and cannot be gathered; zeroing them
+            costs the ~1/(1−b2)-step re-warm documented on --halving."""
+            if carried["m"] is None:
+                return {**fresh, "count": carried["count"]}
+            m_pad = deep.pad_state(carried["m"], lp_real, lp)
+            is_state_leaf = lambda x: isinstance(x, dict) and (
+                "v" in x or "v_row" in x)
+            o_sh = population_opt_shardings(lp, opt, mesh)
+            m_pad = jax.device_put(
+                m_pad, jax.tree.map(lambda sh: sh["m"], o_sh["leaves"],
+                                    is_leaf=is_state_leaf))
+            leaves = jax.tree.map(lambda st, m: {**st, "m": m},
+                                  fresh["leaves"], m_pad,
+                                  is_leaf=is_state_leaf)
+            return {"count": jax.device_put(carried["count"],
+                                            o_sh["count"]),
+                    "leaves": leaves}
+
+        server = None
+
+        def publish_live(params, lp):
+            """The PR-7 leftover driver hook: refresh the serving
+            leaderboard from the LIVE run so the published member set
+            tracks the halving ladder (rung boundaries + final state)."""
+            nonlocal server
+            from repro.launch.serve_population import PopulationServer
+            n_cal = xte_j.shape[0]
+            if args.rung_eval_batches:
+                n_cal = min(n_cal, args.rung_eval_batches * args.batch)
+            if server is None:
+                server = PopulationServer(
+                    params, lp, mesh=mesh, bd_impl=args.bd_impl,
+                    act_impl=args.act_impl, batch=args.batch,
+                    topk=min(4, lp.num_real))
+            else:
+                server.refresh(params, lp)
+            server.publish(xte_j[:n_cal], yte_j[:n_cal])
+            print(f"published: best1={server.published['best1']} "
+                  f"topk={server.published['topk']}")
+            return server
 
         # rung segments: [0, b0) prune [b0, b1) prune ... [b_last, total).
         # A resumed run re-enters the ladder at its checkpointed rung (the
@@ -529,58 +651,79 @@ def run_population(arch, args):
         segments = schedule.segments(total) if schedule else ((total, None),)
         t0 = time.time()
         pos = start
-        for i in range(min(rung, len(segments) - 1) if schedule else 0,
-                       len(segments)):
-            seg_end, keep_frac = segments[i]
-            if pos < seg_end:
-                params, opt_state = train_segment(params, opt_state, lp,
-                                                  opt, pos, seg_end)
-                pos = seg_end
-            if keep_frac is None:
-                continue
-            # ---- rung boundary: eval under the training sharding (on a
-            # subsampled split when --rung-eval-batches asks for cheap
-            # rungs — halving only needs rank fidelity at the cut line),
-            # prune, compact PARAMS AND OPTIMIZER MOMENTS into a freshly
-            # bucketed layout ON DEVICE (jitted static-index gather, no
-            # host round-trip), re-pad to the mesh (zero filler moments),
-            # device_put born-sharded; the next segment re-jits against the
-            # physically smaller population with a rebuilt optimizer whose
-            # per-member hyper trees follow the survivor mapping.
-            n_eval = xte_j.shape[0]
-            if args.rung_eval_batches:
-                n_eval = min(n_eval, args.rung_eval_batches * args.batch)
-            losses, _ = evaluate_population(params, lp, xte_j[:n_eval],
-                                            yte_j[:n_eval])
-            n_before = lp.num_real
-            keep = survivors(np.asarray(losses)[:n_before], keep_frac)
-            member_ids = member_ids[keep]
-            lp_real, params_keep, opt_keep = compact(lp, params, opt_state,
-                                                     keep)
-            rung = i + 1
-            lp = lp_real.shard_pad(pop_axis_size(mesh))
-            fill = jax.random.fold_in(jax.random.PRNGKey(args.seed),
-                                      1000 + rung)
-            params = jax.device_put(
-                deep.pad_params(params_keep, lp_real, lp, fill),
-                population_shardings(lp, mesh))
-            opt = build_opt(lp)
-            opt_state = jax.device_put(
-                deep.pad_state(opt_keep, lp_real, lp),
-                population_opt_shardings(lp, opt, mesh))
-            print(f"rung {i} @ step {pos - 1}: kept "
-                  f"{len(keep)}/{n_before} members -> {lp.describe()}")
-            if args.ckpt_every:
-                # force-save the COMPACTED state at the last COMPLETED step
-                # (pos-1 == the boundary step, except for catch-up prunes on
-                # a resume that was already past it), overwriting any
-                # cadence save of that step: the latest checkpoint always
-                # matches the live layout, so replay and --resume land on
-                # the new rung
-                save_population(args.ckpt_dir, pos - 1, params, lp,
-                                extra_state=opt_state,
-                                lifecycle=lifecycle_meta(),
-                                train_meta=train_meta)
+        try:
+            for i in range(min(rung, len(segments) - 1) if schedule else 0,
+                           len(segments)):
+                seg_end, keep_frac = segments[i]
+                if pos < seg_end:
+                    params, opt_state = train_segment(params, opt_state, lp,
+                                                      opt, pos, seg_end)
+                    pos = seg_end
+                if keep_frac is None:
+                    continue
+                # ---- rung boundary: eval under the training sharding (on a
+                # subsampled split when --rung-eval-batches asks for cheap
+                # rungs — halving only needs rank fidelity at the cut line),
+                # prune, compact PARAMS AND OPTIMIZER MOMENTS into a freshly
+                # bucketed layout ON DEVICE (jitted static-index gather, no
+                # host round-trip), re-pad to the mesh (zero filler moments),
+                # device_put born-sharded; the next segment re-jits against the
+                # physically smaller population with a rebuilt optimizer whose
+                # per-member hyper trees follow the survivor mapping.
+                n_eval = xte_j.shape[0]
+                if args.rung_eval_batches:
+                    n_eval = min(n_eval, args.rung_eval_batches * args.batch)
+                losses, _ = evaluate_population(params, lp, xte_j[:n_eval],
+                                                yte_j[:n_eval])
+                n_before = lp.num_real
+                keep = survivors(np.asarray(losses)[:n_before], keep_frac)
+                member_ids = member_ids[keep]
+                if opt_name == "adafactor":
+                    # factored second moments cannot ride the member-major
+                    # gather — carry momentum + count, re-init v_row/v_col
+                    lp_real, params_keep, fac_carry = compact_factored(
+                        lp, params, opt_state, keep)
+                    opt_keep = None
+                else:
+                    lp_real, params_keep, opt_keep = compact(lp, params,
+                                                             opt_state, keep)
+                rung = i + 1
+                lp = lp_real.shard_pad(pop_axis_size(mesh))
+                fill = jax.random.fold_in(jax.random.PRNGKey(args.seed),
+                                          1000 + rung)
+                params = jax.device_put(
+                    deep.pad_params(params_keep, lp_real, lp, fill),
+                    population_shardings(lp, mesh))
+                opt = build_opt(lp)
+                if opt_name == "adafactor":
+                    fresh = jax.jit(
+                        opt.init,
+                        out_shardings=population_opt_shardings(lp, opt, mesh))(
+                        params)
+                    opt_state = rewarm_adafactor_state(fresh, fac_carry,
+                                                       lp_real, lp, opt)
+                else:
+                    opt_state = jax.device_put(
+                        deep.pad_state(opt_keep, lp_real, lp),
+                        population_opt_shardings(lp, opt, mesh))
+                print(f"rung {i} @ step {pos - 1}: kept "
+                      f"{len(keep)}/{n_before} members -> {lp.describe()}")
+                if args.ckpt_every:
+                    # force-save the COMPACTED state at the last COMPLETED step
+                    # (pos-1 == the boundary step, except for catch-up prunes on
+                    # a resume that was already past it), overwriting any
+                    # cadence save of that step: the latest checkpoint always
+                    # matches the live layout, so replay and --resume land on
+                    # the new rung
+                    save_population(args.ckpt_dir, pos - 1, params, lp,
+                                    extra_state=opt_state,
+                                    lifecycle=lifecycle_meta(),
+                                    train_meta=train_meta)
+                if args.serve_publish:
+                    publish_live(params, lp)
+        finally:
+            if pf is not None:
+                pf.close()
         dt = time.time() - t0
 
         steps_run = max(total - start, 0)
@@ -603,6 +746,11 @@ def run_population(arch, args):
                                     extra_state=opt_state,
                                     lifecycle=lifecycle_meta(),
                                     train_meta=train_meta)
+
+        if args.serve_publish:
+            # final refresh: the served set always matches the state the
+            # run ended on (rung boundaries already published mid-ladder)
+            publish_live(params, lp)
 
         losses, accs = evaluate_population(params, lp, xte_j, yte_j)
         print("leaderboard:")
@@ -673,6 +821,26 @@ def main(argv=None):
                     help="population path: optimizer steps fused into one "
                          "jitted lax.scan chunk (donated params, one "
                          "dispatch per chunk)")
+    ap.add_argument("--pipeline", default="on", choices=["on", "off"],
+                    help="population path: the streaming data plane "
+                         "(DESIGN.md §11) — a producer thread stages the "
+                         "NEXT chunk's batch slab into alternating host "
+                         "buffers and device_puts it (sharded over 'data', "
+                         "donated into the chunk) while the current chunk "
+                         "runs, with per-chunk metric fetches deferred "
+                         "until the next chunk is dispatched.  "
+                         "Bit-identical trajectory to 'off' (the "
+                         "synchronous build-then-dispatch loop)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="--pipeline on: producer queue bound — how many "
+                         "chunks the data plane may run ahead before "
+                         "backpressure blocks it (2 = double buffering)")
+    ap.add_argument("--serve-publish", action="store_true",
+                    help="population path: refresh a PopulationServer "
+                         "leaderboard (launch/serve_population.py) from "
+                         "the LIVE run at every halving rung boundary and "
+                         "after the final step, so the published member "
+                         "set tracks the ladder")
     ap.add_argument("--per-member-lr", action="store_true",
                     help="paper §7: every member gets its own step size")
     ap.add_argument("--lr-schedule", default="constant",
@@ -719,7 +887,14 @@ def main(argv=None):
                          "global step, keep the best fraction of surviving "
                          "members and COMPACT the fused layout (rungs at or "
                          "past --steps never fire; resume with the same "
-                         "spec to continue a ladder mid-run)")
+                         "spec to continue a ladder mid-run).  With "
+                         "--optimizer adafactor, the factored v_row/v_col "
+                         "statistics are re-initialised to zero per member "
+                         "at each rung boundary (they reduce over the "
+                         "fused hidden axis and cannot be gathered "
+                         "member-major); momentum and the step count carry "
+                         "over, and the second moment re-warms in "
+                         "~1/(1-b2) steps (~100 at the default b2=0.99)")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, reduced=args.reduced)

@@ -237,6 +237,58 @@ def test_compact_rejects_factored_state_and_wrong_layout():
         compact(pop, params, None, [0])
 
 
+# --------------------------------------------------------------------- #
+# adafactor rung compaction (compact_factored)                          #
+# --------------------------------------------------------------------- #
+
+def test_compact_factored_carries_momentum_bit_exact():
+    """compact_factored on a REAL trained adafactor state: survivors'
+    momentum comes out bit-exact (in its stored bf16 dtype) through the
+    same gather as the params, the step count rides through, and the
+    factored v_row/v_col — which mix members over the fused axis — are
+    dropped for the caller to re-initialise."""
+    from repro.core.lifecycle import compact_factored
+    from repro.optim import adafactor
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    opt = adafactor(momentum=0.9)
+    state = opt.init(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, 6))
+    y = jax.random.randint(jax.random.PRNGKey(2), (9,), 0, 3)
+    for _ in range(3):
+        params, state, *_ = deep.opt_step(params, state, x, y, 0.01, opt,
+                                          LP)
+    keep = [0, 2, 3, 5]
+    new_lp, new_p, carry = compact_factored(LP, params, state, keep)
+    assert new_lp == LP.subset(keep)
+    assert int(carry["count"]) == 3
+    assert carry["m"] is not None
+    # momentum gathered exactly as the params are
+    from repro.core.lifecycle import compact_params
+
+    def leaf(st):
+        return st["m"]
+
+    from repro.core.lifecycle import _is_factored_leaf
+    m_tree = jax.tree.map(leaf, state["leaves"], is_leaf=_is_factored_leaf)
+    _tree_eq(carry["m"], compact_params(LP, new_lp, m_tree, keep))
+    for i, m in enumerate(keep):
+        _tree_eq(deep.extract_member(carry["m"], new_lp, i),
+                 deep.extract_member(m_tree, LP, m))
+
+
+def test_compact_factored_without_momentum_and_validation():
+    from repro.core.lifecycle import compact_factored
+    from repro.optim import adafactor
+    params = deep.init_params(jax.random.PRNGKey(0), LP)
+    state = adafactor(momentum=0.0).init(params)
+    new_lp, new_p, carry = compact_factored(LP, params, state, [1, 4])
+    assert carry["m"] is None and int(carry["count"]) == 0
+    assert new_lp.num_members == 2
+    # params-shaped (non-factored) states belong to compact(), loudly
+    with pytest.raises(ValueError, match="adafactor"):
+        compact_factored(LP, params, {"mu": params}, [0])
+
+
 def test_trajectory_equals_no_pruning_run():
     """THE lifecycle invariant: members are independent, so a survivor's
     post-compaction trajectory (smaller fused layout, re-jitted step)

@@ -1,0 +1,314 @@
+"""Streaming data plane (DESIGN.md §11): Prefetcher semantics (ordering,
+backpressure, seek/retarget, producer-failure surfacing, clean shutdown),
+DeferredMetrics laziness, slab-build value parity, and the driver-level
+bit-identity contract — a pipelined run must reproduce the synchronous
+run's params AND optimizer state exactly, with and without --halving."""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import DeferredMetrics, PrefetchError, Prefetcher, TabularTask
+
+# --------------------------------------------------------------------- #
+# Prefetcher unit semantics                                             #
+# --------------------------------------------------------------------- #
+
+
+def test_prefetcher_orders_and_matches_sync():
+    made = []
+
+    def produce(c, staging):
+        made.append(c)
+        return c * 10
+
+    with Prefetcher(produce, 8) as pf:
+        got = [pf.get(c) for c in range(8)]
+    assert got == [c * 10 for c in range(8)]
+    assert made == list(range(8))
+
+
+def test_prefetcher_get_past_end_raises():
+    with Prefetcher(lambda c, s: c, 3) as pf:
+        for c in range(3):
+            pf.get(c)
+        with pytest.raises(PrefetchError, match="past the end"):
+            pf.get(3)
+
+
+def test_prefetcher_backpressure_bounded():
+    """The producer runs at most ``depth`` chunks ahead of the consumer
+    before blocking on the bounded queue (+1 build may be in flight)."""
+    made = []
+
+    def produce(c, staging):
+        made.append(c)
+        return c
+
+    with Prefetcher(produce, 100, depth=2) as pf:
+        deadline = time.monotonic() + 5.0
+        while len(made) < 3 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        time.sleep(0.1)          # would run away here if unbounded
+        assert max(made) <= 3    # depth slabs queued + 1 build in flight
+        pf.get(0)
+        pf.get(1)
+        deadline = time.monotonic() + 5.0
+        while len(made) < 5 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert max(made) <= 5
+
+
+def test_prefetcher_staging_alternates():
+    """Consecutive chunks see the two distinct staging buffers
+    alternately — chunk k+1 never builds into the buffer chunk k staged."""
+    seen = []
+
+    def produce(c, staging):
+        seen.append(id(staging))
+        return c
+
+    with Prefetcher(produce, 6, make_staging=lambda: [0]) as pf:
+        for c in range(6):
+            pf.get(c)
+    assert len(set(seen)) == 2
+    assert all(a != b for a, b in zip(seen, seen[1:]))
+
+
+def test_prefetcher_out_of_order_get_seeks():
+    """A crash replay re-enters at an earlier chunk: get() re-syncs the
+    producer instead of delivering stale slabs."""
+    with Prefetcher(lambda c, s: c * 10, 10) as pf:
+        assert pf.get(0) == 0
+        assert pf.get(1) == 10
+        assert pf.get(0) == 0       # replay from 0
+        assert pf.get(1) == 10
+        assert pf.get(5) == 50      # skip ahead
+        assert pf.get(6) == 60
+
+
+def test_prefetcher_producer_exception_surfaces_and_close_never_hangs():
+    def produce(c, staging):
+        if c == 2:
+            raise RuntimeError("disk on fire")
+        return c
+
+    pf = Prefetcher(produce, 8)
+    assert pf.get(0) == 0
+    assert pf.get(1) == 1
+    with pytest.raises(PrefetchError, match="disk on fire") as ei:
+        pf.get(2)
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    t0 = time.monotonic()
+    pf.close()                      # dead producer: close must not hang
+    pf.close()                      # idempotent
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_prefetcher_close_unblocks_full_queue():
+    """close() while the producer is blocked mid-put (queue full, consumer
+    gone) joins the thread instead of hanging — the shutdown contract."""
+    pf = Prefetcher(lambda c, s: np.zeros(4), 1000, depth=1)
+    time.sleep(0.1)                 # let the producer fill + block
+    t0 = time.monotonic()
+    pf.close()
+    assert time.monotonic() - t0 < 5.0
+    assert threading.active_count() >= 1  # and no leaked thread hangs join
+
+
+def test_prefetcher_retarget_switches_source():
+    """The rung-boundary protocol: retarget drops in-flight slabs and
+    re-aims the producer at the new segment's builder/staging."""
+    pf = Prefetcher(lambda c, s: ("old", c), 100)
+    assert pf.get(0) == ("old", 0)
+    pf.retarget(lambda c, s: ("new", c), 4, start=0)
+    assert [pf.get(c) for c in range(4)] == [("new", c) for c in range(4)]
+    with pytest.raises(PrefetchError):
+        pf.get(4)
+    pf.close()
+
+
+def test_prefetcher_rejects_bad_depth():
+    with pytest.raises(ValueError, match="depth"):
+        Prefetcher(lambda c, s: c, 4, depth=0)
+
+
+# --------------------------------------------------------------------- #
+# DeferredMetrics                                                       #
+# --------------------------------------------------------------------- #
+
+
+def test_deferred_metrics_lazy_and_cached():
+    calls = []
+
+    def resolve():
+        calls.append(1)
+        return {"loss": 0.5, "step": 7}
+
+    m = DeferredMetrics(resolve)
+    assert not m.resolved and not calls   # storing costs nothing
+    assert m["loss"] == 0.5               # first access resolves
+    assert m.resolved and len(calls) == 1
+    assert dict(m) == {"loss": 0.5, "step": 7}
+    assert len(m) == 2 and "step" in m
+    assert len(calls) == 1                # cached, not re-resolved
+    assert "0.5" in repr(m)
+
+
+# --------------------------------------------------------------------- #
+# slab builds: value parity with per-step batch()                       #
+# --------------------------------------------------------------------- #
+
+
+def test_batch_slab_value_identical_to_per_step_batches():
+    """batch_slab (the §11 producer build, epoch permutation amortized)
+    must produce byte-identical values to stacking batch(step) — across
+    epoch boundaries, wrap-around tails, and via caller staging."""
+    for n, b in [(1000, 128), (256, 128), (300, 100)]:
+        t = TabularTask(n, 7, n_classes=3, seed=5)
+        per_epoch = max(n // b, 1)
+        start, steps = max(per_epoch - 2, 0), 3 * per_epoch + 4
+        ref_x = np.stack([t.batch(start + j, b)[0] for j in range(steps)])
+        ref_y = np.stack([t.batch(start + j, b)[1] for j in range(steps)])
+        sx, sy = t.batch_slab(start, steps, b)
+        np.testing.assert_array_equal(sx, ref_x)
+        np.testing.assert_array_equal(sy, ref_y)
+        ox = np.empty_like(sx)
+        oy = np.empty_like(sy)
+        rx, _ = t.batch_slab(start, steps, b, out=(ox, oy))
+        assert rx is ox
+        np.testing.assert_array_equal(ox, ref_x)
+        np.testing.assert_array_equal(oy, ref_y)
+
+
+# --------------------------------------------------------------------- #
+# driver bit-identity: --pipeline on == off                             #
+# --------------------------------------------------------------------- #
+
+
+def _drive(tmp_path, tag, pipeline, extra=()):
+    from repro.launch.train import main
+    return main([
+        "--arch", "parallelmlp-10k", "--reduced", "--steps", "8",
+        "--ckpt-every", "4", "--ckpt-dir", str(tmp_path / tag),
+        "--population-depths", "8,4;8,4;6;5", "--population-acts",
+        "relu,tanh", "--scan-steps", "2", "--samples", "256",
+        "--pipeline", "on" if pipeline else "off", *extra])
+
+
+def _final_ckpt_arrays(tmp_path, tag):
+    import repro.checkpoint as ckpt_mod
+    step = ckpt_mod.latest_steps(str(tmp_path / tag))[-1]
+    return np.load(os.path.join(str(tmp_path / tag),
+                                f"step_{step:08d}", "arrays.npz"))
+
+
+def _assert_bit_identical(pa, pb):
+    import jax
+    leaves_a, leaves_b = jax.tree.leaves(pa), jax.tree.leaves(pb)
+    assert len(leaves_a) == len(leaves_b)
+    for a, b in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_pipeline_bit_identical_plain(tmp_path):
+    pa, lpa = _drive(tmp_path, "on", True)
+    pb, lpb = _drive(tmp_path, "off", False)
+    assert lpa == lpb
+    _assert_bit_identical(pa, pb)
+
+
+@pytest.mark.slow
+def test_pipeline_bit_identical_halving_with_opt_state(tmp_path):
+    """Across halving rung boundaries (prefetcher retarget + re-jit) the
+    pipelined trajectory still matches synchronous exactly — params AND
+    the momentum optimizer state in the final checkpoint."""
+    extra = ["--optimizer", "momentum", "--halving", "2:0.5,4:0.5"]
+    pa, lpa = _drive(tmp_path, "on", True, extra)
+    pb, lpb = _drive(tmp_path, "off", False, extra)
+    assert lpa == lpb and lpa.num_real == 1
+    _assert_bit_identical(pa, pb)
+    za = _final_ckpt_arrays(tmp_path, "on")
+    zb = _final_ckpt_arrays(tmp_path, "off")
+    assert sorted(za.files) == sorted(zb.files)
+    extras = [k for k in za.files if k.startswith("extra/")]
+    assert any(k.startswith("extra/mu/") for k in extras)
+    for k in za.files:
+        np.testing.assert_array_equal(za[k], zb[k], err_msg=k)
+
+
+@pytest.mark.slow
+def test_pipeline_bit_identical_adafactor_halving(tmp_path):
+    """Adafactor + --halving now composes (factored stats re-initialized
+    per rung, momentum carried): pipelined == synchronous, and the ladder
+    prunes to one member."""
+    extra = ["--optimizer", "adafactor", "--weight-decay", "0.001",
+             "--halving", "2:0.5,4:0.5"]
+    pa, lpa = _drive(tmp_path, "on", True, extra)
+    pb, lpb = _drive(tmp_path, "off", False, extra)
+    assert lpa == lpb and lpa.num_real == 1
+    _assert_bit_identical(pa, pb)
+    za = _final_ckpt_arrays(tmp_path, "on")
+    zb = _final_ckpt_arrays(tmp_path, "off")
+    for k in za.files:
+        np.testing.assert_array_equal(za[k], zb[k], err_msg=k)
+
+
+# --------------------------------------------------------------------- #
+# 4-fake-device: slabs land with population_batch_shardings             #
+# --------------------------------------------------------------------- #
+
+_SHARDED_PIPELINE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+import jax, numpy as np
+import repro.data.pipeline as pl
+
+seen = []
+orig_get = pl.Prefetcher.get
+
+def spy(self, c, timeout=600.0):
+    slab = orig_get(self, c, timeout)
+    seen.append(tuple(a.sharding for a in slab))
+    return slab
+
+pl.Prefetcher.get = spy
+
+from repro.launch.train import main
+params, lp = main([
+    "--arch", "parallelmlp-10k", "--reduced", "--steps", "6",
+    "--population-depths", "16,8;12,4;7;9", "--population-acts",
+    "relu,tanh", "--scan-steps", "3", "--ckpt-every", "0",
+    "--pipeline", "on", "--ckpt-dir", sys.argv[1] + "/ck"])
+assert len(jax.devices()) == 4
+assert seen, "prefetcher never delivered a slab"
+
+from repro.distributed.sharding import population_batch_shardings
+from repro.launch.mesh import make_host_mesh
+sh_x, sh_y = population_batch_shardings(make_host_mesh(), 8)
+for shx, shy in seen:
+    assert shx == sh_x, (shx, sh_x)
+    assert shy == sh_y, (shy, sh_y)
+print("OK", len(seen))
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_slabs_carry_population_batch_shardings(tmp_path):
+    """On a 4-fake-device mesh the prefetcher's device slabs arrive with
+    exactly the shardings population_batch_shardings prescribes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    r = subprocess.run([sys.executable, "-c", _SHARDED_PIPELINE,
+                        str(tmp_path)],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

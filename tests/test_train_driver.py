@@ -173,9 +173,6 @@ def test_driver_flag_validation():
     with pytest.raises(SystemExit):
         main(["--arch", "parallelmlp-10k", "--reduced", "--steps", "1",
               "--optimizer", "adamw", "--per-member-weight-decay"])  # wd=0
-    with pytest.raises(SystemExit):
-        main(["--arch", "parallelmlp-10k", "--reduced", "--steps", "1",
-              "--optimizer", "adafactor", "--halving", "1000:0.5"])
     with pytest.raises(SystemExit):   # would be silently ignored otherwise
         main(["--arch", "parallelmlp-10k", "--reduced", "--steps", "1",
               "--optimizer", "momentum", "--opt-state-dtype", "bfloat16"])
