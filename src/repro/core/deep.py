@@ -137,6 +137,27 @@ def block_diag_fused_infer(h: jax.Array, w_buckets, lp: LayeredPopulation,
         interpret=interpret)
 
 
+def block_diag_fused_infer_int8(h: jax.Array, qlayer: dict,
+                                lp: LayeredPopulation, l: int, *,
+                                interpret: bool | None = None,
+                                block_b: int | None = None) -> jax.Array:
+    """``block_diag_fused_infer`` over the int8 serve copy (DESIGN.md §12).
+    ``qlayer`` is one ``quantize_population`` mid entry — the PRE-PACKED,
+    identity-augmented int8 tile array, its per-member-per-tile f32 scales,
+    and the f32 bias — so unlike the f32/bf16 path there is no per-call
+    ``pack_weight_tiles``/augment: weight bytes go straight from the int8
+    store into the kernel, which dequantizes inside the tile loop."""
+    from repro.kernels.ops import INFER_BLOCK_B, fused_layer_infer_int8
+    pout = lp.layer_pop(l + 1)
+    b_eff = (qlayer["b"].astype(jnp.float32)
+             * jnp.asarray(lp.active_unit_mask(l + 1), jnp.float32))
+    return fused_layer_infer_int8(
+        h, qlayer["wb"], qlayer["scale"], b_eff, lp.bd_layout(l),
+        pout.block_act_ids, pout.hidden_mask,
+        block_b=INFER_BLOCK_B if block_b is None else block_b,
+        interpret=interpret)
+
+
 BD_IMPLS = {
     "einsum": block_diag_einsum,
     "pallas": block_diag_pallas,
@@ -144,11 +165,14 @@ BD_IMPLS = {
 }
 
 # the ``infer=True`` registry: XLA impls are already residual-free, the
-# fused impl swaps in its forward-only twin
+# fused impl swaps in its forward-only twin.  The ``fused_int8`` entry is
+# the ``weights_dtype="int8"`` route — NOT selectable via ``bd_impl``
+# (its signature consumes the quantized layer dict, not bucket arrays).
 BD_INFER_IMPLS = {
     "einsum": block_diag_einsum,
     "pallas": block_diag_pallas,
     "fused": block_diag_fused_infer,
+    "fused_int8": block_diag_fused_infer_int8,
 }
 
 # impls whose kernel epilogue already applies bias + activation + mask —
@@ -207,15 +231,34 @@ def input_fused_infer(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
         interpret=interpret)
 
 
+def input_fused_infer_int8(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                           b_in: jax.Array, lp: LayeredPopulation,
+                           act_impl: str = "sliced", *,
+                           interpret: bool | None = None,
+                           block_b: int | None = None) -> jax.Array:
+    """``input_fused_infer`` over the int8 serve copy: the pre-padded int8
+    input weight + per-row-block scales (quantize_population), dequantized
+    inside the kernel's feature loop."""
+    from repro.kernels.ops import INFER_BLOCK_B, fused_input_infer_int8
+    p0 = lp.layer_pop(0)
+    return fused_input_infer_int8(
+        x, w_q, w_scale, b_in.astype(jnp.float32), p0.block_act_ids,
+        p0.hidden_mask, block=lp.block,
+        block_b=INFER_BLOCK_B if block_b is None else block_b,
+        interpret=interpret)
+
+
 IN_IMPLS = {
     "xla": input_xla,
     "fused": input_fused,
 }
 
-# ``infer=True`` twins of IN_IMPLS (same rule as BD_INFER_IMPLS)
+# ``infer=True`` twins of IN_IMPLS (same rule as BD_INFER_IMPLS);
+# ``fused_int8`` is the ``weights_dtype="int8"`` route, not an ``in_impl``
 IN_INFER_IMPLS = {
     "xla": input_xla,
     "fused": input_fused_infer,
+    "fused_int8": input_fused_infer_int8,
 }
 
 # input impls whose kernel epilogue already applies bias + activation + mask
@@ -433,16 +476,59 @@ def _resolve_compute_dtype(compute_dtype):
     return None if cd == jnp.dtype(jnp.float32) else cd
 
 
+def _resolve_weights_dtype(weights_dtype):
+    """``None``/``"float32"`` → None (weights consumed as stored);
+    ``"int8"`` → the quantized serve-copy route (params must be a
+    ``quant.quantize_population`` tree).  Anything else fails loudly —
+    only int8 has fused-dequant serving kernels; a bf16 weight STORE is
+    just ``tree_map(astype)`` on the params and needs no routing."""
+    if weights_dtype is None:
+        return None
+    wd = jnp.dtype(weights_dtype)
+    if wd == jnp.dtype(jnp.float32):
+        return None
+    if wd == jnp.dtype(jnp.int8):
+        return wd
+    raise ValueError(f"unsupported weights_dtype {weights_dtype!r} — only "
+                     "'int8' has fused-dequant serving kernels "
+                     "(DESIGN.md §12)")
+
+
 def _hidden(params, x, lp: LayeredPopulation, bd_impl: str = "einsum",
             act_impl: str = "sliced", bd_kwargs: dict | None = None,
-            compute_dtype=None, in_impl=None, infer: bool = False):
+            compute_dtype=None, in_impl=None, infer: bool = False,
+            weights_dtype=None):
     """Input layer + every mid layer → the last hidden activations
     (B, H_last_tot).  The shared trunk of ``forward`` and the fused loss
     head; ``in_impl`` routing as in ``forward``.  ``infer=True`` swaps the
     fused impls for their forward-only twins (``*_INFER_IMPLS``): no
-    custom_vjp attached, no residual emitted, bigger batch tiles."""
+    custom_vjp attached, no residual emitted, bigger batch tiles.
+    ``weights_dtype="int8"`` (serving only) routes through the
+    fused-dequant twins over a ``quantize_population`` tree."""
     cd = _resolve_compute_dtype(compute_dtype)
     cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
+    wd = _resolve_weights_dtype(weights_dtype)
+    if bd_impl.endswith("_int8"):
+        raise ValueError(f"bd_impl {bd_impl!r} is the weights_dtype='int8' "
+                         "route — request it via weights_dtype, not bd_impl")
+    if wd is not None:
+        if not infer:
+            raise ValueError(
+                "weights_dtype='int8' is a serving-only path — the "
+                "quantized copy is not differentiable; pass infer=True")
+        in_impl = _resolve_in_impl(in_impl, bd_impl)
+        if bd_impl not in FUSED_BD_IMPLS or in_impl not in FUSED_IN_IMPLS:
+            raise ValueError(
+                "weights_dtype='int8' needs the fused serving kernels "
+                f"(bd_impl='fused'), got bd_impl={bd_impl!r}, "
+                f"in_impl={in_impl!r}")
+        h = IN_INFER_IMPLS[in_impl + "_int8"](
+            cast(x), params["w_in"], params["w_in_scale"], params["b_in"],
+            lp, act_impl)
+        for l in range(lp.depth - 1):
+            h = BD_INFER_IMPLS[bd_impl + "_int8"](
+                cast(h), params["mid"][l], lp, l, **(bd_kwargs or {}))
+        return h
     in_impl = _resolve_in_impl(in_impl, bd_impl)
     bd_impls = BD_INFER_IMPLS if infer else BD_IMPLS
     in_impls = IN_INFER_IMPLS if infer else IN_IMPLS
@@ -472,7 +558,7 @@ def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
             bd_impl: str = "einsum", act_impl: str = "sliced",
             bd_kwargs: dict | None = None, m3_kwargs: dict | None = None,
             compute_dtype=None, in_impl=None, infer: bool = False,
-            head_impl=None, log_probs: bool = False):
+            head_impl=None, log_probs: bool = False, weights_dtype=None):
     """x (B, F) → logits (B, P, O) — every member an independent deep MLP.
 
     ``compute_dtype="bfloat16"`` applies the mixed-precision policy: matmul
@@ -496,18 +582,40 @@ def forward(params, x, lp: LayeredPopulation, m3_impl: str = "bucketed",
     per-member bias (and, under ``log_probs=True``, the log-softmax) in its
     epilogue, making the whole forward exactly depth+1 launches
     (``launch_count.fused_infer_budget``).  Numerics match the training
-    forward to f32 tolerance; the program is NOT differentiable."""
+    forward to f32 tolerance; the program is NOT differentiable.
+
+    ``weights_dtype="int8"`` (serving only, DESIGN.md §12): ``params``
+    must be a ``quant.quantize_population`` tree; every projection runs
+    its fused-dequant int8 twin — int8 weight tiles + f32 scales are the
+    ONLY weight bytes the program touches, at the same depth+1 launch
+    budget.  Requires ``infer=True`` and the fused impls."""
     cd = _resolve_compute_dtype(compute_dtype)
     cast = (lambda a: a) if cd is None else (lambda a: a.astype(cd))
+    wd = _resolve_weights_dtype(weights_dtype)
     h = _hidden(params, x, lp, bd_impl, act_impl, bd_kwargs, compute_dtype,
-                in_impl, infer)
+                in_impl, infer, weights_dtype)
     if infer:
-        from repro.core.m3 import HEAD_IMPLS, m3_infer_head
+        from repro.core.m3 import (HEAD_IMPLS, m3_infer_head,
+                                   m3_infer_head_int8)
         if head_impl is None:
-            head_impl = "fused" if bd_impl in FUSED_BD_IMPLS else "xla"
+            head_impl = (("fused_int8" if wd is not None else "fused")
+                         if bd_impl in FUSED_BD_IMPLS else "xla")
         if head_impl not in HEAD_IMPLS:
             raise ValueError(f"unknown head_impl {head_impl!r} "
                              f"(have {sorted(HEAD_IMPLS)})")
+        if wd is not None and head_impl != "fused_int8":
+            raise ValueError(
+                f"weights_dtype='int8' serves through head_impl="
+                f"'fused_int8' (the int8 head store has no f32 twin), "
+                f"got {head_impl!r}")
+        if head_impl == "fused_int8":
+            if wd is None:
+                raise ValueError("head_impl='fused_int8' needs "
+                                 "weights_dtype='int8'")
+            return m3_infer_head_int8(
+                cast(h), params["w_out"], params["w_out_scale"],
+                params["b_out"], lp.layer_pop(lp.depth - 1),
+                log_probs=log_probs, **(m3_kwargs or {}))
         if head_impl == "fused":
             # bias (and optional log-softmax) live in the kernel epilogue
             return m3_infer_head(cast(h), cast(params["w_out"]),

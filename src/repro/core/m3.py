@@ -174,8 +174,25 @@ def m3_infer_head(h: jax.Array, w2: jax.Array, b2: jax.Array,
                       log_probs=log_probs, interpret=interpret)
 
 
+def m3_infer_head_int8(h: jax.Array, w2_q: jax.Array, w2_scale: jax.Array,
+                       b2: jax.Array, pop: Population, *,
+                       log_probs: bool = False,
+                       interpret: bool | None = None,
+                       block_b: int | None = None) -> jax.Array:
+    """``m3_infer_head`` over the int8 serve copy (DESIGN.md §12): the
+    head weight stays int8 in HBM, one f32 scale per hidden tile is
+    dequantized inside the projection loop."""
+    from repro.kernels.ops import INFER_BLOCK_B, infer_head_int8  # lazy
+    return infer_head_int8(
+        h, w2_q, w2_scale, b2, np.asarray(pop.block_segment_ids),
+        block_h=pop.block,
+        block_b=INFER_BLOCK_B if block_b is None else block_b,
+        log_probs=log_probs, interpret=interpret)
+
+
 # inference head impls — deep.forward(infer=True) routes through this
 HEAD_IMPLS = {
     "xla": None,          # m3 logits + XLA bias/log_softmax (deep.forward)
     "fused": m3_infer_head,
+    "fused_int8": m3_infer_head_int8,   # int8 serve copy (weights_dtype)
 }

@@ -161,15 +161,19 @@ class Prefetcher:
             self._put(self._END)
 
     def _put(self, item) -> bool:
-        """Bounded put that stays responsive to ``close``/``retarget``:
-        never blocks longer than 50 ms without checking the stop flag."""
-        while not self._stop.is_set():
-            try:
-                self._q.put(item, timeout=0.05)
-                return True
-            except queue.Full:
-                continue
-        return False
+        """Bounded put with condition-variable backpressure: a blocked
+        producer parks on the queue's internal ``not_full`` condition and
+        wakes IMMEDIATELY when the consumer ``get``s a slab (no polling
+        interval — tests assert <10 ms).  ``close``/``retarget`` unblock a
+        full-queue put the same way: ``_halt`` sets the stop flag and then
+        drains the queue, each drained item notifying ``not_full``; the
+        post-wake stop check discards the stale hand-off (the queue object
+        is rebuilt on restart, so a raced-in item can never leak into the
+        next target's stream)."""
+        if self._stop.is_set():
+            return False
+        self._q.put(item)
+        return not self._stop.is_set()
 
     # ----------------------------------------------------------------- #
     # consumer                                                          #
@@ -259,8 +263,10 @@ class Prefetcher:
         self._thread = None
 
     def close(self):
-        """Shut the producer down; idempotent, never hangs (the producer's
-        bounded put polls the stop flag)."""
+        """Shut the producer down; idempotent, never hangs (``_halt``'s
+        queue drain wakes a producer blocked in ``put`` via the queue's
+        ``not_full`` condition, and the producer re-checks the stop flag
+        after every wake)."""
         if self._thread is not None:
             self._halt()
 

@@ -20,13 +20,20 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.quant import dequantize, quantize, symmetric_scale
+
 
 def quantize_int8(g: jax.Array, err: jax.Array):
-    """Returns (q int8, scale f32, new_err)."""
+    """Returns (q int8, scale f32, new_err).
+
+    Composes the shared symmetric-scale helpers (``repro.quant``) that the
+    serve-copy packer also uses — the op sequence is bit-identical to the
+    original inline formula (regression-tested in
+    tests/test_quantized_serve.py)."""
     gf = g.astype(jnp.float32) + err
-    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
-    new_err = gf - q.astype(jnp.float32) * scale
+    scale = symmetric_scale(gf)
+    q = quantize(gf, scale)
+    new_err = gf - dequantize(q, scale)
     return q, scale, new_err
 
 

@@ -124,6 +124,78 @@ def fused_input_fwd(x: jax.Array, w: jax.Array, bias: jax.Array,
 
 
 # --------------------------------------------------------------------- #
+# forward, int8 weights: in-loop dequant + dense GEMM + epilogue        #
+# --------------------------------------------------------------------- #
+
+def _int8_fwd_kernel(act_ref, sc_ref, x_ref, w_ref, b_ref, m_ref, y_ref,
+                     acc_ref):
+    """Int8-weight twin of ``_make_fwd_kernel(False)`` (DESIGN.md §12):
+    one f32 scale per hidden row block (each owned by one member), shared
+    across the feature reduction tiles — the scales ride the scalar
+    prefetch stream (indexed ``sc_ref[t]``, no per-step blocked operand),
+    and the int8 weight tile is dequantized on the VPU right before the
+    contraction.  Same grid, same epilogue, forward-only by
+    construction."""
+    t = pl.program_id(1)
+    kf = pl.program_id(2)
+    nf = pl.num_programs(2)
+
+    @pl.when(kf == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32) * sc_ref[t]
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kf == nf - 1)
+    def _epilogue():
+        u = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        m = m_ref[...].astype(jnp.float32)
+        y = jax.lax.switch(act_ref[t], _VAL_BRANCHES, u)
+        y_ref[...] = (y * m).astype(y_ref.dtype)
+
+
+def fused_input_int8_fwd(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                         bias: jax.Array, mask: jax.Array,
+                         act_ids: jax.Array, *, block: int, block_b: int,
+                         interpret: bool = False):
+    """x (B, F_pad), w_q (H, F_pad) int8, w_scale (H/block,) f32
+    scalar-prefetch, bias/mask (1, H), per-block act ids (H/block,) →
+    y (B, H)."""
+    b, f_pad = x.shape
+    h = w_q.shape[0]
+    block_f = pick_block_f(f_pad)
+    grid = (b // block_b, h // block, f_pad // block_f)
+    return pl.pallas_call(
+        _int8_fwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block_f),
+                             lambda i, t, kf, act, sc: (i, kf)),
+                pl.BlockSpec((block, block_f),
+                             lambda i, t, kf, act, sc: (t, kf)),
+                pl.BlockSpec((1, block), lambda i, t, kf, act, sc: (0, t)),
+                pl.BlockSpec((1, block), lambda i, t, kf, act, sc: (0, t)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block),
+                                   lambda i, t, kf, act, sc: (i, t)),
+            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h), x.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary", "arbitrary"),
+            (block_b, block_f), (block, block_f), (1, block),
+            (1, block), (block_b, block), (block_b, block)),
+        interpret=interpret,
+    )(act_ids, w_scale, x, w_q, bias, mask)
+
+
+# --------------------------------------------------------------------- #
 # backward: dx and dw in one pass, du = dy·g' in-register               #
 # --------------------------------------------------------------------- #
 

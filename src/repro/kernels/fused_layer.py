@@ -147,6 +147,89 @@ def fused_layer_fwd(x: jax.Array, wb: jax.Array, bias: jax.Array,
 
 
 # --------------------------------------------------------------------- #
+# forward, int8 weights: in-loop dequant + GEMM + bias + activation     #
+# --------------------------------------------------------------------- #
+
+def _int8_fwd_kernel(ins_ref, w_ids, outs_ref, first_ref, last_ref, act_ref,
+                     sc_ref, x_ref, wb_ref, b_ref, m_ref, y_ref, acc_ref):
+    """The serving twin of ``_make_fwd_kernel(False)`` for the int8 weight
+    store (DESIGN.md §12): the step loads an int8 weight tile plus its f32
+    per-member-per-tile scale (scalar-prefetched whole, indexed
+    ``sc_ref[w_ids[s]]`` — no per-step blocked operand) and dequantizes ON
+    THE VPU right before the MXU contraction — the f32 weight tile exists
+    only in registers, never in HBM.  Same grid, same blocked-operand count
+    as the f32 path, same epilogue: the launch count cannot differ from the
+    f32/bf16 path."""
+    s = pl.program_id(1)
+
+    @pl.when(first_ref[s] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = (wb_ref[...][0].astype(jnp.float32) * sc_ref[w_ids[s]])
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last_ref[s] == 1)
+    def _epilogue():
+        u = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        m = m_ref[...].astype(jnp.float32)
+        y = jax.lax.switch(act_ref[s], _VAL_BRANCHES, u)
+        y_ref[...] = (y * m).astype(y_ref.dtype)
+
+
+def fused_layer_int8_fwd(x: jax.Array, wb_q: jax.Array, wb_scale: jax.Array,
+                         bias: jax.Array, mask: jax.Array, s_in, s_w, s_out,
+                         s_first, s_last, s_act, *, n_out_tiles: int,
+                         n_steps: int, block: int, block_b: int,
+                         interpret: bool = False):
+    """x (B, in_tiles·blk), wb_q (n_tiles, blk, blk) int8, wb_scale
+    (n_tiles,) f32 scalar-prefetch, bias/mask (1, out·blk) →
+    y (B, out_tiles·blk).  Forward-only by construction — there is no
+    ``with_deriv`` variant."""
+    b = x.shape[0]
+    grid = (b // block_b, n_steps)
+    h_out = n_out_tiles * block
+    return pl.pallas_call(
+        _int8_fwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=7,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (block_b, block),
+                    lambda i, s, ins, w, outs, fr, la, act, sc: (i, ins[s])),
+                pl.BlockSpec(
+                    (1, block, block),
+                    lambda i, s, ins, w, outs, fr, la, act, sc:
+                        (w[s], 0, 0)),
+                pl.BlockSpec(
+                    (1, block),
+                    lambda i, s, ins, w, outs, fr, la, act, sc:
+                        (0, outs[s])),
+                pl.BlockSpec(
+                    (1, block),
+                    lambda i, s, ins, w, outs, fr, la, act, sc:
+                        (0, outs[s])),
+            ],
+            out_specs=pl.BlockSpec(
+                (block_b, block),
+                lambda i, s, ins, w, outs, fr, la, act, sc: (i, outs[s])),
+            scratch_shapes=[pltpu.VMEM((block_b, block), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h_out), x.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary"),
+            (block_b, block), (block, block), (1, block), (1, block),
+            (block_b, block), (block_b, block)),
+        interpret=interpret,
+    )(s_in, s_w, s_out, s_first, s_last, s_act, wb_scale, x, wb_q, bias,
+      mask)
+
+
+# --------------------------------------------------------------------- #
 # backward: ONE two-level-grid pass — dx and dw, du = dy·g' in-register #
 # --------------------------------------------------------------------- #
 

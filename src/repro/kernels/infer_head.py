@@ -104,3 +104,79 @@ def infer_head_fwd(h: jax.Array, w2: jax.Array, b2: jax.Array,
             (block_b, o), (block_b, o)),
         interpret=interpret,
     )(seg, h, w2, b2)
+
+
+# --------------------------------------------------------------------- #
+# int8 weights: in-loop dequant + projection + bias (+ log-softmax)     #
+# --------------------------------------------------------------------- #
+
+def _make_int8_kernel(log_probs: bool):
+    """Int8-weight twin of ``_make_kernel`` (DESIGN.md §12): the hidden
+    tile's f32 scale (one per hidden tile — each owned by exactly one
+    member's output rows) rides the scalar-prefetch stream next to ``seg``
+    (indexed ``sc_ref[t]``, no per-step blocked operand); the int8 weight
+    stripe is dequantized on the VPU before the MXU contraction.  Same
+    grid, same member-boundary epilogue."""
+    def kernel(seg_ref, sc_ref, h_ref, w_ref, b_ref, y_ref, acc_ref):
+        t = pl.program_id(1)
+        nt = pl.num_programs(1)
+        seg_t = seg_ref[t]
+        first = jnp.logical_or(t == 0, seg_ref[jnp.maximum(t - 1, 0)] != seg_t)
+        last = jnp.logical_or(t == nt - 1,
+                              seg_ref[jnp.minimum(t + 1, nt - 1)] != seg_t)
+
+        @pl.when(first)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        w = w_ref[...].astype(jnp.float32) * sc_ref[t]
+        acc_ref[...] += jax.lax.dot_general(
+            h_ref[...].astype(jnp.float32), w,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(last)
+        def _epilogue():
+            logits = acc_ref[...] + b_ref[...].astype(jnp.float32)
+            if log_probs:
+                mx = jnp.max(logits, axis=1, keepdims=True)
+                lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=1,
+                                      keepdims=True)) + mx
+                logits = logits - lse
+            y_ref[...] = logits[:, None, :]
+    return kernel
+
+
+def infer_head_int8_fwd(h: jax.Array, w2_q: jax.Array, w2_scale: jax.Array,
+                        b2: jax.Array, seg: jax.Array, num_members: int, *,
+                        block_h: int, block_b: int, log_probs: bool,
+                        interpret: bool = False) -> jax.Array:
+    """h (B, H), w2_q (O, H) int8, w2_scale (H/block_h,) f32
+    scalar-prefetch, b2 (P, O) → logits (or log-probs) (B, P, O) f32.
+    Forward-only, one launch."""
+    b, hh = h.shape
+    o = w2_q.shape[0]
+    p = num_members
+    grid = (b // block_b, hh // block_h)
+    return pl.pallas_call(
+        _make_int8_kernel(log_probs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, block_h),
+                             lambda i, t, seg_r, sc: (i, t)),
+                pl.BlockSpec((o, block_h), lambda i, t, seg_r, sc: (0, t)),
+                pl.BlockSpec((1, o), lambda i, t, seg_r, sc: (seg_r[t], 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, 1, o),
+                                   lambda i, t, seg_r, sc: (i, seg_r[t], 0)),
+            scratch_shapes=[pltpu.VMEM((block_b, o), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, p, o), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            ("arbitrary", "arbitrary"),
+            (block_b, block_h), (o, block_h), (1, o),
+            (block_b, o), (block_b, o)),
+        interpret=interpret,
+    )(seg, w2_scale, h, w2_q, b2)

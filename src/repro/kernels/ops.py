@@ -313,6 +313,50 @@ def fused_layer_infer(h: jax.Array, wb: jax.Array, b_eff: jax.Array, layout,
     return y[:b0]
 
 
+def fused_layer_infer_int8(h: jax.Array, wb_q: jax.Array,
+                           wb_scale: jax.Array, b_eff: jax.Array, layout,
+                           block_act_ids: np.ndarray, mask: np.ndarray, *,
+                           block_b: int = INFER_BLOCK_B,
+                           interpret: bool | None = None) -> jax.Array:
+    """``fused_layer_infer`` over the int8 serve copy (DESIGN.md §12):
+    consumes the packer's PRE-PACKED, identity-augmented tile array plus
+    per-member-per-tile f32 scales — no per-call pack/augment of weight
+    bytes, and the dequant runs inside the kernel's tile loop, so an f32
+    weight array never exists in this program."""
+    interpret = _resolve_interpret(interpret)
+    blk = layout.block
+    if h.shape[1] != layout.n_in_tiles * blk:
+        raise ValueError(f"input axis {h.shape[1]} != "
+                         f"{layout.n_in_tiles}×{blk}")
+    if wb_q.dtype != jnp.int8:
+        raise ValueError(f"int8 serve path got {wb_q.dtype} weight tiles")
+    if wb_q.shape != (layout.n_param_blocks + 1, blk, blk):
+        raise ValueError(
+            f"weight tiles {wb_q.shape} != ({layout.n_param_blocks + 1}, "
+            f"{blk}, {blk}) — the int8 store is pre-augmented (identity "
+            "tile appended by quantize_population)")
+    if wb_scale.shape != (layout.n_param_blocks + 1,):
+        raise ValueError(f"scales {wb_scale.shape} != "
+                         f"({layout.n_param_blocks + 1},)")
+    h_out = layout.n_out_tiles * blk
+    if b_eff.shape != (h_out,):
+        raise ValueError(f"bias shape {b_eff.shape} != ({h_out},)")
+    import numpy as _np
+    s_act = _np.asarray(block_act_ids, _np.int32)[
+        _np.asarray(layout.s_out, _np.int32)]
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    ids = _bd_ids(layout, transposed=False)
+    y = _flk.fused_layer_int8_fwd(
+        hp, wb_q, wb_scale.astype(jnp.float32).reshape(-1),
+        jnp.reshape(b_eff, (1, -1)),
+        jnp.asarray(_np.asarray(mask, _np.float32)).reshape(1, -1), *ids,
+        jnp.asarray(s_act),
+        n_out_tiles=layout.n_out_tiles, n_steps=layout.n_steps,
+        block=blk, block_b=block_b, interpret=interpret)
+    return y[:b0]
+
+
 # --------------------------------------------------------------------- #
 # fused input layer: dense GEMM + bias + activation epilogue            #
 # --------------------------------------------------------------------- #
@@ -405,6 +449,43 @@ def fused_input_infer(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
         jnp.asarray(np.asarray(mask, np.float32)).reshape(1, -1),
         jnp.asarray(np.asarray(block_act_ids, np.int32)),
         block=block, block_b=block_b, with_deriv=False, interpret=interpret)
+    return y[:b0]
+
+
+def fused_input_infer_int8(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                           b_in: jax.Array, block_act_ids: np.ndarray,
+                           mask: np.ndarray, *, block: int,
+                           block_b: int = INFER_BLOCK_B,
+                           interpret: bool | None = None) -> jax.Array:
+    """``fused_input_infer`` over the int8 serve copy: ``w_q`` is stored
+    PRE-PADDED to the kernel's feature tile (quantize_population), with one
+    f32 scale per hidden row block dequantized inside the tile loop —
+    weight bytes are never padded or upcast per call."""
+    interpret = _resolve_interpret(interpret)
+    h = w_q.shape[0]
+    if h % block:
+        raise ValueError(f"hidden axis {h} not {block}-aligned")
+    if w_q.dtype != jnp.int8:
+        raise ValueError(f"int8 serve path got {w_q.dtype} input weight")
+    fmult = 8 if x.shape[1] <= 128 else 128
+    f_pad = x.shape[1] + ((-x.shape[1]) % fmult)
+    if w_q.shape[1] != f_pad:
+        raise ValueError(
+            f"int8 input weight has F={w_q.shape[1]}, expected the "
+            f"pre-padded {f_pad} (quantize_population stores it padded)")
+    if w_scale.shape != (h // block,):
+        raise ValueError(f"scales {w_scale.shape} != ({h // block},)")
+    if b_in.shape != (h,):
+        raise ValueError(f"bias shape {b_in.shape} != ({h},)")
+    block_b = min(block_b, max(8, 1 << (x.shape[0] - 1).bit_length()))
+    xp, b0 = _pad_axis(x, 0, block_b)
+    xp, _ = _pad_axis(xp, 1, fmult)
+    y = _fik.fused_input_int8_fwd(
+        xp, w_q, w_scale.astype(jnp.float32).reshape(-1),
+        jnp.reshape(b_in, (1, -1)).astype(jnp.float32),
+        jnp.asarray(np.asarray(mask, np.float32)).reshape(1, -1),
+        jnp.asarray(np.asarray(block_act_ids, np.int32)),
+        block=block, block_b=block_b, interpret=interpret)
     return y[:b0]
 
 
@@ -578,6 +659,38 @@ def infer_head(h: jax.Array, w_out: jax.Array, b_out: jax.Array,
     y = _ihk.infer_head_fwd(hp, w2p, b2p, seg, b2p.shape[0],
                             block_h=block_h, block_b=block_b,
                             log_probs=log_probs, interpret=interpret)
+    return y[:b0, :, :o0]
+
+
+def infer_head_int8(h: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                    b_out: jax.Array, block_seg_ids: np.ndarray, *,
+                    block_h: int, block_b: int = INFER_BLOCK_B,
+                    log_probs: bool = False,
+                    interpret: bool | None = None) -> jax.Array:
+    """``infer_head`` over the int8 serve copy: one f32 scale per hidden
+    tile dequantized in the projection loop.  O pads with int8 zero rows
+    (exact under any scale) and −1e30 bias columns, exactly like the f32
+    head."""
+    interpret = _resolve_interpret(interpret)
+    if h.shape[1] % block_h:
+        raise ValueError(f"hidden axis {h.shape[1]} not {block_h}-aligned")
+    if w_q.dtype != jnp.int8:
+        raise ValueError(f"int8 serve path got {w_q.dtype} head weight")
+    if w_scale.shape != (h.shape[1] // block_h,):
+        raise ValueError(f"scales {w_scale.shape} != "
+                         f"({h.shape[1] // block_h},)")
+    block_b = min(block_b, max(8, 1 << (h.shape[0] - 1).bit_length()))
+    hp, b0 = _pad_axis(h, 0, block_b)
+    w2p, o0 = _pad_axis(w_q, 0, 128 if not interpret else 1)
+    pad_o = w2p.shape[0] - o0
+    b2p = b_out.astype(jnp.float32)
+    if pad_o:
+        b2p = jnp.pad(b2p, ((0, 0), (0, pad_o)), constant_values=-1e30)
+    seg = jnp.asarray(np.asarray(block_seg_ids, np.int32))
+    y = _ihk.infer_head_int8_fwd(
+        hp, w2p, w_scale.astype(jnp.float32).reshape(-1), b2p, seg,
+        b2p.shape[0], block_h=block_h, block_b=block_b,
+        log_probs=log_probs, interpret=interpret)
     return y[:b0, :, :o0]
 
 

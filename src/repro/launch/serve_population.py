@@ -51,7 +51,7 @@ class PopulationServer:
 
     def __init__(self, params, layout, *, mesh=None, bd_impl: str = "fused",
                  act_impl: str = "pallas", compute_dtype=None,
-                 batch: int = 32, topk: int = 4,
+                 weights_dtype=None, batch: int = 32, topk: int = 4,
                  max_latency_ms: float = 5.0):
         self.params = params
         self.layout = layout
@@ -59,8 +59,15 @@ class PopulationServer:
         self.batch = int(batch)
         self.topk = int(topk)
         self.max_latency_ms = float(max_latency_ms)
+        self.weights_dtype = weights_dtype
         self._fw = dict(bd_impl=bd_impl, act_impl=act_impl,
                         compute_dtype=compute_dtype, infer=True)
+        if weights_dtype is not None:
+            self._fw["weights_dtype"] = weights_dtype
+        # int8 serve copy (DESIGN.md §12): built lazily, once, from the
+        # restored/refreshed master weights — after that the server holds
+        # ONLY the quantized tree (the f32 masters are released)
+        self._quantized = weights_dtype is None
         # donated double buffers: two host staging slabs alternate so the
         # next flush stages while the previous device slab is in flight,
         # and the device copy is donated into the jitted step
@@ -95,13 +102,30 @@ class PopulationServer:
         self._steps.clear()
         self.board = None
         self.published = {"all": None}
+        self._quantized = self.weights_dtype is None   # re-quantize fresh
         return self
+
+    def _ensure_quantized(self):
+        """Replace the master weights with the int8 serve copy, once per
+        refresh — every consumer of ``self.params`` (publish, the per-mode
+        steps, check_budget) funnels through here, so after the first call
+        the server never holds an f32/bf16 weight copy again."""
+        if self._quantized:
+            return
+        from repro.quant import quantize_population
+        self.params = jax.block_until_ready(
+            jax.jit(quantize_population, static_argnums=1)(
+                self.params, self.layout))
+        self._quantized = True
 
     def publish(self, x_calib, y_calib, task: str = "classification",
                 sort_by: str = "loss"):
         """Refresh the served member set from a leaderboard over a
         calibration split — scored with the SAME forward-only kernels the
-        serve steps run.  Returns the leaderboard rows."""
+        serve steps run (under ``weights_dtype="int8"`` that includes the
+        fused-dequant kernels, so the board ranks what is actually
+        served).  Returns the leaderboard rows."""
+        self._ensure_quantized()
         losses, accs = evaluate_population(
             self.params, self.layout, x_calib, y_calib, task=task,
             **self._fw)
@@ -127,6 +151,7 @@ class PopulationServer:
             if mode != "all" and mode not in self.published:
                 raise ValueError(f"mode {mode!r} needs a published member "
                                  "set — call publish() first")
+            self._ensure_quantized()
             ids = self.published.get(mode)
             lp, fw = self.layout, self._fw
 
@@ -205,6 +230,7 @@ class PopulationServer:
         """Loud-fail §10 invariants on the traced serve forward: exactly
         depth+1 Pallas launches and every one single-output (no residual
         buffers can exist in a serving program)."""
+        self._ensure_quantized()
         lp, fw = self.layout, self._fw
         xb = jnp.zeros((self.batch, lp.in_features), jnp.float32)
 
@@ -249,6 +275,11 @@ def main(argv=None):
     ap.add_argument("--bd-impl", default="fused")
     ap.add_argument("--act-impl", default="pallas")
     ap.add_argument("--compute-dtype", default=None)
+    ap.add_argument("--weights-dtype", default=None, choices=["int8"],
+                    help="int8: quantize the restored weights once "
+                    "(quant.quantize_population) and serve ONLY the int8 "
+                    "copy through the fused-dequant kernels — ~4x params "
+                    "HBM vs f32 (DESIGN.md §12)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
@@ -260,7 +291,8 @@ def main(argv=None):
         args.ckpt_dir, step=args.step, mesh=mesh, batch=args.batch,
         topk=args.topk, max_latency_ms=args.max_latency_ms,
         bd_impl=args.bd_impl, act_impl=args.act_impl,
-        compute_dtype=args.compute_dtype)
+        compute_dtype=args.compute_dtype,
+        weights_dtype=args.weights_dtype)
     lp = server.layout
     print(f"restored step {step}: {real_slots(lp)} members "
           f"(+{lp.num_members - real_slots(lp)} fillers), "

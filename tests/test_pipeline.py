@@ -120,6 +120,42 @@ def test_prefetcher_close_unblocks_full_queue():
     assert threading.active_count() >= 1  # and no leaked thread hangs join
 
 
+def test_prefetcher_blocked_put_wakes_fast_after_get():
+    """The bounded put is a condition-variable hand-off, not a poll: a
+    producer blocked on the full queue resumes producing within 10 ms of
+    the consumer's get (a polling put — the pre-§12 implementation slept
+    50 ms between stop-flag checks — fails this by construction)."""
+    produced = {}
+
+    def produce(c, staging):
+        produced[c] = time.perf_counter()
+        return c
+
+    pf = Prefetcher(produce, 8, depth=1)
+    try:
+        # depth=1: chunk 0 fills the queue, chunk 1 is produced (and
+        # timestamped) then blocks in put — so the hand-off we time is
+        # chunk 2's production after the get drains a slot
+        deadline = time.monotonic() + 5.0
+        while 1 not in produced and time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert 1 in produced, "producer never reached the blocking put"
+        time.sleep(0.05)            # let it park on the full queue
+        assert 2 not in produced, "producer was not actually blocked"
+        t_get = time.perf_counter()
+        assert pf.get(0) == 0
+        deadline = time.monotonic() + 5.0
+        while 2 not in produced and time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert 2 in produced
+        assert produced[2] - t_get < 0.010, (
+            f"blocked put took {(produced[2] - t_get) * 1e3:.1f} ms to "
+            "wake after the consumer get — backpressure is polling, not "
+            "a condition hand-off")
+    finally:
+        pf.close()
+
+
 def test_prefetcher_retarget_switches_source():
     """The rung-boundary protocol: retarget drops in-flight slabs and
     re-aims the producer at the new segment's builder/staging."""
