@@ -974,6 +974,200 @@ def run_halving(args):
         print(f"# wrote {args.json_out}")
 
 
+def run_refill(args):
+    """Slot-refill search vs plain halving on the SAME rung ladder
+    (core.lifecycle refill + search/*; DESIGN.md §13) → BENCH_refill.json.
+
+    Both runs train the same ladder with the same AOT-compile-excluded
+    timing as ``--halving``.  Plain halving shrinks the population at
+    every rung (device utilisation decays down the ladder, and every
+    post-rung segment re-compiles against the smaller layout); the
+    constant-size refill prunes the same members but scatters PBT-style
+    clones / fresh inits back into the freed slots IN PLACE, so every
+    segment trains a full population with the ONE chunk executable
+    compiled for segment 0 — the rung boundary pays eval + one jitted
+    gather/scatter and ZERO recompilation.
+
+    Tracked: models-explored-per-second (distinct members ever trained /
+    end-to-end wall), the per-rung slot-utilisation curve, and a
+    rung-boundary-overhead table (eval_s / update_s / compile_s,
+    recompiled flag).  ABORTs unless the refill run strictly wins
+    models/sec, matches-or-beats plain halving's best loss (survivors
+    train identical trajectories, so refill can only add better
+    newborns), and compiles exactly ONE chunk."""
+    from repro.core import lifecycle
+    from repro.core.selection import evaluate_population
+    from repro.data import TabularTask
+    from repro.search import RefillController, SearchSpace
+
+    base = [(48, 24), (64, 32), (40, 16), (56, 28)]
+    lp0 = LayeredPopulation.grid(
+        20, 2, base, ("relu", "tanh"),
+        repeats=max(args.members // (2 * len(base)), 1), block=args.block)
+    schedule = lifecycle.HalvingSchedule.parse(args.refill_halving)
+    total = args.refill_steps
+    n0 = lp0.num_members
+    task = TabularTask(4096, 20, n_classes=2, seed=0)
+    _, (xte, yte) = task.split()
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte)
+    n_rung = xte.shape[0]
+    if args.rung_eval_batches:
+        n_rung = min(n_rung, args.rung_eval_batches * args.batch)
+
+    def batches(a, b):
+        bs = [task.batch(s, args.batch) for s in range(a, b)]
+        return (jnp.asarray(np.stack([x for x, _ in bs])),
+                jnp.asarray(np.stack([y for _, y in bs])))
+
+    def run(refill: bool):
+        lp = lp0
+        params = deep_mod.init_params(jax.random.PRNGKey(0), lp)
+        controller = (RefillController(SearchSpace(), mode="pbt", seed=0)
+                      if refill else None)
+        member_ids = np.arange(n0)
+        next_id = n0
+        compiled = {}                 # (layout, scan) -> AOT executable
+        wall = overhead = compile_s = 0.0
+        pos = 0
+        segs, rungs = [], []
+        for i, (end, frac) in enumerate(schedule.segments(total)):
+            key = (lp, end - pos)
+            if key not in compiled:
+                chunk = deep_mod.make_population_train_step(
+                    lp, scan_steps=end - pos, donate=False)
+                xs, ys = batches(pos, end)
+                t0 = time.perf_counter()
+                compiled[key] = chunk.lower(params, xs, ys, 0.05).compile()
+                seg_compile = time.perf_counter() - t0
+                compile_s += seg_compile
+                if rungs:
+                    # a segment recompiling right after a rung boundary is
+                    # that boundary's layout-change cost — charge it there
+                    rungs[-1]["compile_s"] = round(seg_compile, 4)
+                    rungs[-1]["recompiled"] = True
+            xs, ys = batches(pos, end)
+            t0 = time.perf_counter()
+            out = compiled[key](params, xs, ys, 0.05)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            wall += dt
+            params = out[0]
+            segs.append({"seg": i, "steps": end - pos,
+                         "members": lp.num_members,
+                         "slot_utilisation": round(lp.num_members / n0, 4),
+                         "wall_s": round(dt, 4),
+                         "model_steps_per_s": round(
+                             lp.num_members * (end - pos) / max(dt, 1e-12),
+                             1)})
+            pos = end
+            if frac is None:
+                continue
+            # rung boundary — warm the per-layout eval jit first (the
+            # compile-excluded convention of every bench in this file)
+            evaluate_population(params, lp, xte[:n_rung], yte[:n_rung])
+            t0 = time.perf_counter()
+            losses, _ = evaluate_population(params, lp, xte[:n_rung],
+                                            yte[:n_rung])
+            keep = lifecycle.survivors(np.asarray(losses), frac)
+            dt_eval = time.perf_counter() - t0
+            n_pruned = lp.num_members - len(keep)
+            if refill:
+                plan = controller.plan(lp, np.asarray(losses), keep,
+                                       member_ids, rung=i + 1,
+                                       next_id=next_id, base_lr=0.05)
+                fresh = None
+                fm = plan.fresh_members
+                if fm:
+                    fresh = deep_mod.init_params(
+                        jax.random.fold_in(jax.random.PRNGKey(0), 5000 + i),
+                        LayeredPopulation(
+                            lp.in_features, lp.out_features,
+                            tuple(f.widths for f in fm),
+                            tuple(f.acts for f in fm), block=lp.block))
+                # warm the (lru-cached) scatter jit out of the timing
+                lifecycle.refill_params(lp, params, plan.assignments, fresh)
+                t1 = time.perf_counter()
+                params = jax.block_until_ready(lifecycle.refill_params(
+                    lp, params, plan.assignments, fresh))
+                dt_upd = time.perf_counter() - t1
+                member_ids = member_ids.copy()
+                for f in plan.members:
+                    member_ids[f.slot] = f.member_id
+                next_id += len(plan.members)
+            else:
+                lifecycle.compact(lp, params, None, keep)   # warm
+                t1 = time.perf_counter()
+                lp, params, _ = lifecycle.compact(lp, params, None, keep)
+                params = jax.block_until_ready(
+                    jax.tree.map(jnp.asarray, params))
+                dt_upd = time.perf_counter() - t1
+                member_ids = member_ids[keep]
+            overhead += dt_eval + dt_upd
+            rungs.append({"step": end, "eval_s": round(dt_eval, 4),
+                          "update_s": round(dt_upd, 4),
+                          "compile_s": 0.0,
+                          "pruned": int(n_pruned),
+                          "recompiled": False})
+            print(f"# {'refill' if refill else 'halving'} rung @ {end}: "
+                  f"{len(keep)} kept, {lp.num_members} training on "
+                  f"(eval {dt_eval*1e3:.0f} ms, update {dt_upd*1e3:.0f} ms)",
+                  flush=True)
+        losses, _ = evaluate_population(params, lp, xte, yte)
+        return {"wall_s": round(wall, 3),
+                "rung_overhead_s": round(overhead, 3),
+                "compile_s": round(compile_s, 3),
+                "chunk_compiles": len(compiled),
+                "models_explored": int(next_id),
+                "models_per_s": round(
+                    next_id / max(wall + overhead, 1e-12), 3),
+                "best_loss": round(float(np.min(np.asarray(losses))), 5),
+                "segments": segs, "rungs": rungs}
+
+    print(f"# population: {lp0.describe()}")
+    print(f"# ladder: {schedule.rungs} over {total} steps")
+    halv = run(refill=False)
+    refl = run(refill=True)
+    out = {
+        "bench": "refill_search", "population": lp0.describe(),
+        "batch": args.batch, "steps": total,
+        "ladder": [list(r) for r in schedule.rungs],
+        "halving": halv, "refill": refl,
+        "models_per_s_ratio": round(
+            refl["models_per_s"] / max(halv["models_per_s"], 1e-12), 3),
+        "best_loss_gap": round(refl["best_loss"] - halv["best_loss"], 5),
+        "note": "compile-excluded AOT timing as --halving; models/sec = "
+                "distinct members ever trained / (train + rung overhead) "
+                "wall; refill's chunk_compiles must stay 1 — the "
+                "constant-size rung boundary is a compile-cache hit",
+    }
+    print(f"# halving: {halv['models_explored']} models, "
+          f"{halv['models_per_s']}/s, best {halv['best_loss']:.4f}, "
+          f"{halv['chunk_compiles']} compiles ({halv['compile_s']:.2f}s)")
+    print(f"# refill:  {refl['models_explored']} models, "
+          f"{refl['models_per_s']}/s, best {refl['best_loss']:.4f}, "
+          f"{refl['chunk_compiles']} compile ({refl['compile_s']:.2f}s) "
+          f"-> {out['models_per_s_ratio']}x models/s, "
+          f"loss gap {out['best_loss_gap']:+.4f}")
+    if refl["chunk_compiles"] != 1:
+        raise SystemExit(f"ABORT: constant-size refill compiled "
+                         f"{refl['chunk_compiles']} chunks (want exactly 1 "
+                         "— the rung boundary must be a compile-cache hit)")
+    if refl["models_per_s"] <= halv["models_per_s"]:
+        raise SystemExit(
+            f"ABORT: refill explored {refl['models_per_s']} models/s vs "
+            f"halving's {halv['models_per_s']} — the refill path must "
+            "strictly win exploration throughput")
+    if refl["best_loss"] > halv["best_loss"] + 1e-6:
+        raise SystemExit(
+            f"ABORT: refill best loss {refl['best_loss']} worse than "
+            f"halving's {halv['best_loss']} — survivors train identical "
+            "trajectories, so refill must match-or-beat")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {args.json_out}")
+
+
 def run_pipeline(args):
     """Streaming-data-plane bench (DESIGN.md §11) → BENCH_pipeline.json.
 
@@ -1270,6 +1464,21 @@ def main(argv=None):
                     help="--halving: evaluate only this many --batch-sized "
                          "eval batches at each rung boundary (0 = full "
                          "split; the final selection eval is always full)")
+    ap.add_argument("--refill", action="store_true",
+                    help="bench the constant-size slot-refill search vs "
+                         "plain halving on the same rung ladder (DESIGN.md "
+                         "§13): models-explored/sec, per-rung slot "
+                         "utilisation, zero-recompile rung boundaries -> "
+                         "BENCH_refill.json (ABORTS unless refill strictly "
+                         "wins models/sec, matches-or-beats best loss, and "
+                         "compiles exactly one chunk)")
+    ap.add_argument("--refill-steps", type=int, default=48,
+                    help="--refill: total optimizer steps for both runs")
+    ap.add_argument("--refill-halving", default="12:0.5,24:0.5,36:0.5",
+                    metavar="RUNGS",
+                    help='--refill: rung ladder "STEP:KEEP,..." shared by '
+                         "both runs (equal-length segments keep scan_steps "
+                         "constant so the refill path needs ONE chunk)")
     ap.add_argument("--pipeline", action="store_true",
                     help="bench the streaming data plane (DESIGN.md §11): "
                          "synchronous build->dispatch->blocking-fetch driver "
@@ -1311,6 +1520,11 @@ def main(argv=None):
         if args.json_out is None:
             args.json_out = "BENCH_optim.json"
         run_optim(args)
+        return
+    if args.refill:
+        if args.json_out is None:
+            args.json_out = "BENCH_refill.json"
+        run_refill(args)
         return
     if args.halving:
         if args.json_out is None:

@@ -1,0 +1,116 @@
+"""Slot-refill search over a fused MLP population — DESIGN.md §13, live.
+
+    PYTHONPATH=src python examples/search_population.py
+
+Plain successive halving prunes losers and lets the freed device slots
+idle.  This demo runs the same rung ladder with the PR-10 search
+controller instead: at every rung the losers are pruned AND their slots
+are refilled in place — PBT-style exploit clones of the best survivors
+with perturbed learning rates, plus fresh inits where no same-arch
+survivor exists.  Because the population size (and therefore the fused
+layout) never changes, every rung boundary is one jitted gather/scatter
+and the WHOLE ladder trains through a single compiled chunk — the demo
+counts the compiles to prove it, then prints the lineage-annotated
+leaderboard ("born r2 of 3" = cloned from member 3 at rung 2).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LayeredPopulation, lifecycle
+from repro.core import deep as deep_mod
+from repro.core.selection import evaluate_population
+from repro.data import TabularTask
+from repro.search import RefillController, SearchSpace
+
+SEED = 0
+STEPS, BATCH = 48, 128
+LADDER = "12:0.5,24:0.5,36:0.5"
+
+
+def main():
+    lp = LayeredPopulation.grid(
+        16, 2, [(32, 16), (24, 12), (16, 8), (8, 4)], ("relu", "tanh"),
+        repeats=2, block=8)
+    n0 = lp.num_members
+    space = SearchSpace.parse("lr=0.3..3;lr_perturb=0.8,1.25")
+    controller = RefillController(space, mode="pbt", seed=SEED)
+    print(f"population: {lp.describe()}")
+    print(f"ladder: {LADDER} over {STEPS} steps, space: lr=0.3..3\n")
+
+    task = TabularTask(4096, 16, n_classes=2, seed=SEED)
+    _, (xte, yte) = task.split()
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte)
+
+    params = deep_mod.init_params(jax.random.PRNGKey(SEED), lp)
+    # per-member lr drawn from the SAME space the controller perturbs
+    lr = np.array(space.init_lr(SEED, n0, 0.05))
+    member_ids = np.arange(n0)
+    lineage = {int(i): (-1, 0) for i in member_ids}   # id -> (parent, rung)
+    next_id = n0
+
+    # ONE chunk for the whole run: per-member lr rides as a runtime
+    # argument, so refilled recipes re-enter the same executable
+    compiles = 0
+    schedule = lifecycle.HalvingSchedule.parse(LADDER)
+    chunk = None
+    pos = 0
+    t0 = time.perf_counter()
+    for rung, (end, frac) in enumerate(schedule.segments(STEPS), start=1):
+        if chunk is None:       # compiled exactly once — layout never changes
+            chunk = deep_mod.make_population_train_step(
+                lp, scan_steps=end - pos, donate=False)
+            compiles += 1
+        bs = [task.batch(s, BATCH) for s in range(pos, end)]
+        xs = jnp.asarray(np.stack([x for x, _ in bs]))
+        ys = jnp.asarray(np.stack([y for _, y in bs]))
+        params = chunk(params, xs, ys, jnp.asarray(lr))[0]
+        pos = end
+        if frac is None:
+            continue
+        losses, _ = evaluate_population(params, lp, xte, yte)
+        keep = lifecycle.survivors(np.asarray(losses), frac)
+        plan = controller.plan(lp, np.asarray(losses), keep, member_ids,
+                               rung=rung, next_id=next_id, base_lr=0.05,
+                               lr=lr)
+        fresh = None
+        if plan.fresh_members:
+            fresh = deep_mod.init_params(
+                jax.random.fold_in(jax.random.PRNGKey(SEED), 5000 + rung),
+                LayeredPopulation(
+                    lp.in_features, lp.out_features,
+                    tuple(f.widths for f in plan.fresh_members),
+                    tuple(f.acts for f in plan.fresh_members),
+                    block=lp.block))
+        params = lifecycle.refill_params(lp, params, plan.assignments, fresh)
+        member_ids = member_ids.copy()
+        for f in plan.members:
+            member_ids[f.slot] = f.member_id
+            lineage[f.member_id] = (f.parent_id, f.birth_rung)
+            lr[f.slot] = f.lr
+        next_id += len(plan.members)
+        n_ex = sum(1 for f in plan.members if f.origin == "exploit")
+        print(f"rung {rung} @ step {end}: pruned {n0 - len(keep)}, "
+              f"refilled {len(plan.members)} ({n_ex} exploit clones, "
+              f"{len(plan.members) - n_ex} fresh) — layout unchanged")
+    dt = time.perf_counter() - t0
+
+    losses, _ = evaluate_population(params, lp, xte, yte)
+    order = np.argsort(np.asarray(losses))[:5]
+    print(f"\nexplored {next_id} models in {dt:.1f}s "
+          f"({next_id / dt:.1f} models/s) with {compiles} chunk compile")
+    print("\nrank  loss     id   lr      born")
+    for r, slot in enumerate(order, start=1):
+        mid = int(member_ids[slot])
+        parent, born = lineage[mid]
+        origin = ("seed" if born == 0 else
+                  f"r{born} of {parent}" if parent >= 0 else f"r{born} fresh")
+        print(f"{r:4d}  {float(losses[slot]):.4f}  {mid:3d}  "
+              f"{lr[slot]:.4f}  {origin}")
+    assert compiles == 1, "constant-size refill must never re-compile"
+
+
+if __name__ == "__main__":
+    main()

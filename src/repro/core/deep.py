@@ -441,6 +441,30 @@ def pad_state(opt_state, lp: LayeredPopulation,
                                op="pad_state")
 
 
+def grow_state(opt_state, lp: LayeredPopulation,
+               lp_new: LayeredPopulation, positions,
+               gather: str = "device"):
+    """Splice an optimizer state into a GROWN layout (``lp_new ==
+    lp.grow(...)``): survivors' moments ride through bit-exact via the
+    same static-index splice as ``lifecycle.grow_params``, while the new
+    members at ``positions`` get ZERO moments — exactly what a fresh
+    ``opt.init`` gives a newborn, so an exploit clone restarts its
+    moment estimates rather than inheriting a stale parent trajectory.
+    Scalar leaves (step counts) pass through; moment dtype is preserved
+    per subtree (factored adafactor states fail loudly, as everywhere)."""
+    from repro.core.lifecycle import grow_params
+    positions = tuple(int(p) for p in positions)
+    fresh_abs = abstract_params(lp_new.subset(tuple(sorted(positions))))
+
+    def grow_sub(node):
+        dtype = jax.tree.leaves(node)[0].dtype
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, dtype), fresh_abs)
+        return grow_params(lp, lp_new, node, positions, zeros, gather=gather)
+
+    return map_params_subtrees(opt_state, abstract_params(lp), grow_sub,
+                               op="grow_state")
+
+
 # ---------------------------------------------------------------------- #
 # forward / loss / step                                                  #
 # ---------------------------------------------------------------------- #

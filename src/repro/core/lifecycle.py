@@ -281,6 +281,428 @@ def _is_factored_leaf(x) -> bool:
     return isinstance(x, dict) and ("v" in x or "v_row" in x)
 
 
+# ---------------------------------------------------------------------- #
+# growth (the inverse of compaction; DESIGN.md §13)                      #
+# ---------------------------------------------------------------------- #
+
+def _grow_src(new_lp: LayeredPopulation, positions) -> list:
+    """Per new-layout member: ``(tree, index)`` with tree 0 = the old
+    (surviving) params tree, tree 1 = the fresh (born) members' tree."""
+    # the fresh tree's members sit at sorted(positions) (it is built as
+    # ``new_lp.subset(sorted(positions))``), so a position's fresh index is
+    # its RANK among the positions, not its index in the positions tuple
+    rank = {p: r for r, p in enumerate(sorted(positions))}
+    src, oi = [], 0
+    for m in range(new_lp.num_members):
+        if m in rank:
+            src.append((1, rank[m]))
+        else:
+            src.append((0, oi))
+            oi += 1
+    return src
+
+
+def _grow_tree(lp: LayeredPopulation, new_lp: LayeredPopulation,
+               fresh_lp: LayeredPopulation, params, fresh, positions,
+               xp, fetch) -> dict:
+    """The splice itself (mirror of ``_compact_tree``): every leaf of the
+    grown tree is one static-index gather from the concatenation of the
+    surviving tree and the fresh-members tree, so survivors come out
+    bit-exact and born members carry exactly their fresh init.  Mid-layer
+    bias rows of a source tree SHALLOWER than the grown depth gather from
+    an appended zero row (those fused slices are identity pass-throughs —
+    masked bias, zero forever), which is exactly what a from-scratch init
+    of the grown layout would hold there."""
+    src = _grow_src(new_lp, positions)
+    srcs_lp = (lp, fresh_lp)
+
+    def fused_splice(l, leaf_old, leaf_fresh, axis=0, carried=False):
+        """Gather the grown layer-``l`` fused axis from (old ++ fresh
+        [++ zeros]).  ``carried``: a source shallower than ``l`` reads its
+        FINAL layer's slice (the pass-through carries the final width —
+        w_in/w_out semantics); otherwise those rows read zeros (mid-layer
+        bias semantics)."""
+        leaves = [leaf_old, leaf_fresh]
+        n = [leaf_old.shape[axis],
+             0 if leaf_fresh is None else leaf_fresh.shape[axis]]
+        pop_new = new_lp.layer_pop(l)
+        idx, need_zero = [], False
+        for m in range(new_lp.num_members):
+            t, i = src[m]
+            slp = srcs_lp[t]
+            l_src = l if l < slp.depth else (slp.depth - 1 if carried
+                                             else None)
+            if l_src is None or leaves[t] is None:
+                need_zero = True
+                idx.append(np.full(pop_new.padded_sizes[m], n[0] + n[1]))
+                continue
+            sp = slp.layer_pop(l_src)
+            base = 0 if t == 0 else n[0]
+            idx.append(np.arange(sp.offsets[i],
+                                 sp.offsets[i] + sp.padded_sizes[i]) + base)
+        idx = np.concatenate(idx)
+        parts = [leaf_old] if leaf_fresh is None else [leaf_old, leaf_fresh]
+        if need_zero:
+            shape = list(leaf_old.shape)
+            shape[axis] = 1
+            parts.append(xp.zeros(tuple(shape), leaf_old.dtype))
+        combined = parts[0] if len(parts) == 1 \
+            else xp.concatenate(parts, axis=axis)
+        return xp.take(combined, idx, axis=axis)
+
+    f = fetch
+    out = {"w_in": fused_splice(0, f(params["w_in"]), f(fresh["w_in"])),
+           "b_in": fused_splice(0, f(params["b_in"]), f(fresh["b_in"])),
+           "mid": []}
+    for l in range(new_lp.depth - 1):
+        pos_src = [(_real_bucket_pos(slp, l) if l < slp.depth - 1 else {})
+                   for slp in srcs_lp]
+        w_src = [params["mid"][l]["w"] if l < lp.depth - 1 else None,
+                 fresh["mid"][l]["w"] if l < fresh_lp.depth - 1 else None]
+        wl = []
+        for (m0, n, hin, hout, off_in, off_out, real) in \
+                new_lp.proj_buckets(l):
+            if not real:
+                continue
+            where = [(src[m][0],) + pos_src[src[m][0]][src[m][1]]
+                     for m in range(m0, m0 + n)]
+            parts, s = [], 0
+            while s < n:      # maximal contiguous runs from one src bucket
+                t, wi, i0 = where[s]
+                e = s + 1
+                while e < n and where[e] == (t, wi, i0 + (e - s)):
+                    e += 1
+                parts.append(f(w_src[t][wi])[i0: i0 + (e - s)])
+                s = e
+            wl.append(parts[0] if len(parts) == 1
+                      else xp.concatenate(parts, axis=0))
+        b_old = (f(params["mid"][l]["b"]) if l < lp.depth - 1
+                 else f(params["b_in"])[:0])      # typed empty, same dtype
+        b_fresh = (f(fresh["mid"][l]["b"]) if l < fresh_lp.depth - 1
+                   else None)
+        out["mid"].append({"w": wl,
+                           "b": fused_splice(l + 1, b_old, b_fresh)})
+    out["w_out"] = fused_splice(new_lp.depth - 1, f(params["w_out"]),
+                                f(fresh["w_out"]), axis=1, carried=True)
+    n_old = params["b_out"].shape[0]
+    rows = np.array([i if t == 0 else n_old + i for (t, i) in src])
+    out["b_out"] = xp.take(
+        xp.concatenate([f(params["b_out"]), f(fresh["b_out"])], axis=0),
+        rows, axis=0)
+    return out
+
+
+@functools.lru_cache(maxsize=32)
+def _device_grow_fn(lp, new_lp, fresh_lp, positions):
+    """Cached jitted splice per (layouts, positions) — the grow twin of
+    ``_device_gather_fn``."""
+    import jax.numpy as jnp
+    return jax.jit(lambda p, fr: _grow_tree(lp, new_lp, fresh_lp, p, fr,
+                                            positions, jnp, lambda a: a))
+
+
+def grow_params(lp: LayeredPopulation, new_lp: LayeredPopulation,
+                params, positions, fresh, gather: str = "device") -> dict:
+    """Splice a fresh-members tree into a surviving tree — the exact
+    inverse of :func:`compact_params` (grow-then-compact is bit-identical
+    to never growing; tests/test_refill.py).
+
+    ``new_lp`` must be ``lp.grow(...)`` with the same ``positions``;
+    ``fresh`` is a ``deep.init_params``-shaped tree for the NEW members'
+    own layout ``new_lp.subset(sorted(positions))`` — typically
+    ``init_params(key, new_lp.subset(sorted(positions)))`` for parameters
+    or an all-zero twin for optimizer moments.  Like compaction, the
+    splice works on parameters and on any structurally identical tree,
+    and ``gather="device"`` runs it as ONE jitted static-index program
+    (no host round-trip; the result is ready for the caller's
+    born-sharded ``device_put``)."""
+    positions = tuple(int(p) for p in positions)
+    fresh_lp = new_lp.subset(tuple(sorted(positions)))
+    n_old = new_lp.num_real - len(positions)
+    old_pos = tuple(m for m in range(new_lp.num_real)
+                    if m not in set(positions))
+    if len(old_pos) != n_old or new_lp.subset(old_pos) != lp:
+        raise ValueError(
+            "grow_params: new_lp is not lp.grow(...) at these positions "
+            "(the survivors' widths/activations must read back as lp)")
+    if gather == "device":
+        return _device_grow_fn(lp, new_lp, fresh_lp, positions)(params,
+                                                               fresh)
+    if gather != "host":
+        raise ValueError(f"gather must be 'device' or 'host', got {gather!r}")
+    cache = {}
+
+    def fetch(a):
+        if id(a) not in cache:
+            cache[id(a)] = _host(a)
+        return cache[id(a)]
+
+    return _grow_tree(lp, new_lp, fresh_lp, params, fresh, positions, np,
+                      fetch)
+
+
+def grow(pop: LayeredPopulation, params, opt_state, new_widths, new_acts,
+         positions, key, gather: str = "device", dtype=None):
+    """Refill a compacted population with NEW members →
+    ``(new_pop, new_params, new_opt_state)`` — the rung-boundary inverse of
+    :func:`compact` (DESIGN.md §13).
+
+    New members' parameters are freshly initialised from ``key`` (their own
+    ``init_params`` draw, independent of position); their optimizer moments
+    are ZERO — exactly what ``opt.init`` gives a newborn — while survivors'
+    params AND moments ride through bit-exact.  ``opt_state`` follows the
+    same params-shaped-subtree rule as compaction (factored adafactor
+    states are rejected; carry their momentum through
+    :func:`compact_factored` and grow it as a plain tree)."""
+    import jax.numpy as jnp
+
+    from repro.core.deep import grow_state, init_params
+    new_pop = pop.grow(new_widths, new_acts, positions)
+    fresh_lp = new_pop.subset(tuple(sorted(int(p) for p in positions)))
+    fresh = init_params(key, fresh_lp, dtype or jnp.float32)
+    new_params = grow_params(pop, new_pop, params, positions, fresh,
+                             gather=gather)
+    if opt_state is None:
+        return new_pop, new_params, None
+    return new_pop, new_params, grow_state(opt_state, pop, new_pop,
+                                           positions, gather=gather)
+
+
+# ---------------------------------------------------------------------- #
+# constant-size slot refill (zero re-jit; DESIGN.md §13)                 #
+# ---------------------------------------------------------------------- #
+
+def _refill_tree(lp: LayeredPopulation, assignments, fresh_lp, params,
+                 fresh, xp) -> dict:
+    """In-place scatter: write each refilled slot's member-major slices —
+    from its clone parent's slices (same leaf) or from the fresh-init tree
+    — leaving every surviving slot's bytes untouched.  All indices are
+    static; one jitted program on the device path."""
+    def scatter(arr, idx, vals, axis=0):
+        idx = np.asarray(idx)
+        if idx.size == 0:
+            return arr
+        if xp is np:
+            out = np.array(arr)
+            if axis == 0:
+                out[idx] = vals
+            else:
+                out[:, idx] = vals
+            return out
+        return arr.at[idx].set(vals) if axis == 0 \
+            else arr.at[:, idx].set(vals)
+
+    fresh_of = {}                 # slot -> index into fresh_lp's members
+    for slot, parent in assignments:
+        if parent < 0:
+            fresh_of[slot] = len(fresh_of)
+
+    def rows(pop_l, m):
+        return np.arange(pop_l.offsets[m],
+                         pop_l.offsets[m] + pop_l.padded_sizes[m])
+
+    def fused_scatter(l, leaf, fresh_leaf, axis=0, carried=False):
+        pop_l = lp.layer_pop(l)
+        dst_c, src_c, dst_f, src_f = [], [], [], []
+        for slot, parent in assignments:
+            if not carried and lp.member_depths[slot] <= l:
+                continue          # pass-through rows: zero before and after
+            if parent >= 0:
+                dst_c.append(rows(pop_l, slot))
+                src_c.append(rows(pop_l, parent))
+            else:
+                j = fresh_of[slot]
+                l_src = min(l, fresh_lp.depth - 1) if carried else l
+                sp = fresh_lp.layer_pop(l_src)
+                dst_f.append(rows(pop_l, slot))
+                src_f.append(rows(sp, j))
+        if dst_c:
+            dc, sc = np.concatenate(dst_c), np.concatenate(src_c)
+            leaf = scatter(leaf, dc, xp.take(leaf, sc, axis=axis), axis)
+        if dst_f:
+            df, sf = np.concatenate(dst_f), np.concatenate(src_f)
+            leaf = scatter(leaf, df, xp.take(fresh_leaf, sf, axis=axis),
+                           axis)
+        return leaf
+
+    out = {"w_in": fused_scatter(0, params["w_in"],
+                                 None if fresh is None else fresh["w_in"]),
+           "b_in": fused_scatter(0, params["b_in"],
+                                 None if fresh is None else fresh["b_in"]),
+           "mid": []}
+    for l in range(lp.depth - 1):
+        pos = _real_bucket_pos(lp, l)
+        pos_f = (_real_bucket_pos(fresh_lp, l)
+                 if fresh_lp is not None and l < fresh_lp.depth - 1 else {})
+        # group (dst bucket, src bucket) pairs so each pair is ONE
+        # vectorised gather+scatter, whatever order the slots arrive in
+        groups = {}
+        for slot, parent in assignments:
+            if not lp.proj_real(slot, l):
+                continue
+            wi_d, i_d = pos[slot]
+            if parent >= 0:
+                wi_s, i_s = pos[parent]
+                groups.setdefault((wi_d, 0, wi_s), []).append((i_d, i_s))
+            else:
+                wi_s, i_s = pos_f[fresh_of[slot]]
+                groups.setdefault((wi_d, 1, wi_s), []).append((i_d, i_s))
+        wl = list(params["mid"][l]["w"])
+        for (wi_d, t, wi_s), pairs in groups.items():
+            i_d = np.array([p[0] for p in pairs])
+            i_s = np.array([p[1] for p in pairs])
+            src_arr = wl[wi_s] if t == 0 else fresh["mid"][l]["w"][wi_s]
+            wl[wi_d] = scatter(wl[wi_d], i_d,
+                               xp.take(src_arr, i_s, axis=0))
+        out["mid"].append({
+            "w": wl,
+            "b": fused_scatter(l + 1, params["mid"][l]["b"],
+                               fresh["mid"][l]["b"]
+                               if fresh is not None
+                               and fresh_lp.depth - 1 > l else None)})
+    out["w_out"] = fused_scatter(lp.depth - 1, params["w_out"],
+                                 None if fresh is None else fresh["w_out"],
+                                 axis=1, carried=True)
+    dst_b = np.array([slot for slot, _ in assignments])
+    src_rows = []
+    for slot, parent in assignments:
+        if parent >= 0:
+            src_rows.append(xp.take(params["b_out"],
+                                    np.array([parent]), axis=0))
+        else:
+            src_rows.append(xp.take(fresh["b_out"],
+                                    np.array([fresh_of[slot]]), axis=0))
+    out["b_out"] = scatter(params["b_out"], dst_b,
+                           xp.concatenate(src_rows, axis=0))
+    return out
+
+
+@functools.lru_cache(maxsize=32)
+def _device_refill_fn(lp, assignments, fresh_lp, has_fresh):
+    import jax.numpy as jnp
+    if has_fresh:
+        return jax.jit(lambda p, fr: _refill_tree(lp, assignments, fresh_lp,
+                                                  p, fr, jnp))
+    return jax.jit(lambda p: _refill_tree(lp, assignments, None, p, None,
+                                          jnp))
+
+
+def refill_params(lp: LayeredPopulation, params, assignments,
+                  fresh=None, gather: str = "device") -> dict:
+    """Constant-size slot refill: overwrite pruned slots IN PLACE with
+    PBT-style exploit clones of survivors and/or freshly initialised
+    members, keeping the layout — and therefore every jitted program
+    compiled against it — unchanged (DESIGN.md §13).
+
+    ``assignments`` is a tuple of ``(slot, parent)`` pairs: ``slot`` is a
+    pruned REAL slot to refill, ``parent`` a surviving REAL slot to clone
+    (its (widths, activations) must equal the slot's — refills ADOPT the
+    slot's architecture, that is what keeps the layout equal), or ``-1``
+    to fresh-init the slot from ``fresh`` (a ``deep.init_params`` tree for
+    the fresh slots' own layout, in ascending slot order).  Survivor bytes
+    are untouched; the whole rewrite is one jitted static-index
+    gather/scatter on the default device path."""
+    assignments = tuple((int(s), int(p)) for s, p in assignments)
+    slots = [s for s, _ in assignments]
+    if len(set(slots)) != len(slots):
+        raise ValueError(f"refill_params: duplicate slots in {slots}")
+    slot_set = set(slots)
+    fresh_slots = []
+    for slot, parent in assignments:
+        if not 0 <= slot < lp.num_real:
+            raise ValueError(f"refill_params: slot {slot} out of range "
+                             f"[0, {lp.num_real}) (fillers cannot refill)")
+        if parent >= 0:
+            if parent in slot_set or not 0 <= parent < lp.num_real:
+                raise ValueError(
+                    f"refill_params: parent {parent} of slot {slot} must "
+                    "be a surviving real slot")
+            if (lp.widths[parent] != lp.widths[slot]
+                    or lp.activations[parent] != lp.activations[slot]):
+                raise ValueError(
+                    f"refill_params: parent {parent} arch "
+                    f"{lp.widths[parent]} does not match slot {slot} arch "
+                    f"{lp.widths[slot]} — clones adopt the slot's "
+                    "architecture")
+        else:
+            fresh_slots.append(slot)
+    fresh_lp = None
+    if fresh_slots:
+        if fresh is None:
+            raise ValueError("refill_params: fresh-init slots need a "
+                             "`fresh` params tree")
+        fresh_slots.sort()
+        fresh_lp = LayeredPopulation(
+            lp.in_features, lp.out_features,
+            tuple(lp.widths[s] for s in fresh_slots),
+            tuple(lp.activations[s] for s in fresh_slots), block=lp.block)
+    # fresh members are consumed in ascending slot order — re-sort so the
+    # fresh_of map inside _refill_tree matches fresh_lp's member order
+    assignments = tuple(sorted(assignments))
+    if gather == "device":
+        fn = _device_refill_fn(lp, assignments, fresh_lp,
+                               fresh_lp is not None)
+        return fn(params, fresh) if fresh_lp is not None else fn(params)
+    if gather != "host":
+        raise ValueError(f"gather must be 'device' or 'host', got {gather!r}")
+    return _refill_tree(lp, assignments, fresh_lp,
+                        jax.tree.map(_host, params),
+                        None if fresh is None else jax.tree.map(_host, fresh),
+                        np)
+
+
+def member_moment_mask(lp: LayeredPopulation, slots) -> dict:
+    """Params-structured tree of BROADCASTABLE keep masks: 1.0 on every
+    surviving member's slices, 0.0 on the refilled ``slots``.  Multiplying
+    an optimizer-moment tree by this mask is the in-place twin of the
+    grow path's zero-moment init (``optim.scale_member_moments`` applies
+    it schema-aware across all four optimizers)."""
+    slots = sorted(int(s) for s in slots)
+    for s in slots:
+        if not 0 <= s < lp.num_real:
+            raise ValueError(f"member_moment_mask: slot {s} out of range")
+
+    def fused_mask(l):
+        pop_l = lp.layer_pop(l)
+        m = np.ones(pop_l.total_hidden, np.float32)
+        for s in slots:
+            m[pop_l.offsets[s]: pop_l.offsets[s + 1]] = 0.0
+        return m
+
+    slot_set = set(slots)
+    member_m = np.array([0.0 if m in slot_set else 1.0
+                         for m in range(lp.num_members)], np.float32)
+    out = {"w_in": fused_mask(0)[:, None], "b_in": fused_mask(0), "mid": []}
+    for l in range(lp.depth - 1):
+        wl = []
+        for (m0, n, hin, hout, off_in, off_out, real) in lp.proj_buckets(l):
+            if not real:
+                continue
+            wl.append(member_m[m0: m0 + n][:, None, None])
+        out["mid"].append({"w": wl, "b": fused_mask(l + 1)})
+    out["w_out"] = fused_mask(lp.depth - 1)[None, :]
+    out["b_out"] = member_m[:, None]
+    return out
+
+
+def refill_state(opt_state, lp: LayeredPopulation, slots):
+    """Zero the refilled slots' member-major optimizer moments in place —
+    what ``opt.init`` would give the newborns — leaving survivors'
+    moments bit-identical and scalar counts untouched.  Works for all
+    four optimizers: sgd (stateless — count passes through), momentum
+    (``mu``), adamw (``m``/``v``, dtype preserved), adafactor (``m`` and
+    unfactored ``v`` leaves are zeroed; the factored ``v_row``/``v_col``
+    statistics mix members along their reduced axis and pass through
+    STALE — they re-warm in ~1/(1−b2) steps, the same documented cost as
+    riding adafactor through a compacting rung)."""
+    if opt_state is None or not slots:
+        return opt_state
+    from repro.core.deep import abstract_params
+    from repro.optim.optimizers import scale_member_moments
+    return scale_member_moments(opt_state, abstract_params(lp),
+                                member_moment_mask(lp, slots))
+
+
 def compact_factored(pop: LayeredPopulation, params, opt_state, keep,
                      gather: str = "device"):
     """Adafactor-aware rung compaction → ``(new_pop, new_params, carry)``.

@@ -648,6 +648,97 @@ class LayeredPopulation:
         return dataclasses.replace(self, widths=widths, activations=acts,
                                    n_pad=self.n_pad + d)
 
+    def _sort_key(self, m: int):
+        """The member-ordering key ``sorted()`` uses — exposed so growth
+        can insert new members at their sorted-merge position."""
+        return (len(self.widths[m]),
+                tuple(_round_up(h, self.block) for h in self.widths[m]),
+                self.activations[m], self.widths[m])
+
+    def grow_positions(self, widths, activations) -> tuple:
+        """Insert positions (strictly increasing indices into the GROWN
+        layout) that place each new ``(widths, activations)`` member at its
+        sorted-merge slot: after every existing member whose sort key is <=
+        its own, so a sorted layout stays sorted after :meth:`grow` and
+        equal-shape buckets merge instead of fragmenting.  Relative order
+        among equal-key new members follows the given order (stable).  If
+        the existing real members are NOT sorted, new members simply append
+        at the end (still a valid grow — just more buckets)."""
+        acts = tuple(_normalise_member_acts(a, len(tuple(w)), j)
+                     for j, (w, a) in enumerate(zip(widths, activations)))
+        widths = tuple(tuple(int(h) for h in w) for w in widths)
+        old_keys = [self._sort_key(m) for m in range(self.num_real)]
+        if any(old_keys[i] > old_keys[i + 1]
+               for i in range(len(old_keys) - 1)):
+            return tuple(self.num_real + j for j in range(len(widths)))
+
+        def key(j):
+            return (len(widths[j]),
+                    tuple(_round_up(h, self.block) for h in widths[j]),
+                    acts[j], widths[j])
+        order = sorted(range(len(widths)), key=key)
+        positions = [0] * len(widths)
+        oi = 0                      # old members already passed
+        placed = 0                  # new members already placed
+        for j in order:
+            while oi < len(old_keys) and old_keys[oi] <= key(j):
+                oi += 1
+            positions[j] = oi + placed
+            placed += 1
+        return tuple(positions)
+
+    def grow(self, widths, activations, positions) -> "LayeredPopulation":
+        """Fresh layout with new REAL members spliced in — the inverse of
+        :meth:`subset` and the lifecycle's slot-refill primitive
+        (core/lifecycle.py; DESIGN.md §13).
+
+        ``positions[j]`` is the index INTO THE RESULT where new member ``j``
+        lands (``grow_positions`` computes the sorted-merge placement);
+        positions must be distinct but may pair new members in any order.
+        Surviving members fill the complement in order, so
+        ``grown.subset(complement) == self`` — grow-then-compact round-trips
+        bit-exactly.  Growth happens on the REAL layout only (``n_pad`` must
+        be 0 — compact first, grow, then re-``shard_pad``); the population
+        depth extends automatically when a new member is deeper than every
+        existing one (existing members ride the added layers as identity
+        pass-throughs, exactly mirroring subset's depth shrink)."""
+        if self.n_pad:
+            raise ValueError(
+                "grow: layout carries shard-pad fillers; grow the real "
+                "layout (compact / subset first), then shard_pad the result")
+        widths = tuple(tuple(int(h) for h in w) for w in widths)
+        acts = tuple(_normalise_member_acts(a, len(w), j)
+                     for j, (w, a) in enumerate(zip(widths, activations)))
+        if len(widths) != len(acts) or not widths:
+            raise ValueError("grow: need at least one new member, with one "
+                             "activation spec per member")
+        positions = tuple(int(p) for p in positions)
+        if len(positions) != len(widths):
+            raise ValueError(
+                f"grow: {len(positions)} positions for {len(widths)} new "
+                "members")
+        n_total = self.num_real + len(widths)
+        for p in positions:
+            if not 0 <= p < n_total:
+                raise ValueError(
+                    f"grow: position {p} out of range [0, {n_total})")
+        if len(set(positions)) != len(positions):
+            raise ValueError(f"grow: duplicate positions in {positions}")
+        pos_map = dict(zip(positions, range(len(widths))))
+        out_w, out_a = [], []
+        oi = 0
+        for m in range(n_total):
+            if m in pos_map:
+                out_w.append(widths[pos_map[m]])
+                out_a.append(acts[pos_map[m]])
+            else:
+                out_w.append(self.widths[oi])
+                out_a.append(self.activations[oi])
+                oi += 1
+        return LayeredPopulation(self.in_features, self.out_features,
+                                 tuple(out_w), tuple(out_a),
+                                 block=self.block)
+
     def subset(self, keep) -> "LayeredPopulation":
         """Fresh layout of the given REAL members only — the lifecycle's
         compaction primitive (core/lifecycle.py; DESIGN.md §6).

@@ -120,8 +120,37 @@ def _member_arch(pop, m: int):
     return pop.hidden_sizes[m], pop.activations[m]
 
 
+def _check_member_ids(member_ids, nr: int):
+    """Validate a survivor→original id mapping: one entry per real member
+    and NO duplicates — a member born at rung r must never alias a pruned
+    seed's id (the refill driver issues fresh ids from a monotone counter;
+    a duplicate here means that invariant broke upstream)."""
+    import numpy as np
+    if len(member_ids) != nr:
+        raise ValueError(f"member_ids has {len(member_ids)} entries for "
+                         f"{nr} real members")
+    ids = np.asarray(member_ids)
+    if len(np.unique(ids)) != len(ids):
+        dup = sorted(int(i) for i in ids[
+            np.isin(ids, ids[np.concatenate(
+                ([False], np.diff(np.sort(ids)) == 0))])])
+        raise ValueError(f"member_ids contains duplicate original ids "
+                         f"{sorted(set(dup))} — a refilled member is "
+                         "aliasing a pruned member's id")
+
+
+def _lineage_entry(lineage, member_id: int):
+    """``lineage``: optional {original id → (parent id, birth rung)} from
+    the refill controller; seeds (absent keys) report parent -1, rung 0."""
+    if lineage is None:
+        return None
+    parent, born = lineage.get(int(member_id), (-1, 0))
+    return {"member": int(member_id), "parent": int(parent),
+            "born_rung": int(born)}
+
+
 def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None,
-                sort_by: str = "loss"):
+                sort_by: str = "loss", lineage=None):
     """Top-k members as (rank, member, hidden, activation, loss[, acc]).
 
     For layered populations ``hidden`` is the member's width tuple;
@@ -134,12 +163,17 @@ def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None,
     real member) from the successive-halving lifecycle — after compaction
     the fused layout renumbers members densely, but selection must keep
     speaking in the ids the run STARTED with, so ``member`` reports
-    ``member_ids[m]`` and the layout slot moves to ``slot``."""
+    ``member_ids[m]`` and the layout slot moves to ``slot``.  The mapping
+    must be duplicate-free (refilled members get FRESH ids, never a pruned
+    seed's).
+
+    ``lineage``: optional {original id → (parent id, birth rung)} from the
+    slot-refill controller; when given, every row gains a ``lineage``
+    column ({member, parent, born_rung}; seeds report parent -1, rung 0)
+    so refilled members are distinguishable from seeds."""
     import numpy as np
-    if member_ids is not None and len(member_ids) != _num_real(pop):
-        raise ValueError(
-            f"member_ids has {len(member_ids)} entries for "
-            f"{_num_real(pop)} real members")
+    if member_ids is not None:
+        _check_member_ids(member_ids, _num_real(pop))
     if sort_by == "loss":
         key = np.asarray(losses)[:_num_real(pop)]
     elif sort_by == "acc":
@@ -152,36 +186,42 @@ def leaderboard(pop, losses, accs=None, k: int = 10, member_ids=None,
     rows = []
     for r, m in enumerate(order):
         hidden, act = _member_arch(pop, int(m))
-        row = dict(rank=r + 1,
-                   member=int(m) if member_ids is None
-                   else int(member_ids[int(m)]),
+        mid = int(m) if member_ids is None else int(member_ids[int(m)])
+        row = dict(rank=r + 1, member=mid,
                    slot=int(m), hidden=hidden,
                    activation=act, loss=float(losses[m]))
         if accs is not None:
             row["acc"] = float(accs[m])
+        lin = _lineage_entry(lineage, mid)
+        if lin is not None:
+            row["lineage"] = lin
         rows.append(row)
     return rows
 
 
-def member_metrics(pop, losses, accs=None, member_ids=None):
+def member_metrics(pop, losses, accs=None, member_ids=None, lineage=None):
     """Structured per-member metric rows for EVERY real member, unranked —
     the first slice of the metrics module (ROADMAP direction 3).  Each row
-    is ``{member, slot, hidden, activation, depth, loss[, acc]}``; the
-    leaderboard is a sorted top-k view of exactly this table.  Shard-pad
+    is ``{member, slot, hidden, activation, depth, loss[, acc][, lineage]}``;
+    the leaderboard is a sorted top-k view of exactly this table (same
+    ``member_ids`` duplicate check, same ``lineage`` column).  Shard-pad
     fillers are excluded (their arrays hold identities, not models)."""
     import numpy as np
     nr = _num_real(pop)
-    if member_ids is not None and len(member_ids) != nr:
-        raise ValueError(f"member_ids has {len(member_ids)} entries for "
-                         f"{nr} real members")
+    if member_ids is not None:
+        _check_member_ids(member_ids, nr)
     rows = []
     for m in range(nr):
         hidden, act = _member_arch(pop, m)
-        row = dict(member=m if member_ids is None else int(member_ids[m]),
+        mid = m if member_ids is None else int(member_ids[m])
+        row = dict(member=mid,
                    slot=m, hidden=hidden, activation=act,
                    depth=len(hidden) if isinstance(hidden, tuple) else 1,
                    loss=float(np.asarray(losses)[m]))
         if accs is not None:
             row["acc"] = float(np.asarray(accs)[m])
+        lin = _lineage_entry(lineage, mid)
+        if lin is not None:
+            row["lineage"] = lin
         rows.append(row)
     return rows

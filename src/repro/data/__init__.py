@@ -1,6 +1,8 @@
 """Deterministic synthetic data pipelines (restart-safe, step-indexed)."""
-from repro.data.pipeline import DeferredMetrics, PrefetchError, Prefetcher
+from repro.data.pipeline import (DeferredMetrics, PrefetchError,
+                                 Prefetcher, staging_signature)
 from repro.data.synthetic import TabularTask, TokenTask, lm_batch
 
 __all__ = ["TabularTask", "TokenTask", "lm_batch",
-           "Prefetcher", "PrefetchError", "DeferredMetrics"]
+           "Prefetcher", "PrefetchError", "DeferredMetrics",
+           "staging_signature"]

@@ -46,6 +46,27 @@ class PrefetchError(RuntimeError):
     original exception chained (``raise ... from err``)."""
 
 
+def staging_signature(staging):
+    """Shape/dtype signature of a staging buffer — nested tuples mirroring
+    the buffer's structure with each numpy array replaced by
+    ``(shape, dtype.str)``.  This is the equality key
+    :meth:`Prefetcher.retarget` uses to decide whether the existing
+    staging buffers can be REUSED across a rung boundary (constant-
+    population refill keeps every slab shape identical) instead of being
+    discarded and reallocated; callers that know the next segment's shapes
+    can build the signature by hand without allocating anything."""
+    if staging is None:
+        return None
+    if isinstance(staging, (tuple, list)):
+        return tuple(staging_signature(s) for s in staging)
+    if not (hasattr(staging, "shape") and hasattr(staging, "dtype")):
+        # non-array leaf (e.g. a test double): opaque by type — never
+        # claims shape equality, so retarget falls back to a rebuild
+        return ("opaque", type(staging).__name__)
+    import numpy as np
+    return (tuple(staging.shape), np.dtype(staging.dtype).str)
+
+
 class DeferredMetrics(Mapping):
     """A metrics dict whose values stay on device until first access.
 
@@ -125,6 +146,7 @@ class Prefetcher:
         self._make_staging = make_staging
         self._staging = ([make_staging(), make_staging()]
                          if make_staging else [None, None])
+        self._signature = staging_signature(self._staging[0])
         self._n_chunks = int(n_chunks)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
@@ -232,18 +254,28 @@ class Prefetcher:
 
     def retarget(self, produce: Callable[[int, Any], Any], n_chunks: int,
                  *, make_staging: Optional[Callable[[], Any]] = None,
-                 start: int = 0):
+                 signature=None, start: int = 0):
         """Flush the pipeline and aim it at a NEW chunk source — the rung-
-        boundary protocol: when a halving boundary re-shard-pads the layout
-        and re-jits the chunk, in-flight slabs for the old segment are
-        dropped, staging is rebuilt if the shapes changed, and the producer
-        restarts against the next segment's ``produce``."""
+        boundary protocol: in-flight slabs for the old segment are always
+        dropped and the producer restarts against the next segment's
+        ``produce`` (chunk indices re-base on the new segment, so a stale
+        slab can never be served), but the STAGING buffers are reused when
+        ``signature`` (:func:`staging_signature` of the next segment's
+        buffers, buildable from shapes alone) matches the current one —
+        the constant-population refill keeps every slab shape identical
+        across the rung, so no host buffer is discarded or reallocated
+        there.  A shrinking rung changes the signature and takes the full
+        rebuild path as before; omitting ``signature`` while passing
+        ``make_staging`` also forces the rebuild (the conservative
+        pre-refill behaviour)."""
         self._halt()
         self._produce = produce
         self._n_chunks = int(n_chunks)
         if make_staging is not None:
             self._make_staging = make_staging
-            self._staging = [make_staging(), make_staging()]
+            if signature is None or signature != self._signature:
+                self._staging = [make_staging(), make_staging()]
+                self._signature = staging_signature(self._staging[0])
         self._next = int(start)
         self._start_thread(int(start))
 

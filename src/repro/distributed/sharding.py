@@ -198,3 +198,14 @@ def population_opt_shardings(layout, opt, mesh, dtype=None):
     abs_st = jax.eval_shape(opt.init,
                             abstract_params(layout, dtype or jnp.float32))
     return logical_to_sharding(layout.opt_specs(opt, dtype), mesh, abs_st)
+
+
+def population_state_shardings(layout, opt, mesh, dtype=None):
+    """``(params, opt_state)`` NamedSharding pair for one layout — the
+    rung-boundary bundle: every layout change (compact → re-pad, grow
+    splice, constant-size refill) device_puts or out_shardings BOTH trees
+    against the same mesh, so the driver fetches them together instead of
+    re-deriving each side separately (and possibly against different
+    meshes)."""
+    return (population_shardings(layout, mesh, dtype),
+            population_opt_shardings(layout, opt, mesh, dtype))

@@ -188,7 +188,8 @@ def run_population(arch, args):
     from repro.core import deep
     from repro.core.activations import PAPER_TEN
     from repro.core.lifecycle import (HalvingSchedule, compact,
-                                      compact_factored, survivors)
+                                      compact_factored, grow_params,
+                                      refill_params, refill_state, survivors)
     from repro.core.population import LayeredPopulation, Population
     from repro.core.selection import evaluate_population, leaderboard
     from repro.data import DeferredMetrics, Prefetcher, TabularTask
@@ -199,8 +200,24 @@ def run_population(arch, args):
                                             population_shardings)
     from repro.launch.mesh import make_host_mesh
     from repro.optim import adafactor, adamw, sgd
+    from repro.search import RefillController, SearchSpace
 
     schedule = HalvingSchedule.parse(args.halving) if args.halving else None
+
+    # ---- slot-refill search controller (DESIGN.md §13): prune-then-refill
+    # at every rung boundary.  "pbt" holds the population size constant
+    # (refills adopt their slot's architecture — the zero-re-jit path);
+    # "arch" resamples architectures from the space and grows the layout.
+    refill_mode = args.refill
+    space = SearchSpace.parse(args.search_space)
+    controller = None
+    if refill_mode != "off":
+        if schedule is None:
+            raise SystemExit("--refill needs --halving (rung boundaries "
+                             "are where slots free up)")
+        controller = RefillController(space, mode=refill_mode,
+                                      seed=args.seed,
+                                      exploit_frac=args.refill_exploit_frac)
 
     # ---- optimizer config (resolved before any state is materialised so
     # the resume path can validate it against the checkpoint's record)
@@ -246,6 +263,14 @@ def run_population(arch, args):
         # recipe beneath the restored moments, so the seed is part of the
         # optimizer config whenever a vector is in play
         opt_record["seed"] = int(args.seed)
+    if refill_mode != "off":
+        # a resumed refill run must re-plan future rungs identically (the
+        # controller rng folds the seed) and must not reinterpret grown
+        # recipe vectors under a different space or mode
+        opt_record["refill"] = refill_mode
+        opt_record["seed"] = int(args.seed)
+        if args.search_space:
+            opt_record["search_space"] = args.search_space
 
     if args.population_depths:
         widths = parse_depth_spec(args.population_depths)
@@ -297,29 +322,49 @@ def run_population(arch, args):
             member_ids = np.arange(n0)
 
         # ---- per-member hyperparameter vectors: each drawn ONCE over the
-        # run's ORIGINAL n0 members and indexed down by the survivor
+        # run's ORIGINAL n0 members — through the declarative search space
+        # (search/space.py; the default space reproduces the historical
+        # hardcoded ranges BIT-FOR-BIT) — and indexed down by the survivor
         # mapping (shard-pad fillers get the base value): a member keeps
         # its training recipe through every compaction and across resumes,
-        # identically to a single-device run
+        # identically to a single-device run.  With --refill the vectors
+        # are GROWABLE numpy arrays indexed by original id: every refilled
+        # member appends its (perturbed or freshly sampled) recipe at its
+        # fresh id, and the grown tails ride the checkpoint meta so a
+        # resume never redraws them.
         lr0 = mom0 = wd0 = None
         if args.per_member_lr:
-            lr0 = jnp.exp(jax.random.uniform(
-                jax.random.PRNGKey(args.seed + 1), (n0,),
-                minval=jnp.log(arch.lr * 0.3), maxval=jnp.log(arch.lr * 3.0)))
+            lr0 = np.asarray(space.init_lr(args.seed, n0, arch.lr))
             print(f"per-member learning rates in "
-                  f"[{arch.lr * 0.3:.4f}, {arch.lr * 3.0:.4f}]")
+                  f"[{arch.lr * space.lr_scale[0]:.4f}, "
+                  f"{arch.lr * space.lr_scale[1]:.4f}]")
         if args.per_member_momentum:
-            mom0 = jax.random.uniform(jax.random.PRNGKey(args.seed + 2),
-                                      (n0,), minval=0.5, maxval=0.99)
-            print("per-member momentum in [0.50, 0.99]")
+            mom0 = np.asarray(space.init_momentum(args.seed, n0))
+            print(f"per-member momentum in [{space.momentum_range[0]:.2f}, "
+                  f"{space.momentum_range[1]:.2f}]")
         if args.per_member_weight_decay:
-            wd0 = jnp.exp(jax.random.uniform(
-                jax.random.PRNGKey(args.seed + 3), (n0,),
-                minval=jnp.log(args.weight_decay * 0.3),
-                maxval=jnp.log(args.weight_decay * 3.0)))
+            wd0 = np.asarray(space.init_wd(args.seed, n0,
+                                           args.weight_decay))
             print(f"per-member weight decay in "
-                  f"[{args.weight_decay * 0.3:.5f}, "
-                  f"{args.weight_decay * 3.0:.5f}]")
+                  f"[{args.weight_decay * space.wd_scale[0]:.5f}, "
+                  f"{args.weight_decay * space.wd_scale[1]:.5f}]")
+
+        # ---- lineage: original id → (parent id, birth rung); ids issued
+        # from a monotone counter strictly above every id ever used, so a
+        # member born at rung r can never alias a pruned seed's id
+        next_id = int(n0)
+        lineage = {}
+        if resuming and refill_mode != "off":
+            life = meta.get("lifecycle") or {}
+            next_id = int(life.get("next_id", n0))
+            lineage = {int(k): (int(v[0]), int(v[1]))
+                       for k, v in (life.get("lineage") or {}).items()}
+            if lr0 is not None and "lr_vec" in life:
+                lr0 = np.asarray(life["lr_vec"], lr0.dtype)
+            if mom0 is not None and "mom_vec" in life:
+                mom0 = np.asarray(life["mom_vec"], mom0.dtype)
+            if wd0 is not None and "wd_vec" in life:
+                wd0 = np.asarray(life["wd_vec"], wd0.dtype)
 
         def member_vec(vec0, base, lp):
             v = jnp.asarray(vec0)[jnp.asarray(member_ids)]
@@ -329,11 +374,22 @@ def run_population(arch, args):
         def member_lr(lp):
             return arch.lr if lr0 is None else member_vec(lr0, arch.lr, lp)
 
+        # bumped on every build_opt call: part of the chunk-cache key, so a
+        # rebuilt optimizer (new baked momentum/decay trees) re-specializes
+        # the chunk while an UNCHANGED (lp, opt) pair is a guaranteed
+        # compile-cache hit — the constant-size refill's zero-re-jit path
+        opt_epoch = 0
+
         def build_opt(lp):
             """The segment's optimizer: per-member hyper vectors indexed
             down through the survivor mapping and expanded to scale trees
-            for THIS layout — rebuilt at every rung boundary, exactly like
-            the re-jitted chunk."""
+            for THIS layout — rebuilt at every rung boundary that changes
+            the layout or the baked recipe trees, exactly like the
+            re-jitted chunk.  NOT rebuilt by a constant-size lr-only
+            refill: lr is a runtime chunk argument, so mutating it needs
+            no new optimizer and no re-trace."""
+            nonlocal opt_epoch
+            opt_epoch += 1
             mom = (args.momentum if mom0 is None else
                    deep.member_lr_tree(lp, member_vec(mom0, args.momentum,
                                                       lp)))
@@ -416,8 +472,24 @@ def run_population(arch, args):
         xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
 
         def lifecycle_meta():
-            return {"rung": rung, "n_members0": int(n0),
-                    "member_ids": [int(i) for i in member_ids]}
+            m = {"rung": rung, "n_members0": int(n0),
+                 "member_ids": [int(i) for i in member_ids]}
+            if refill_mode != "off":
+                # refill state rides the lifecycle meta as extra keys (the
+                # reader's .get() ignores them on old checkpoints): the id
+                # counter, the lineage table, and the GROWN tails of the
+                # per-member recipe vectors — a resume must reuse them, a
+                # fresh draw would only cover the original n0
+                m["next_id"] = int(next_id)
+                m["lineage"] = {str(k): [int(p), int(b)]
+                                for k, (p, b) in sorted(lineage.items())}
+                if lr0 is not None:
+                    m["lr_vec"] = [float(v) for v in lr0]
+                if mom0 is not None:
+                    m["mom_vec"] = [float(v) for v in mom0]
+                if wd0 is not None:
+                    m["wd_vec"] = [float(v) for v in wd0]
+            return m
 
         train_meta = {"compute_dtype": args.compute_dtype,
                       "bd_impl": args.bd_impl, "act_impl": args.act_impl,
@@ -438,6 +510,12 @@ def run_population(arch, args):
         pipeline = args.pipeline == "on"
         pf = None          # ONE Prefetcher for the run, retargeted per rung
         pending = []       # the in-flight chunk's DeferredMetrics (≤ 1)
+        # chunk programs keyed (layout, optimizer epoch): a rung boundary
+        # that changes neither — the constant-size refill — reuses the
+        # SAME traced callable, so its jitted executable is a guaranteed
+        # compile-cache hit (zero re-jit; DESIGN.md §13).  Shrinking rungs
+        # change lp and build fresh entries, exactly the historical path.
+        chunk_cache = {}
 
         def train_segment(params, opt_state, lp, opt, seg_start, seg_end):
             """Global steps [seg_start, seg_end) under the CURRENT layout:
@@ -458,13 +536,18 @@ def run_population(arch, args):
             off`` (same chunk index → same slab; tests/test_pipeline.py)."""
             nonlocal pf
             lr = member_lr(lp)
-            chunk_fn = deep.make_population_train_step(
-                lp, optimizer=opt, grad_clip=grad_clip,
-                m3_impl=args.m3_impl, bd_impl=args.bd_impl,
-                act_impl=args.act_impl, scan_steps=scan,
-                donate_batch=pipeline,
-                compute_dtype=args.compute_dtype,
-                lr_schedule=lr_sched)
+            chunk_key = (lp, opt_epoch)
+            chunk_fn = chunk_cache.get(chunk_key)
+            if chunk_fn is None:
+                chunk_fn = chunk_cache[chunk_key] = \
+                    deep.make_population_train_step(
+                        lp, optimizer=opt, grad_clip=grad_clip,
+                        m3_impl=args.m3_impl, bd_impl=args.bd_impl,
+                        act_impl=args.act_impl, scan_steps=scan,
+                        donate_batch=pipeline,
+                        compute_dtype=args.compute_dtype,
+                        lr_schedule=lr_sched)
+                stats["chunk_builds"] = stats.get("chunk_builds", 0) + 1
             sh_x, sh_y = population_batch_shardings(mesh, args.batch)
             n_chunks = (seg_end - seg_start + scan - 1) // scan
 
@@ -501,9 +584,14 @@ def run_population(arch, args):
                                     depth=args.prefetch_depth)
                 else:
                     # rung-boundary flush: drop slabs staged for the OLD
-                    # segment, re-aim the producer at this one
+                    # segment, re-aim the producer at this one — the
+                    # signature lets retarget KEEP the staging buffers
+                    # when the slab shapes are unchanged (every
+                    # constant-population rung) instead of reallocating
+                    sig = (((scan,) + bx0.shape, np.dtype(bx0.dtype).str),
+                           ((scan,) + by0.shape, np.dtype(by0.dtype).str))
                     pf.retarget(build_slab, n_chunks,
-                                make_staging=make_staging)
+                                make_staging=make_staging, signature=sig)
             sync_staging = None if pipeline else make_staging()
 
             def resolve_metrics(pers, gnorms, g0, n, c):
@@ -676,38 +764,165 @@ def run_population(arch, args):
                 losses, _ = evaluate_population(params, lp, xte_j[:n_eval],
                                                 yte_j[:n_eval])
                 n_before = lp.num_real
-                keep = survivors(np.asarray(losses)[:n_before], keep_frac)
-                member_ids = member_ids[keep]
-                if opt_name == "adafactor":
-                    # factored second moments cannot ride the member-major
-                    # gather — carry momentum + count, re-init v_row/v_col
-                    lp_real, params_keep, fac_carry = compact_factored(
-                        lp, params, opt_state, keep)
-                    opt_keep = None
-                else:
-                    lp_real, params_keep, opt_keep = compact(lp, params,
-                                                             opt_state, keep)
+                rung_losses = np.asarray(losses)[:n_before]
+                keep = survivors(rung_losses, keep_frac)
                 rung = i + 1
-                lp = lp_real.shard_pad(pop_axis_size(mesh))
-                fill = jax.random.fold_in(jax.random.PRNGKey(args.seed),
-                                          1000 + rung)
-                params = jax.device_put(
-                    deep.pad_params(params_keep, lp_real, lp, fill),
-                    population_shardings(lp, mesh))
-                opt = build_opt(lp)
-                if opt_name == "adafactor":
-                    fresh = jax.jit(
-                        opt.init,
-                        out_shardings=population_opt_shardings(lp, opt, mesh))(
-                        params)
-                    opt_state = rewarm_adafactor_state(fresh, fac_carry,
-                                                       lp_real, lp, opt)
+                plan = None
+                if controller is not None:
+                    plan = controller.plan(
+                        lp, rung_losses, keep, member_ids, rung=rung,
+                        next_id=next_id, base_lr=arch.lr,
+                        lr=None if lr0 is None else lr0[member_ids],
+                        momentum=None if mom0 is None else mom0[member_ids],
+                        wd=None if wd0 is None else wd0[member_ids],
+                        base_momentum=args.momentum,
+                        base_wd=args.weight_decay)
+                    # refilled recipes append at their FRESH ids (plan
+                    # order == id order), never overwriting a pruned
+                    # member's entry — survivors' rows are untouched, so
+                    # the no-refill prefix of every vector stays bit-exact
+                    for f in plan.members:
+                        lineage[f.member_id] = (f.parent_id, f.birth_rung)
+                        if lr0 is not None:
+                            lr0 = np.append(lr0, np.asarray(f.lr,
+                                                            lr0.dtype))
+                        if mom0 is not None:
+                            mom0 = np.append(mom0, np.asarray(f.momentum,
+                                                              mom0.dtype))
+                        if wd0 is not None:
+                            wd0 = np.append(wd0, np.asarray(f.wd,
+                                                            wd0.dtype))
+                    next_id += len(plan.members)
+                    stats["refilled"] = (stats.get("refilled", 0)
+                                         + len(plan.members))
+                if refill_mode == "pbt":
+                    # ---- constant-size refill: population size is held
+                    # (prune k → refill k into the SAME slots), so the
+                    # post-rung layout is IDENTICAL — no compact, no
+                    # re-shard-pad, no device_put migration.  The boundary
+                    # is one jitted on-device gather/scatter (exploit
+                    # clones + fresh inits), a moment mask-zero, and a
+                    # recipe rewrite; lr is a runtime chunk argument, so
+                    # an lr-only mutation re-enters the SAME compiled
+                    # chunk (zero re-jit, asserted via the chunk cache).
+                    fresh = None
+                    fm = plan.fresh_members
+                    if fm:
+                        fresh_lp = LayeredPopulation(
+                            lp.in_features, lp.out_features,
+                            tuple(f.widths for f in fm),
+                            tuple(f.acts for f in fm), block=lp.block)
+                        fresh = deep.init_params(
+                            jax.random.fold_in(
+                                jax.random.PRNGKey(args.seed),
+                                5000 + rung), fresh_lp)
+                    params = refill_params(lp, params, plan.assignments,
+                                           fresh, gather="device")
+                    opt_state = refill_state(opt_state, lp, plan.slots)
+                    member_ids = member_ids.copy()
+                    for f in plan.members:
+                        member_ids[f.slot] = f.member_id
+                    if mom0 is not None or wd0 is not None:
+                        # baked momentum/decay trees changed → the chunk
+                        # re-specializes (the documented cost of mutating
+                        # trace-time recipe constants; lr-only runs skip
+                        # this entirely)
+                        opt = build_opt(lp)
+                    hit = (lp, opt_epoch) in chunk_cache
+                    n_ex = sum(1 for f in plan.members
+                               if f.origin == "exploit")
+                    print(f"rung {i} @ step {pos - 1}: pruned "
+                          f"{n_before - len(keep)}/{n_before}, refilled in "
+                          f"place ({n_ex} exploit, "
+                          f"{len(plan.members) - n_ex} fresh) -> layout "
+                          f"unchanged, chunk "
+                          + ("cache-hit (zero re-jit)" if hit
+                             else "rebuild"))
                 else:
-                    opt_state = jax.device_put(
-                        deep.pad_state(opt_keep, lp_real, lp),
-                        population_opt_shardings(lp, opt, mesh))
-                print(f"rung {i} @ step {pos - 1}: kept "
-                      f"{len(keep)}/{n_before} members -> {lp.describe()}")
+                    kept_ids = member_ids[keep]
+                    if opt_name == "adafactor":
+                        # factored second moments cannot ride the
+                        # member-major gather — carry momentum + count,
+                        # re-init v_row/v_col
+                        lp_real, params_keep, fac_carry = compact_factored(
+                            lp, params, opt_state, keep)
+                        opt_keep = None
+                    else:
+                        lp_real, params_keep, opt_keep = compact(
+                            lp, params, opt_state, keep)
+                    member_ids = kept_ids
+                    if refill_mode == "arch":
+                        # ---- grow-layout refill: freshly sampled
+                        # architectures splice into the compacted layout
+                        # (the inverse of compact — survivors bit-exact,
+                        # newborns fresh-init, zero moments), then the
+                        # grown layout re-pads and re-jits as any
+                        # shape-changing rung does.
+                        widths_new = tuple(f.widths for f in plan.members)
+                        acts_new = tuple(f.acts for f in plan.members)
+                        positions = lp_real.grow_positions(widths_new,
+                                                           acts_new)
+                        lp_grown = lp_real.grow(widths_new, acts_new,
+                                                positions)
+                        fresh_lp = lp_grown.subset(tuple(sorted(positions)))
+                        fresh = deep.init_params(
+                            jax.random.fold_in(
+                                jax.random.PRNGKey(args.seed),
+                                5000 + rung), fresh_lp)
+                        params_keep = grow_params(lp_real, lp_grown,
+                                                  params_keep, positions,
+                                                  fresh)
+                        if opt_keep is not None:
+                            opt_keep = deep.grow_state(opt_keep, lp_real,
+                                                       lp_grown, positions)
+                        elif fac_carry["m"] is not None:
+                            mdt = jax.tree.leaves(fac_carry["m"])[0].dtype
+                            zeros = jax.tree.map(
+                                lambda s: jnp.zeros(s.shape, mdt),
+                                deep.abstract_params(fresh_lp))
+                            fac_carry = {**fac_carry, "m": grow_params(
+                                lp_real, lp_grown, fac_carry["m"],
+                                positions, zeros)}
+                        new_ids = np.empty(lp_grown.num_real,
+                                           member_ids.dtype)
+                        pos_of = {p: j for j, p in enumerate(positions)}
+                        oi = 0
+                        for slot in range(lp_grown.num_real):
+                            if slot in pos_of:
+                                new_ids[slot] = \
+                                    plan.members[pos_of[slot]].member_id
+                            else:
+                                new_ids[slot] = member_ids[oi]
+                                oi += 1
+                        member_ids = new_ids
+                        lp_real = lp_grown
+                    lp = lp_real.shard_pad(pop_axis_size(mesh))
+                    fill = jax.random.fold_in(jax.random.PRNGKey(args.seed),
+                                              1000 + rung)
+                    params = jax.device_put(
+                        deep.pad_params(params_keep, lp_real, lp, fill),
+                        population_shardings(lp, mesh))
+                    opt = build_opt(lp)
+                    if opt_name == "adafactor":
+                        fresh = jax.jit(
+                            opt.init,
+                            out_shardings=population_opt_shardings(
+                                lp, opt, mesh))(params)
+                        opt_state = rewarm_adafactor_state(fresh, fac_carry,
+                                                           lp_real, lp, opt)
+                    else:
+                        opt_state = jax.device_put(
+                            deep.pad_state(opt_keep, lp_real, lp),
+                            population_opt_shardings(lp, opt, mesh))
+                    if refill_mode == "arch":
+                        print(f"rung {i} @ step {pos - 1}: kept "
+                              f"{len(keep)}/{n_before}, grew "
+                              f"{len(plan.members)} sampled archs -> "
+                              f"{lp.describe()}")
+                    else:
+                        print(f"rung {i} @ step {pos - 1}: kept "
+                              f"{len(keep)}/{n_before} members -> "
+                              f"{lp.describe()}")
                 if args.ckpt_every:
                     # force-save the COMPACTED state at the last COMPLETED step
                     # (pos-1 == the boundary step, except for catch-up prunes on
@@ -737,6 +952,13 @@ def run_population(arch, args):
             print(f"trained {pop_desc} MLPs × {steps_run} steps in "
                   f"{dt:.1f}s ({member_steps / max(dt, 1e-9):.0f} "
                   f"model-steps/s); loss {loss0:.4f} -> {loss:.4f}")
+            if refill_mode != "off":
+                # every id ever issued is a distinct model the search
+                # visited — the bench's models-explored-per-second metric
+                print(f"explored {next_id} models "
+                      f"({stats.get('refilled', 0)} refilled) in {dt:.1f}s "
+                      f"({next_id / max(dt, 1e-9):.2f} models/s); "
+                      f"{stats.get('chunk_builds', 0)} chunk builds")
             if args.ckpt_every:
                 # final checkpoint ONLY if the cadence didn't just write it
                 # (steps % ckpt_every == 0 used to save the last step twice)
@@ -755,10 +977,18 @@ def run_population(arch, args):
         losses, accs = evaluate_population(params, lp, xte_j, yte_j)
         print("leaderboard:")
         for row in leaderboard(lp, losses, accs, k=min(10, lp.num_real),
-                               member_ids=member_ids):
+                               member_ids=member_ids,
+                               lineage=lineage if refill_mode != "off"
+                               else None):
+            lin = ""
+            if "lineage" in row:
+                li = row["lineage"]
+                lin = (f"  born r{li['born_rung']}"
+                       + (f" of {li['parent']}" if li["parent"] >= 0
+                          else " fresh" if li["born_rung"] else " seed"))
             print(f"  #{row['rank']:2d} member {row['member']:4d} "
                   f"hidden={row['hidden']} {row['activation']:11s} "
-                  f"loss={row['loss']:.4f} acc={row['acc']:.3f}")
+                  f"loss={row['loss']:.4f} acc={row['acc']:.3f}{lin}")
         return params, lp
 
 
@@ -895,6 +1125,32 @@ def main(argv=None):
                          "member-major); momentum and the step count carry "
                          "over, and the second moment re-warms in "
                          "~1/(1-b2) steps (~100 at the default b2=0.99)")
+    ap.add_argument("--refill", default="off",
+                    choices=["off", "pbt", "arch"],
+                    help="slot-refill search at --halving rung boundaries "
+                         "(DESIGN.md §13): after pruning, refill the freed "
+                         "slots instead of shrinking.  'pbt' holds the "
+                         "population size constant — exploit/explore clones "
+                         "of same-arch survivors with perturbed recipes "
+                         "(fresh init when no arch matches); the layout "
+                         "never changes, so the rung boundary is one "
+                         "on-device gather/scatter with ZERO re-jit.  "
+                         "'arch' samples fresh architectures from "
+                         "--search-space and GROWS the layout (inverse of "
+                         "compaction).  'off' (default) is the historical "
+                         "halving driver, bit-identical")
+    ap.add_argument("--search-space", default=None,
+                    help="declarative search-space spec for --refill, "
+                         "';'-separated, e.g. \"widths=64,32|16,8;"
+                         "acts=relu,tanh;lr=0.3..3;momentum=0.5..0.99;"
+                         "wd=0.3..3;lr_perturb=0.8,1.25;"
+                         "momentum_jitter=0.05\".  Unset keys keep the "
+                         "defaults, which reproduce the historical "
+                         "hardcoded per-member ranges bit-for-bit")
+    ap.add_argument("--refill-exploit-frac", type=float, default=0.5,
+                    help="--refill pbt: truncation-selection fraction — "
+                         "exploit clones draw uniformly from the best "
+                         "FRAC of the slot-arch-matching survivors")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, reduced=args.reduced)

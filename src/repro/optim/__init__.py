@@ -5,13 +5,13 @@ from repro.optim.optimizers import (OPTIMIZERS, SCHEDULES, Optimizer,
                                     broadcast_lr, broadcast_scale,
                                     clip_by_global_norm, constant_lr,
                                     global_norm, hyper_on, make_optimizer,
-                                    sgd, tree_cast, tree_zeros_like,
-                                    warmup_cosine)
+                                    scale_member_moments, sgd, tree_cast,
+                                    tree_zeros_like, warmup_cosine)
 
 __all__ = [
     "OPTIMIZERS", "SCHEDULES", "Optimizer", "adafactor", "adamw",
     "apply_updates", "broadcast_lr", "broadcast_scale",
     "clip_by_global_norm", "constant_lr", "global_norm", "hyper_on",
-    "make_optimizer", "sgd", "tree_cast", "tree_zeros_like",
-    "warmup_cosine",
+    "make_optimizer", "scale_member_moments", "sgd", "tree_cast",
+    "tree_zeros_like", "warmup_cosine",
 ]

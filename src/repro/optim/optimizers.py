@@ -314,6 +314,50 @@ def apply_updates(params, updates):
         params, updates)
 
 
+def scale_member_moments(state, ref, scale_tree):
+    """Multiply every params-shaped moment in an optimizer state by a
+    params-STRUCTURED tree of broadcastable masks/scales (each mask leaf
+    broadcasts against its param leaf along the member-major axes) —
+    the in-place twin of re-initialising a member's moments, used by the
+    constant-size slot refill (``lifecycle.refill_state``) to zero the
+    refilled slots without touching survivors' bytes or the layout.
+
+    Schema-aware across all four optimizers: scalar leaves (step counts)
+    pass through; sgd ``mu`` / adamw ``m``+``v`` are scaled per subtree
+    with moment dtype preserved; adafactor's ``leaves`` tree is walked
+    per-param — ``m`` and unfactored ``v`` are scaled, while the factored
+    ``v_row``/``v_col`` statistics mix members along the reduced axis and
+    pass through untouched (stale; they re-warm in ~1/(1−b2) steps).
+    ``ref`` is the live/abstract params tree for the CURRENT layout."""
+    def scale_leaf(mom, mk):
+        return mom * jnp.asarray(mk, mom.dtype)
+
+    if isinstance(state, dict) and "leaves" in state:       # adafactor
+        is_state_leaf = lambda x: isinstance(x, dict) and (
+            "v" in x or "v_row" in x)
+        flat_st, tdef = jax.tree.flatten(state["leaves"],
+                                         is_leaf=is_state_leaf)
+        flat_mk = jax.tree.leaves(scale_tree)
+        if len(flat_mk) != len(flat_st):
+            raise ValueError("scale_member_moments: scale tree does not "
+                             "match the adafactor state's param structure")
+        out = []
+        for st, mk in zip(flat_st, flat_mk):
+            new = dict(st)
+            if "v" in st:
+                new["v"] = scale_leaf(st["v"], mk)
+            if "m" in st:
+                new["m"] = scale_leaf(st["m"], mk)
+            out.append(new)
+        return {**state, "leaves": tdef.unflatten(out)}
+
+    from repro.core.deep import map_params_subtrees
+    return map_params_subtrees(
+        state, ref,
+        lambda node: jax.tree.map(scale_leaf, node, scale_tree),
+        op="scale_member_moments")
+
+
 # --------------------------------------------------------------------- #
 # LR schedules                                                          #
 # --------------------------------------------------------------------- #

@@ -1,0 +1,9 @@
+"""Search layer on top of the halving lifecycle (DESIGN.md §13): a
+declarative hyperparameter/architecture space (``space.SearchSpace``) and
+the slot-refill controller (``controller.RefillController``) that turns
+successive halving into a constant-FLOP PBT-style search."""
+from repro.search.controller import RefillController, RefillMember, RefillPlan
+from repro.search.space import DEFAULT_SPACE, SearchSpace
+
+__all__ = ["DEFAULT_SPACE", "RefillController", "RefillMember",
+           "RefillPlan", "SearchSpace"]

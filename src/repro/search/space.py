@@ -1,0 +1,164 @@
+"""Declarative search-space spec (DESIGN.md §13).
+
+One frozen dataclass owns every range the population search draws from —
+the per-member recipe ranges that used to be hardcoded in the driver
+(``launch/train.py``'s lr/momentum/weight-decay vectors) plus an optional
+architecture menu for refill sampling.  The driver and the refill
+controller both read THIS object, so the seed recipes and every later
+explore/sample step come from one declaration.
+
+Spec grammar (``--search-space``), ';'-separated ``key=value`` fields, any
+subset (unlisted keys keep the defaults below, which reproduce the
+driver's historical ranges bit-for-bit)::
+
+    widths=64,32|16,8|24   # arch menu: options by '|', layer widths by ','
+    acts=relu,tanh         # activation menu (per member, cycled at init)
+    lr=0.3..3              # log-uniform MULTIPLIER range around the base lr
+    momentum=0.5..0.99     # uniform absolute range
+    wd=0.3..3              # log-uniform multiplier range around base decay
+    lr_perturb=0.8,1.25    # PBT explore: multiply by one of these
+    momentum_jitter=0.05   # PBT explore: additive uniform jitter half-width
+
+The ``init_*`` methods reproduce the driver's exact jax.random draws —
+same key derivation (``PRNGKey(seed+1..3)``), same transform order — so a
+run configured through the default space is BIT-IDENTICAL to the pre-space
+driver (the PR-8/9 trajectory invariant).  The ``sample_*``/``perturb_*``
+methods are the controller's numpy-side draws for refilled members.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _parse_range(text: str, what: str) -> tuple:
+    lo, sep, hi = text.partition("..")
+    if not sep:
+        raise ValueError(f"search space: {what} wants 'LO..HI', got {text!r}")
+    lo, hi = float(lo), float(hi)
+    if not lo < hi:
+        raise ValueError(f"search space: {what} range {lo}..{hi} is empty")
+    return (lo, hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    widths: tuple = ()                    # arch menu; () = refill keeps slot archs
+    acts: tuple = ("relu",)
+    lr_scale: tuple = (0.3, 3.0)          # log-uniform, × base lr
+    momentum_range: tuple = (0.5, 0.99)   # uniform, absolute
+    wd_scale: tuple = (0.3, 3.0)          # log-uniform, × base decay
+    lr_perturb: tuple = (0.8, 1.25)       # explore multipliers
+    momentum_jitter: float = 0.05         # explore additive half-width
+
+    @classmethod
+    def parse(cls, spec: str | None) -> "SearchSpace":
+        """``"widths=8,4|6;acts=relu,tanh;lr=0.3..3"`` → SearchSpace.
+        ``None``/empty → the default space (the driver's historical
+        ranges)."""
+        kw = {}
+        for field in (spec or "").split(";"):
+            field = field.strip()
+            if not field:
+                continue
+            key, sep, val = field.partition("=")
+            key, val = key.strip(), val.strip()
+            if not sep or not val:
+                raise ValueError(f"search space: field {field!r} wants "
+                                 "'key=value'")
+            if key == "widths":
+                kw["widths"] = tuple(
+                    tuple(int(w) for w in opt.split(","))
+                    for opt in val.split("|"))
+            elif key == "acts":
+                kw["acts"] = tuple(a.strip() for a in val.split(","))
+            elif key == "lr":
+                kw["lr_scale"] = _parse_range(val, "lr")
+            elif key == "momentum":
+                kw["momentum_range"] = _parse_range(val, "momentum")
+            elif key == "wd":
+                kw["wd_scale"] = _parse_range(val, "wd")
+            elif key == "lr_perturb":
+                kw["lr_perturb"] = tuple(float(f) for f in val.split(","))
+            elif key == "momentum_jitter":
+                kw["momentum_jitter"] = float(val)
+            else:
+                raise ValueError(f"search space: unknown key {key!r} "
+                                 "(widths, acts, lr, momentum, wd, "
+                                 "lr_perturb, momentum_jitter)")
+        return cls(**kw)
+
+    # ---- seed recipe vectors: the driver's exact historical draws ---- #
+
+    def init_lr(self, seed: int, n0: int, base_lr: float):
+        """Per-member lr vector over the ORIGINAL population — the exact
+        draw ``--per-member-lr`` has always made (PRNGKey(seed+1),
+        exp∘uniform in log space), parameterised by this space's range."""
+        import jax
+        import jax.numpy as jnp
+        lo, hi = self.lr_scale
+        return jnp.exp(jax.random.uniform(
+            jax.random.PRNGKey(seed + 1), (n0,),
+            minval=jnp.log(base_lr * lo), maxval=jnp.log(base_lr * hi)))
+
+    def init_momentum(self, seed: int, n0: int):
+        import jax
+        lo, hi = self.momentum_range
+        return jax.random.uniform(jax.random.PRNGKey(seed + 2), (n0,),
+                                  minval=lo, maxval=hi)
+
+    def init_wd(self, seed: int, n0: int, base_wd: float):
+        import jax
+        import jax.numpy as jnp
+        lo, hi = self.wd_scale
+        return jnp.exp(jax.random.uniform(
+            jax.random.PRNGKey(seed + 3), (n0,),
+            minval=jnp.log(base_wd * lo), maxval=jnp.log(base_wd * hi)))
+
+    # ---- controller-side draws (numpy rng, deterministic per rung) --- #
+
+    def sample_arch(self, rng: np.random.Generator) -> tuple:
+        """One (widths, act) draw from the menu; needs a non-empty
+        ``widths`` menu (PBT-mode refill never calls this — it keeps the
+        slot's architecture)."""
+        if not self.widths:
+            raise ValueError("search space: no 'widths' menu to sample "
+                             "architectures from")
+        w = self.widths[int(rng.integers(len(self.widths)))]
+        return w, self.acts[int(rng.integers(len(self.acts)))]
+
+    def sample_lr(self, rng: np.random.Generator, base_lr: float) -> float:
+        lo, hi = self.lr_scale
+        return float(base_lr * np.exp(rng.uniform(np.log(lo), np.log(hi))))
+
+    def sample_momentum(self, rng: np.random.Generator) -> float:
+        lo, hi = self.momentum_range
+        return float(rng.uniform(lo, hi))
+
+    def sample_wd(self, rng: np.random.Generator, base_wd: float) -> float:
+        lo, hi = self.wd_scale
+        return float(base_wd * np.exp(rng.uniform(np.log(lo), np.log(hi))))
+
+    def perturb_lr(self, rng: np.random.Generator, lr: float,
+                   base_lr: float) -> float:
+        """PBT explore: multiply by one of ``lr_perturb``, clipped back
+        into the space's absolute range so a long exploit chain cannot
+        walk out of the declared search space."""
+        lo, hi = self.lr_scale
+        out = lr * float(rng.choice(self.lr_perturb))
+        return float(np.clip(out, base_lr * lo, base_lr * hi))
+
+    def perturb_momentum(self, rng: np.random.Generator, m: float) -> float:
+        lo, hi = self.momentum_range
+        j = self.momentum_jitter
+        return float(np.clip(m + rng.uniform(-j, j), lo, hi))
+
+    def perturb_wd(self, rng: np.random.Generator, wd: float,
+                   base_wd: float) -> float:
+        lo, hi = self.wd_scale
+        out = wd * float(rng.choice(self.lr_perturb))
+        return float(np.clip(out, base_wd * lo, base_wd * hi))
+
+
+DEFAULT_SPACE = SearchSpace()
